@@ -1,0 +1,122 @@
+"""Shared benchmark infrastructure: world building, CACHE evaluation sweeps,
+significance testing (Welch t-test with normal-approx p; scipy unavailable)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.conversation import ConversationalSearcher
+from repro.core.metric_index import MetricIndex
+from repro.data.conversations import TopicWorld, WorldConfig, make_world
+from repro.metrics import ir
+
+# Synthetic CAsT-like scale: the paper's k_c/corpus ratio (1K-10K of 38.6M)
+# does not transfer to a 60K corpus, so k_c is swept over the same *relative*
+# effect range (the cache holds one-to-several topical clusters).
+DEFAULT_WORLD = WorldConfig(n_topics=16, docs_per_topic=2500,
+                            n_background=12000, dim=768, turns=10,
+                            n_conversations=12, doc_sigma=0.6,
+                            query_sigma=0.12, drift_sigma=0.16,
+                            subtopic_prob=0.35, subtopic_sigma=0.75, seed=7)
+KC_SWEEP = (125, 250, 500, 1000)
+K_EVAL = 200
+
+
+def build_index(world: TopicWorld, use_kernel: bool = False) -> MetricIndex:
+    return MetricIndex(jnp.asarray(world.doc_emb, jnp.float32),
+                       use_kernel=use_kernel)
+
+
+@dataclasses.dataclass
+class SweepRow:
+    policy: str
+    k_c: int
+    epsilon: float
+    map200: float
+    mrr200: float
+    ndcg3: float
+    p1: float
+    p3: float
+    cov10: float
+    hit_rate: float
+    p_map: float       # Welch p-value vs no-caching per-query MAP
+    p_ndcg: float
+    max_cache_docs: int
+    per_query: dict
+
+
+def welch_p(a: np.ndarray, b: np.ndarray) -> float:
+    """Two-sample Welch t-test, normal-approx p (n ~ hundreds)."""
+    a, b = np.asarray(a, float), np.asarray(b, float)
+    va, vb = a.var(ddof=1) / len(a), b.var(ddof=1) / len(b)
+    denom = math.sqrt(max(va + vb, 1e-30))
+    t = (a.mean() - b.mean()) / denom
+    return 2.0 * (1.0 - 0.5 * (1.0 + math.erf(abs(t) / math.sqrt(2.0))))
+
+
+def evaluate_policy(world: TopicWorld, index: MetricIndex, policy: str,
+                    k_c: int, epsilon: float = 0.04,
+                    conversations=None) -> SweepRow:
+    convs = conversations if conversations is not None else world.conversations
+    per_q = {"map": [], "mrr": [], "ndcg": [], "p1": [], "p3": [],
+             "cov10": [], "hit": [], "r_hat": []}
+    max_docs = 0
+    searcher = ConversationalSearcher(
+        index=index, k=K_EVAL, k_c=k_c, epsilon=epsilon, policy=policy,
+        cache_capacity=(len(convs[0].qrels) + 2) * k_c)
+    for conv in convs:
+        searcher.start_conversation()
+        queries_t = index.transform_queries(
+            jnp.asarray(conv.queries, jnp.float32))
+        for t in range(conv.queries.shape[0]):
+            rec = searcher.answer(queries_t[t])
+            ranked = rec.ids.tolist()
+            qr = conv.qrels[t]
+            per_q["map"].append(ir.average_precision(ranked, qr, 200))
+            per_q["mrr"].append(ir.mrr(ranked, qr, 200))
+            per_q["ndcg"].append(ir.ndcg_at_k(ranked, qr, 3))
+            per_q["p1"].append(ir.precision_at_k(ranked, qr, 1))
+            per_q["p3"].append(ir.precision_at_k(ranked, qr, 3))
+            if policy != "none":
+                exact = index.search(queries_t[t][None], 10)
+                per_q["cov10"].append(
+                    ir.coverage(ranked, np.asarray(exact.ids[0]).tolist(), 10))
+                if t > 0:
+                    per_q["hit"].append(1.0 if rec.hit else 0.0)
+                per_q["r_hat"].append(rec.r_hat)
+        max_docs = max(max_docs, searcher.cache.n_docs)
+    return SweepRow(
+        policy=policy, k_c=k_c, epsilon=epsilon,
+        map200=float(np.mean(per_q["map"])),
+        mrr200=float(np.mean(per_q["mrr"])),
+        ndcg3=float(np.mean(per_q["ndcg"])),
+        p1=float(np.mean(per_q["p1"])),
+        p3=float(np.mean(per_q["p3"])),
+        cov10=float(np.mean(per_q["cov10"])) if per_q["cov10"] else float("nan"),
+        hit_rate=float(np.mean(per_q["hit"])) if per_q["hit"] else float("nan"),
+        p_map=float("nan"), p_ndcg=float("nan"),
+        max_cache_docs=max_docs, per_query=per_q)
+
+
+def attach_significance(row: SweepRow, base: SweepRow) -> SweepRow:
+    row.p_map = welch_p(row.per_query["map"], base.per_query["map"])
+    row.p_ndcg = welch_p(row.per_query["ndcg"], base.per_query["ndcg"])
+    return row
+
+
+def timed(fn, *args, n: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n, out

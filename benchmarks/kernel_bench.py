@@ -1,0 +1,56 @@
+"""Kernel-path benchmarks: fused kNN (vs chunked jnp) and embedding bag.
+
+On this CPU container the Pallas kernels run in interpret mode (orders of
+magnitude slower — functional timing only); the jnp paths are the CPU
+production paths. TPU projections come from the roofline (corpus stream
+bytes / HBM bandwidth) since the scan is bandwidth-bound.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.knn.ops import knn_search
+from repro.launch.roofline import HW
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = {}
+    docs = rng.standard_normal((65536, 768)).astype(np.float32)
+    docs /= np.linalg.norm(docs, axis=1, keepdims=True)
+    q = rng.standard_normal((16, 768)).astype(np.float32)
+    ids = jnp.arange(docs.shape[0], dtype=jnp.int32)
+    docs_j, q_j = jnp.asarray(docs), jnp.asarray(q)
+
+    from repro.core.metric_index import MetricIndex
+    idx = MetricIndex(docs_j, chunk=8192)
+    qt = idx.transform_queries(q_j)
+    t, _ = C.timed(lambda: idx.search(qt, 100))
+    rows["knn_jnp_chunked_64k"] = t
+    t, _ = C.timed(lambda: knn_search(docs_j, ids, q_j, 100, interpret=True),
+                   n=1, warmup=1)
+    rows["knn_pallas_interpret_64k"] = t
+    rows["knn_tpu_roofline_64k"] = docs.nbytes / HW["hbm_bw"]
+
+    table = jnp.asarray(rng.standard_normal((100000, 64)).astype(np.float32))
+    bag_idx = jnp.asarray(rng.integers(0, 100000, (4096, 26)).astype(np.int32))
+    t, _ = C.timed(lambda: embedding_bag(table, bag_idx, mode="sum"))
+    rows["embedding_bag_jnp_4096x26"] = t
+    rows["embedding_bag_tpu_roofline"] = (4096 * 26 * 64 * 4) / HW["hbm_bw"]
+    return rows
+
+
+def main():
+    rows = run()
+    for k, v in rows.items():
+        print(f"{k:>32} {1e3 * v:10.3f} ms")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

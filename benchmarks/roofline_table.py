@@ -1,0 +1,52 @@
+"""Aggregate dry-run artifacts into the EXPERIMENTS.md roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+OUT_DIR = "artifacts/dryrun"
+
+
+def load(mesh: str = "16x16"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(OUT_DIR, f"*@{mesh}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_table(rows, markdown: bool = False):
+    lines = []
+    sep = " | " if markdown else "  "
+    hdr = sep.join([f"{'arch':<22}", f"{'shape':<14}", f"{'t_comp(s)':>10}",
+                    f"{'t_mem(s)':>10}", f"{'t_coll(s)':>10}", f"{'dom':>5}",
+                    f"{'useful':>7}", f"{'roofline%':>9}", f"{'HBM(GiB)':>9}"])
+    lines.append(("| " + hdr + " |") if markdown else hdr)
+    if markdown:
+        lines.append("|" + "|".join(["---"] * 9) + "|")
+    for r in rows:
+        rl = r["roofline"]
+        mem = r.get("memory", {}).get("total_hbm_bytes", 0) / 2 ** 30
+        row = sep.join([
+            f"{r['arch']:<22}", f"{r['shape']:<14}",
+            f"{rl['t_compute_s']:>10.3e}", f"{rl['t_memory_s']:>10.3e}",
+            f"{rl['t_collective_s']:>10.3e}", f"{rl['dominant'][:5]:>5}",
+            f"{rl['useful_flops_ratio']:>7.3f}",
+            f"{100 * rl['roofline_fraction']:>9.2f}", f"{mem:>9.2f}"])
+        lines.append(("| " + row + " |") if markdown else row)
+    return "\n".join(lines)
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("no dry-run artifacts found — run repro.launch.dryrun first")
+        return []
+    print(fmt_table(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

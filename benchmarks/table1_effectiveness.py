@@ -1,0 +1,42 @@
+"""Paper Table 1: retrieval effectiveness + cov_10 + hit rate for
+no-caching / static-CACHE / dynamic-CACHE over the k_c sweep.
+
+Validation targets from the paper (qualitative, synthetic workload):
+  * static-CACHE degrades every metric, improving with k_c; cov10 low.
+  * dynamic-CACHE is statistically indistinguishable from no-caching
+    (p >= 0.01) on nDCG@3/P@k with cov10 >= ~0.9 and hit rate 55-75%.
+"""
+
+from __future__ import annotations
+
+from benchmarks import common as C
+
+
+def run(world=None, index=None):
+    world = world or C.make_world(C.DEFAULT_WORLD)
+    index = index or C.build_index(world)
+    base = C.evaluate_policy(world, index, "none", k_c=C.KC_SWEEP[0])
+    rows = [base]
+    for policy in ("static", "dynamic"):
+        for k_c in C.KC_SWEEP:
+            row = C.evaluate_policy(world, index, policy, k_c=k_c)
+            rows.append(C.attach_significance(row, base))
+    return rows
+
+
+def main():
+    rows = run()
+    hdr = (f"{'policy':>10} {'k_c':>5} {'MAP@200':>8} {'MRR@200':>8} "
+           f"{'nDCG@3':>7} {'P@1':>6} {'P@3':>6} {'cov10':>6} {'hit%':>7} "
+           f"{'p(MAP)':>7} {'p(nDCG)':>8} {'maxdocs':>8}")
+    print(hdr)
+    for r in rows:
+        print(f"{r.policy:>10} {r.k_c:>5} {r.map200:8.3f} {r.mrr200:8.3f} "
+              f"{r.ndcg3:7.3f} {r.p1:6.3f} {r.p3:6.3f} {r.cov10:6.2f} "
+              f"{100 * r.hit_rate:7.2f} {r.p_map:7.3f} {r.p_ndcg:8.3f} "
+              f"{r.max_cache_docs:>8}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

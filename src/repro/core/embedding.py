@@ -1,0 +1,69 @@
+"""MIPS -> Euclidean-NN embedding transform (paper Eq. 1).
+
+STAR-style encoders are fine-tuned for maximum-inner-product search.  To use
+metric-space machinery (hyperball containment, the LowQuality test) the paper
+maps R^l embeddings onto the unit sphere in R^{l+1} via the asymmetric
+Neyshabur-Srebro / Bachrach transform:
+
+    psi_bar = [ psi / ||psi||          , 0 ]                  (queries)
+    phi_bar = [ phi / M , sqrt(1 - ||phi||^2 / M^2) ]         (documents)
+
+with M = max_i ||phi_i||.  Then  argmax <psi, phi>  ==  argmin ||psi_bar - phi_bar||.
+
+All downstream code operates on *transformed* embeddings: unit-norm vectors in
+R^{l+1}, where squared Euclidean distance is 2 - 2<a, b>.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "transform_documents",
+    "transform_queries",
+    "distance_from_scores",
+    "pairwise_scores",
+    "pairwise_distances",
+]
+
+
+def transform_documents(phi: jax.Array, max_norm: float | jax.Array | None = None):
+    """Apply the document side of Eq. 1; returns (phi_bar, M).
+
+    phi: (n, l) raw document embeddings.
+    max_norm: M. If None, computed from this batch (the whole collection must
+      share a single M — compute it once over the corpus and pass it in when
+      transforming incremental batches).
+    """
+    norms = jnp.linalg.norm(phi, axis=-1)
+    m = jnp.max(norms) if max_norm is None else jnp.asarray(max_norm, phi.dtype)
+    scaled = phi / m
+    # Guard tiny negative values from rounding before sqrt.
+    extra = jnp.sqrt(jnp.clip(1.0 - jnp.sum(scaled * scaled, axis=-1), 0.0, None))
+    return jnp.concatenate([scaled, extra[..., None]], axis=-1), m
+
+
+def transform_queries(psi: jax.Array) -> jax.Array:
+    """Apply the query side of Eq. 1: L2-normalize and append a zero."""
+    normed = psi / jnp.linalg.norm(psi, axis=-1, keepdims=True)
+    zero = jnp.zeros(normed.shape[:-1] + (1,), normed.dtype)
+    return jnp.concatenate([normed, zero], axis=-1)
+
+
+def distance_from_scores(scores: jax.Array) -> jax.Array:
+    """Euclidean distance between unit vectors from their inner product.
+
+    ||a - b||^2 = 2 - 2<a,b>  for  ||a|| = ||b|| = 1.
+    """
+    return jnp.sqrt(jnp.clip(2.0 - 2.0 * scores, 0.0, None))
+
+
+def pairwise_scores(queries: jax.Array, docs: jax.Array) -> jax.Array:
+    """(q, l+1) x (n, l+1) -> (q, n) inner-product scores."""
+    return queries @ docs.T
+
+
+def pairwise_distances(queries: jax.Array, docs: jax.Array) -> jax.Array:
+    """(q, l+1) x (n, l+1) -> (q, n) Euclidean distances (unit-norm inputs)."""
+    return distance_from_scores(pairwise_scores(queries, docs))

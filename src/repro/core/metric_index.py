@@ -1,0 +1,161 @@
+"""Exact nearest-neighbor metric index — the FAISS ``IndexFlat`` analogue.
+
+The back-end of the paper's architecture (Fig. 2): the whole collection's
+transformed embeddings, answering ``NN(M, psi, k)`` queries exactly.
+
+Three execution paths, all bit-compatible in ranking:
+  * ``exact_nn``           — one-shot jnp reference (small corpora / oracle).
+  * ``chunked_nn``         — ``lax.scan`` over corpus chunks with a running
+                             top-k carry; bounds peak memory to O(B*chunk) and
+                             mirrors the Pallas kernel's streaming structure.
+  * ``kernels.knn``        — fused Pallas scan+top-k (imported lazily; used
+                             when ``use_kernel=True``).
+
+The distributed (sharded corpus) search lives in ``repro.dist.retrieval`` and
+reuses ``chunked_nn`` per shard.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding as emb
+
+__all__ = ["SearchResult", "exact_nn", "chunked_nn", "MetricIndex"]
+
+
+class SearchResult(NamedTuple):
+    scores: jax.Array     # (q, k) inner products, descending
+    distances: jax.Array  # (q, k) Euclidean distances, ascending
+    ids: jax.Array        # (q, k) int32 document ids
+
+
+def _as_result(scores: jax.Array, ids: jax.Array) -> SearchResult:
+    return SearchResult(scores, emb.distance_from_scores(scores), ids)
+
+
+def exact_nn(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int) -> SearchResult:
+    """Reference exact k-NN: materializes the full (q, n) score matrix."""
+    scores = emb.pairwise_scores(queries, docs)
+    top_scores, top_idx = jax.lax.top_k(scores, k)
+    return _as_result(top_scores, doc_ids[top_idx])
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk"))
+def chunked_nn(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
+               chunk: int = 4096) -> SearchResult:
+    """Streaming exact k-NN: scan corpus chunks, keep a running top-k.
+
+    Peak live memory is O(q*chunk + q*k) instead of O(q*n). ``n`` must be a
+    multiple of ``chunk`` (pad the corpus with -inf-scoring sentinels if not;
+    ``MetricIndex`` does this automatically).
+    """
+    n = docs.shape[0]
+    assert n % chunk == 0, f"corpus size {n} not divisible by chunk {chunk}"
+    docs_c = docs.reshape(n // chunk, chunk, docs.shape[1])
+    ids_c = doc_ids.reshape(n // chunk, chunk)
+    q = queries.shape[0]
+
+    init = (jnp.full((q, k), -jnp.inf, queries.dtype),
+            jnp.full((q, k), -1, jnp.int32))
+
+    def step(carry, chunk_data):
+        best_s, best_i = carry
+        cd, ci = chunk_data
+        scores = queries @ cd.T                                  # (q, chunk)
+        cand_s = jnp.concatenate([best_s, scores], axis=1)
+        cand_i = jnp.concatenate([best_i, jnp.broadcast_to(ci, (q, chunk))], axis=1)
+        top_s, top_pos = jax.lax.top_k(cand_s, k)
+        top_i = jnp.take_along_axis(cand_i, top_pos, axis=1)
+        return (top_s, top_i), None
+
+    (best_s, best_i), _ = jax.lax.scan(step, init, (docs_c, ids_c))
+    return _as_result(best_s, best_i)
+
+
+class MetricIndex:
+    """Host-side handle over a (possibly padded) corpus of transformed embeddings.
+
+    Accepts *raw* (l-dim) or *transformed* (l+1-dim, unit norm) embeddings.
+    Raw input is transformed with Eq. 1 and the corpus max-norm M is kept so
+    queries/documents added later share the same geometry.
+    """
+
+    def __init__(self, doc_emb, doc_ids=None, *, transformed: bool = False,
+                 chunk: int = 4096, use_kernel: bool = False):
+        doc_emb = jnp.asarray(doc_emb)
+        if doc_ids is None:
+            doc_ids = jnp.arange(doc_emb.shape[0], dtype=jnp.int32)
+        doc_ids = jnp.asarray(doc_ids, jnp.int32)
+        if transformed:
+            self.max_norm = jnp.asarray(1.0, doc_emb.dtype)
+            emb_t = doc_emb
+        else:
+            emb_t, self.max_norm = emb.transform_documents(doc_emb)
+        self.dim = emb_t.shape[1]
+        self.n_docs = int(emb_t.shape[0])
+        self.chunk = int(min(chunk, max(8, self.n_docs)))
+        # Pad to a chunk multiple with sentinels that can never win top-k:
+        # zero vectors (score 0 with any query is beaten by any real doc on the
+        # unit sphere only if scores > 0; use id -1 + -inf masking instead).
+        pad = (-self.n_docs) % self.chunk
+        if pad:
+            emb_t = jnp.concatenate([emb_t, jnp.zeros((pad, self.dim), emb_t.dtype)])
+            doc_ids = jnp.concatenate([doc_ids, jnp.full((pad,), -1, jnp.int32)])
+        self._pad = pad
+        self.doc_emb = emb_t
+        self.doc_ids = doc_ids
+        self.use_kernel = use_kernel
+
+    def transform_queries(self, psi: jax.Array) -> jax.Array:
+        return emb.transform_queries(psi)
+
+    def search(self, queries: jax.Array, k: int) -> SearchResult:
+        """queries: (q, l+1) transformed embeddings."""
+        if queries.ndim == 1:
+            queries = queries[None]
+        k = min(k, self.n_docs)
+        if self.use_kernel:
+            from repro.kernels.knn import ops as knn_ops
+            scores, ids = knn_ops.knn_search(self.doc_emb[:self.n_docs],
+                                             self.doc_ids[:self.n_docs], queries, k)
+            res = _as_result(scores, ids)
+        elif self._pad:
+            # Masked search: padded sentinel rows carry id -1; over-fetch and
+            # drop is wasteful, instead mask via score -inf on sentinel ids.
+            res = self._masked_chunked(queries, k)
+        else:
+            res = chunked_nn(self.doc_emb, self.doc_ids, queries, k, chunk=self.chunk)
+        return res
+
+    @functools.partial(jax.jit, static_argnames=("self", "k"))
+    def _masked_chunked(self, queries: jax.Array, k: int) -> SearchResult:
+        n = self.doc_emb.shape[0]
+        docs_c = self.doc_emb.reshape(n // self.chunk, self.chunk, self.dim)
+        ids_c = self.doc_ids.reshape(n // self.chunk, self.chunk)
+        q = queries.shape[0]
+        init = (jnp.full((q, k), -jnp.inf, queries.dtype),
+                jnp.full((q, k), -1, jnp.int32))
+
+        def step(carry, chunk_data):
+            best_s, best_i = carry
+            cd, ci = chunk_data
+            scores = queries @ cd.T
+            scores = jnp.where(ci[None, :] < 0, -jnp.inf, scores)
+            cand_s = jnp.concatenate([best_s, scores], axis=1)
+            cand_i = jnp.concatenate([best_i, jnp.broadcast_to(ci, (q, self.chunk))], axis=1)
+            top_s, top_pos = jax.lax.top_k(cand_s, k)
+            return (top_s, jnp.take_along_axis(cand_i, top_pos, axis=1)), None
+
+        (best_s, best_i), _ = jax.lax.scan(step, init, (docs_c, ids_c))
+        return _as_result(best_s, best_i)
+
+    def __hash__(self):  # allow use as a static jit argument
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other

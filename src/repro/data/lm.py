@@ -1,0 +1,55 @@
+"""Deterministic synthetic LM token pipeline.
+
+Markov-chain tokens (not uniform noise) so the CE loss is learnable and a
+few-hundred-step training run shows a real loss curve.  Multi-host aware:
+each process materializes only its slice of the global batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class LMBatchSpec:
+    global_batch: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 0
+
+
+class TokenStream:
+    """Stateless per-step batches: batch(step) is reproducible and identical
+    across restarts — the checkpoint only needs to store the step counter
+    (fault-tolerant data pipeline with zero state)."""
+
+    def __init__(self, spec: LMBatchSpec, n_states: int = 64,
+                 process_index: int = 0, process_count: int = 1):
+        self.spec = spec
+        rng = np.random.default_rng(spec.seed)
+        # sparse-ish Markov transition over a small state space mapped to vocab
+        self.proj = rng.integers(0, spec.vocab_size, n_states).astype(np.int32)
+        trans = rng.dirichlet(np.full(n_states, 0.3), size=n_states)
+        self.trans_cum = np.cumsum(trans, axis=1).astype(np.float32)
+        self.n_states = n_states
+        assert spec.global_batch % process_count == 0
+        self.local_batch = spec.global_batch // process_count
+        self.process_index = process_index
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            (self.spec.seed, step, self.process_index))
+        b, s = self.local_batch, self.spec.seq_len
+        u = rng.random((b, s + 1), dtype=np.float32)
+        states = np.zeros((b, s + 1), np.int32)
+        states[:, 0] = rng.integers(0, self.n_states, b)
+        for t in range(1, s + 1):
+            states[:, t] = np.argmax(
+                u[:, t][:, None] < self.trans_cum[states[:, t - 1]], axis=1)
+        tokens = self.proj[states]
+        return {"tokens": jnp.asarray(tokens[:, :-1]),
+                "labels": jnp.asarray(tokens[:, 1:])}

@@ -1,0 +1,1 @@
+from repro.kernels.cache_probe.ops import cache_probe  # noqa: F401

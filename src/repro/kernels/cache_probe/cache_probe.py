@@ -1,0 +1,44 @@
+"""Fused LowQuality-probe Pallas kernel (paper Eq. 3/4).
+
+The probe runs on EVERY utterance, fused with the query encoder on the
+serving chip: one (Qmax, D) x (D,) matvec on the MXU, the sqrt/subtract on
+the VPU, emitting per-cached-query r_hat = r_a - delta(psi_a, psi).
+Single-tile (Qmax <= 64 cached queries by the paper's design: one per cache
+miss in a <=13-turn conversation), so the whole working set sits in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(q_emb_ref, psi_ref, radius_ref, out_ref):
+    q = q_emb_ref[...]                                   # (Qmax, D)
+    psi = psi_ref[...]                                   # (8, D) row 0 live
+    scores = jax.lax.dot_general(
+        q, psi, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (Qmax, 8)
+    dist = jnp.sqrt(jnp.clip(2.0 - 2.0 * scores[:, :1], 0.0, None))
+    out_ref[...] = radius_ref[...] - dist                # (Qmax, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def probe_rhat(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
+               interpret: bool = False) -> jax.Array:
+    """q_emb: (Qmax, D) unit rows; psi: (8, D) (row 0 = query); radius:
+    (Qmax, 1) with -inf on empty slots. Returns r_hat (Qmax, 1) f32."""
+    qmax, d = q_emb.shape
+    return pl.pallas_call(
+        _probe_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((qmax, d), lambda i: (0, 0)),
+                  pl.BlockSpec((8, d), lambda i: (0, 0)),
+                  pl.BlockSpec((qmax, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((qmax, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((qmax, 1), jnp.float32),
+        interpret=interpret,
+    )(q_emb, psi, radius)

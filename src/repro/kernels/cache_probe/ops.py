@@ -1,0 +1,37 @@
+"""Public wrapper: pad/mask handling + hit decision for the probe kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cache_probe.cache_probe import probe_rhat
+
+LANE = 128
+SUBLANE = 8
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cache_probe(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
+                n_queries: jax.Array, epsilon,
+                interpret: bool | None = None):
+    """Fused LowQuality test. q_emb (Qmax, D); psi (D,); radius (Qmax,);
+    n_queries scalar. Returns (hit, best_r_hat, best_idx)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qmax, d = q_emb.shape
+    dpad = (-d) % LANE
+    qpad = (-qmax) % SUBLANE
+    q_emb_p = jnp.pad(q_emb, ((0, qpad), (0, dpad)))
+    psi_p = jnp.pad(psi[None], ((0, SUBLANE - 1), (0, dpad)))
+    valid = jnp.arange(qmax + qpad) < n_queries
+    radius_m = jnp.where(valid, jnp.pad(radius, (0, qpad),
+                                        constant_values=-jnp.inf), -jnp.inf)
+    r_hat = probe_rhat(q_emb_p, psi_p, radius_m[:, None],
+                       interpret=interpret)[:, 0]
+    r_hat = jnp.where(valid, r_hat, -jnp.inf)
+    best = jnp.argmax(r_hat)
+    hit = jnp.logical_and(n_queries > 0, r_hat[best] >= epsilon)
+    return hit, r_hat[best], jnp.where(n_queries > 0, best, -1)

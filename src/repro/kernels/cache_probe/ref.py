@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the LowQuality probe (mirrors core.cache.probe)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def probe_ref(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
+              n_queries: jax.Array, epsilon: float):
+    """Returns (hit, best_r_hat, best_idx)."""
+    valid = jnp.arange(q_emb.shape[0]) < n_queries
+    dist = jnp.sqrt(jnp.clip(2.0 - 2.0 * (q_emb @ psi), 0.0, None))
+    r_hat = jnp.where(valid, radius - dist, -jnp.inf)
+    best = jnp.argmax(r_hat)
+    hit = jnp.logical_and(n_queries > 0, r_hat[best] >= epsilon)
+    return hit, r_hat[best], jnp.where(n_queries > 0, best, -1)

@@ -1,0 +1,43 @@
+"""Public EmbeddingBag op: kernel dispatch + padding + pure-JAX fallback.
+
+The fallback (gather + einsum/segment reduce) is what runs inside jitted
+model code on non-TPU backends and inside the dry-run lowering; the Pallas
+kernel is selected on TPU (or explicitly, in interpret mode, for tests).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_kernel
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+LANE = 128
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "use_kernel", "interpret"))
+def embedding_bag(table: jax.Array, indices: jax.Array,
+                  weights: jax.Array | None = None, mode: str = "sum",
+                  use_kernel: bool = False, interpret: bool | None = None) -> jax.Array:
+    """EmbeddingBag(table, indices) -> (B, D). indices < 0 are padding."""
+    if not use_kernel:
+        return embedding_bag_ref(table, indices, weights, mode)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    valid = indices >= 0
+    w = jnp.ones(indices.shape, jnp.float32) if weights is None else weights.astype(jnp.float32)
+    w = w * valid
+    d = table.shape[1]
+    pad = (-d) % LANE
+    table_p = jnp.pad(table, ((0, 0), (0, pad))) if pad else table
+    out = embedding_bag_kernel(table_p, indices, w, mode=mode, interpret=interpret)
+    out = out[:, :d]
+    if mode == "mean":
+        cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+        out = out / cnt
+    if mode == "max":
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    return out

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for EmbeddingBag (matches torch.nn.EmbeddingBag semantics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, indices: jax.Array,
+                      weights: jax.Array | None = None,
+                      mode: str = "sum") -> jax.Array:
+    """table (V,D); indices (B,L) int32 with <0 as padding; weights (B,L)."""
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, 0)
+    rows = table[safe].astype(jnp.float32)                    # (B, L, D)
+    if mode == "max":
+        masked = jnp.where(valid[..., None], rows, -jnp.inf)
+        out = masked.max(axis=1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)         # empty bag -> 0
+    w = jnp.ones(indices.shape, jnp.float32) if weights is None else weights.astype(jnp.float32)
+    w = w * valid
+    out = jnp.einsum("bl,bld->bd", w, rows)
+    if mode == "mean":
+        cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+        out = out / cnt
+    return out

@@ -1,0 +1,60 @@
+"""jit'd public wrapper for the fused kNN Pallas kernel.
+
+Handles padding (corpus rows to the tile multiple, feature dim to the lane
+multiple, batch to the sublane multiple — all score-preserving zero pads),
+backend dispatch (interpret mode off-TPU), and the cross-tile merge.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.knn.knn import knn_tile_topk
+
+LANE = 128
+SUBLANE = 8
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_n", "interpret"))
+def knn_search(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
+               tile_n: int = 1024, interpret: bool | None = None):
+    """Top-k MIPS over the corpus. Returns (scores (B,k), ids (B,k)).
+
+    docs: (N, D) unit-norm transformed embeddings; doc_ids: (N,) int32
+    (use arange for positional); queries: (B, D).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n_valid = docs.shape[0]
+    tile_n = min(tile_n, max(SUBLANE, 1 << (n_valid - 1).bit_length()))
+    k_eff = min(k, tile_n)
+
+    docs_p = _pad_to(_pad_to(docs, 1, LANE), 0, tile_n)
+    q_p = _pad_to(_pad_to(queries, 1, LANE), 0, SUBLANE)
+    b = queries.shape[0]
+
+    vals, idx = knn_tile_topk(docs_p, q_p, k_eff, tile_n=tile_n,
+                              n_valid=n_valid, interpret=interpret)
+    tiles = vals.shape[0]
+    vals = vals.transpose(1, 0, 2).reshape(q_p.shape[0], tiles * k_eff)
+    idx = idx.transpose(1, 0, 2).reshape(q_p.shape[0], tiles * k_eff)
+
+    top_s, pos = jax.lax.top_k(vals, k)
+    top_i = jnp.take_along_axis(idx, pos, axis=1)
+    return top_s[:b], doc_ids[top_i[:b]]

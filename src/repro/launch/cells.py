@@ -1,0 +1,418 @@
+"""(architecture x input-shape) cell builders for the multi-pod dry-run.
+
+``build_cell(arch, shape, mesh)`` returns everything needed to lower +
+compile the cell without allocating a single parameter: step fn, input
+ShapeDtypeStructs, in/out shardings, activation-sharding rules, and the
+analytic MODEL_FLOPS for the roofline's usefulness ratio.
+
+Shape semantics (per the assignment):
+  LM:     train_4k -> train_step; prefill_32k -> prefill;
+          decode_32k / long_500k -> serve_step (1 new token vs. KV cache).
+  GNN:    full-batch / sampled-block / batched-small train steps.
+  RecSys: train_batch -> train_step; serve_* -> forward scoring;
+          retrieval_cand -> query-tower + sharded MIPS top-k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.dist.api import data_axes
+from repro.dist import sharding as shd
+from repro.dist.retrieval import make_batched_scorer
+from repro.models import common as cm
+from repro.models import egnn as egnn_mod
+from repro.models import recsys as rs
+from repro.models import transformer as tf
+from repro.train import optimizer as opt_mod
+from repro.train.step import make_lm_train_step, make_train_step
+
+# ---------------------------------------------------------------- helpers
+
+LM_SHAPE_DEFS = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="long", seq=524288, batch=1),
+}
+RECSYS_SHAPE_DEFS = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
+}
+
+
+@dataclasses.dataclass
+class BuiltCell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    rules: dict
+    meta: dict
+
+
+def make_optimizer(name: str) -> opt_mod.Optimizer:
+    return {"adamw": opt_mod.adamw, "adafactor": opt_mod.adafactor}[name]()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+# ------------------------------------------------------------------- LM
+
+def _lm_state(mod, cfg, mesh):
+    opt = make_optimizer(mod.OPTIMIZER)
+    params_shapes = jax.eval_shape(
+        lambda: tf.init_params(jax.random.key(0), cfg))
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+    p_specs = shd.param_specs(params_shapes, mesh)
+    o_specs = opt.state_spec(params_shapes, p_specs)
+    state_shapes = {"params": params_shapes, "opt": opt_shapes}
+    state_specs = {"params": p_specs, "opt": o_specs}
+    return opt, state_shapes, state_specs, params_shapes, p_specs
+
+
+def _lm_flops(cfg, params_shapes, tokens: int, fwd_only: bool) -> float:
+    n_active = tf.active_param_count(cfg, params_shapes)
+    return (2 if fwd_only else 6) * n_active * tokens
+
+
+def build_lm_cell(arch: str, shape: str, mesh: Mesh,
+                  cfg_override=None) -> BuiltCell:
+    mod = registry.get(arch)
+    cfg = cfg_override if cfg_override is not None else mod.full_config()
+    d = LM_SHAPE_DEFS[shape]
+    dp = tuple(data_axes(mesh))
+    rules = shd.lm_activation_rules(mesh, cfg, d["kind"])
+    opt, state_shapes, state_specs, params_shapes, p_specs = _lm_state(mod, cfg, mesh)
+    b, s = d["batch"], d["seq"]
+
+    if d["kind"] == "train":
+        accum = getattr(mod, "TRAIN_ACCUM_STEPS", 1)
+        accum_dtype = getattr(mod, "ACCUM_DTYPE", jnp.float32)
+        step = make_lm_train_step(cfg, opt, accum_steps=accum,
+                                  grad_shardings=_named(mesh, p_specs),
+                                  accum_dtype=accum_dtype)
+        batch_shapes = {"tokens": _sds((b, s), jnp.int32),
+                        "labels": _sds((b, s), jnp.int32)}
+        batch_specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+        return BuiltCell(
+            arch, shape, "train", step,
+            (state_shapes, batch_shapes),
+            (_named(mesh, state_specs), _named(mesh, batch_specs)),
+            (_named(mesh, state_specs), None), rules,
+            {"model_flops": _lm_flops(cfg, params_shapes, b * s, False),
+             "tokens": b * s})
+
+    if d["kind"] == "prefill":
+        def prefill(params, tokens):
+            logits, _aux, _h, caches = tf.forward(
+                params, tokens, cfg, return_kv=True, kv_len=s, remat="full")
+            return logits, caches
+        batch_shape = _sds((b, s), jnp.int32)
+        return BuiltCell(
+            arch, shape, "prefill", prefill,
+            (params_shapes, batch_shape),
+            (_named(mesh, p_specs), NamedSharding(mesh, P(dp, None))),
+            None, rules,
+            {"model_flops": _lm_flops(cfg, params_shapes, b * s, True),
+             "tokens": b * s})
+
+    # decode / long: one new token against a KV cache of length `seq`
+    caches_shapes = jax.eval_shape(lambda: tf.init_kv_caches(cfg, b, s))
+    if cfg.attention == "mla":
+        cache_spec_one = (P(*((None,) + tuple(rules["mla_cache"]))),
+                          P(*((None,) + tuple(rules["mla_cache_r"]))))
+    else:
+        cache_spec_one = (P(*((None,) + tuple(rules["kv_cache"]))),) * 2
+    caches_specs = [cache_spec_one for _ in cfg.layer_groups()]
+    token_spec = P(dp) if b % max(1, _axis_prod(mesh, dp)) == 0 else P()
+
+    def serve_step(params, token, caches, cur_len):
+        return tf.decode_step(params, token, caches, cur_len, cfg)
+
+    args = (params_shapes, _sds((b,), jnp.int32), caches_shapes,
+            _sds((), jnp.int32))
+    in_sh = (_named(mesh, p_specs), NamedSharding(mesh, token_spec),
+             _named(mesh, caches_specs), NamedSharding(mesh, P()))
+    out_sh = (None, _named(mesh, caches_specs))
+    return BuiltCell(
+        arch, shape, d["kind"], serve_step, args, in_sh, out_sh, rules,
+        {"model_flops": _lm_flops(cfg, params_shapes, b, True),
+         "tokens": b, "kv_len": s})
+
+
+def _axis_prod(mesh, axes):
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+# ------------------------------------------------------------------- GNN
+
+def build_gnn_cell(arch: str, shape: str, mesh: Mesh) -> BuiltCell:
+    mod = registry.get(arch)
+    geom = mod.SHAPES[shape]
+    dp = tuple(data_axes(mesh))
+    every = dp + ("model",)
+    n_dev = _axis_prod(mesh, every)
+    # nodes sharded over the whole mesh too: the per-layer gather of h at
+    # edge endpoints becomes the (realistic) all-gather collective of
+    # distributed full-graph training.
+    rules = {"edges": P(every, None), "nodes": P(every, None)}
+
+    if geom["kind"] == "batched":
+        n_nodes = geom["n_nodes"] * geom["batch"]
+        n_edges = _pad_to(geom["n_edges"] * geom["batch"], n_dev)
+        readout, n_out = "graph", geom["batch"]
+        d_feat = geom["d_feat"]
+    elif geom["kind"] == "mini":
+        seeds = geom["batch_nodes"]
+        f1, f2 = geom["fanout"]
+        n_edges = _pad_to(seeds * f1 + seeds * f1 * f2, n_dev)
+        n_nodes = _pad_to(seeds * (1 + f1 + f1 * f2), n_dev)
+        readout, n_out = "node", n_nodes
+        d_feat = geom["d_feat"]
+    else:
+        n_nodes = geom["n_nodes"]
+        n_edges = _pad_to(geom["n_edges"], n_dev)
+        readout, n_out = "node", n_nodes
+        d_feat = geom["d_feat"]
+
+    cfg = mod.full_config(d_feat=d_feat, readout=readout)
+    opt = make_optimizer(mod.OPTIMIZER)
+    params_shapes = jax.eval_shape(
+        lambda: egnn_mod.init_params(jax.random.key(0), cfg))
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+    p_specs = jax.tree.map(lambda _: P(), params_shapes)   # tiny: replicate
+    state_specs = {"params": p_specs,
+                   "opt": opt.state_spec(params_shapes, p_specs)}
+    state_shapes = {"params": params_shapes, "opt": opt_shapes}
+
+    n_graphs = geom.get("batch")
+
+    def loss_fn(params, batch):
+        logits, _ = egnn_mod.forward(
+            params, batch["feat"], batch["coords"], batch["edge_index"], cfg,
+            graph_ids=batch.get("graph_ids"), n_graphs=n_graphs)
+        return cm.cross_entropy(logits[None], batch["labels"][None]), {}
+
+    step = make_train_step(loss_fn, opt)
+    batch_shapes = {"feat": _sds((n_nodes, d_feat), jnp.float32),
+                    "coords": _sds((n_nodes, 3), jnp.float32),
+                    "edge_index": _sds((2, n_edges), jnp.int32),
+                    "labels": _sds((n_out,), jnp.int32)}
+    batch_specs = {"feat": P(None, None), "coords": P(None, None),
+                   "edge_index": P(None, every), "labels": P(None)}
+    if geom["kind"] == "batched":
+        batch_shapes["graph_ids"] = _sds((n_nodes,), jnp.int32)
+        batch_specs["graph_ids"] = P(None)
+
+    # message-passing flops: per edge per layer ~ 2 * (phi_e + phi_x) matmuls
+    dh = cfg.d_hidden
+    per_edge = 2 * ((2 * dh + 1) * dh + dh * dh + dh * dh + dh)
+    per_node = 2 * (2 * dh * dh + dh * dh)
+    mf = 3 * cfg.n_layers * (n_edges * per_edge + n_nodes * per_node)
+
+    return BuiltCell(
+        arch, shape, "train", step,
+        ({"params": params_shapes, "opt": state_shapes["opt"]}, batch_shapes),
+        (_named(mesh, state_specs), _named(mesh, batch_specs)),
+        (_named(mesh, state_specs), None), rules,
+        {"model_flops": float(mf), "edges": n_edges, "nodes": n_nodes})
+
+
+# ---------------------------------------------------------------- RecSys
+
+def _recsys_model(arch: str, cfg):
+    if arch == "dlrm-rm2":
+        init = functools.partial(rs.dlrm_init, cfg=cfg)
+        fwd = functools.partial(rs.dlrm_forward, cfg=cfg)
+    elif arch == "xdeepfm":
+        init = functools.partial(rs.xdeepfm_init, cfg=cfg)
+        fwd = functools.partial(rs.xdeepfm_forward, cfg=cfg)
+    else:
+        init = functools.partial(rs.seqrec_init, cfg=cfg)
+        fwd = None
+    return init, fwd
+
+
+def _recsys_batch(arch: str, cfg, b: int):
+    if arch == "dlrm-rm2":
+        shapes = {"dense": _sds((b, cfg.n_dense), jnp.float32),
+                  "sparse": _sds((b, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+                  "label": _sds((b,), jnp.float32)}
+    elif arch == "xdeepfm":
+        shapes = {"sparse": _sds((b, cfg.n_sparse, 1), jnp.int32),
+                  "label": _sds((b,), jnp.float32)}
+    else:
+        shapes = {"items": _sds((b, cfg.max_len), jnp.int32),
+                  "pos": _sds((b, cfg.max_len), jnp.int32),
+                  "neg": _sds((b, cfg.max_len), jnp.int32)}
+    return shapes
+
+
+def _recsys_flops(arch: str, cfg, b: int) -> float:
+    if arch == "dlrm-rm2":
+        mlp = sum(a * o for a, o in zip(cfg.bot_mlp[:-1], cfg.bot_mlp[1:]))
+        top_in = cfg.embed_dim + 27 * 26 // 2
+        tops = [top_in] + list(cfg.top_mlp_hidden)
+        mlp += sum(a * o for a, o in zip(tops[:-1], tops[1:]))
+        inter = 27 * 27 * cfg.embed_dim
+        return 2.0 * b * (mlp + inter)
+    if arch == "xdeepfm":
+        m, dd = cfg.n_sparse, cfg.embed_dim
+        cin = 0
+        h_prev = m
+        for h in cfg.cin_layers:
+            cin += h_prev * m * dd + h * h_prev * m * dd
+            h_prev = h
+        dnn_sizes = [m * dd] + list(cfg.mlp) + [1]
+        dnn = sum(a * o for a, o in zip(dnn_sizes[:-1], dnn_sizes[1:]))
+        return 2.0 * b * (cin + dnn)
+    d, s = cfg.embed_dim, cfg.max_len
+    per_tok = 4 * d * d + 2 * cfg.d_ff_mult * d * d + 2 * s * d
+    return 2.0 * b * s * cfg.n_blocks * per_tok
+
+
+def build_recsys_cell(arch: str, shape: str, mesh: Mesh) -> BuiltCell:
+    mod = registry.get(arch)
+    cfg = mod.full_config()
+    d = RECSYS_SHAPE_DEFS[shape]
+    dp = tuple(data_axes(mesh))
+    every = dp + ("model",)
+    rules = shd.lm_activation_rules(mesh, _DummyAttn(), "train")
+    rules["act_bfd"] = P(dp, None, None)
+    b = d["batch"]
+    init, fwd = _recsys_model(arch, cfg)
+    params_shapes = jax.eval_shape(lambda: init(jax.random.key(0)))
+    p_specs = shd.param_specs(params_shapes, mesh)
+
+    if d["kind"] == "train":
+        opt = make_optimizer(mod.OPTIMIZER)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        state_specs = {"params": p_specs,
+                       "opt": opt.state_spec(params_shapes, p_specs)}
+        if arch in ("sasrec", "bert4rec"):
+            def loss_fn(params, batch):
+                return rs.seqrec_bce_loss(params, batch["items"],
+                                          batch["pos"], batch["neg"], cfg), {}
+        else:
+            def loss_fn(params, batch):
+                args = ([batch["dense"], batch["sparse"]]
+                        if "dense" in batch else [batch["sparse"]])
+                logits = fwd(params, *args)
+                l = batch["label"]
+                loss = jnp.mean(jnp.maximum(logits, 0) - logits * l
+                                + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+                return loss, {}
+        step = make_train_step(loss_fn, opt)
+        batch_shapes = _recsys_batch(arch, cfg, b)
+        batch_specs = jax.tree.map(
+            lambda s: P(*((dp,) + (None,) * (len(s.shape) - 1))), batch_shapes)
+        return BuiltCell(
+            arch, shape, "train", step,
+            ({"params": params_shapes, "opt": opt_shapes}, batch_shapes),
+            (_named(mesh, state_specs), _named(mesh, batch_specs)),
+            (_named(mesh, state_specs), None), rules,
+            {"model_flops": 3 * _recsys_flops(arch, cfg, b)})
+
+    if d["kind"] == "serve":
+        if arch in ("sasrec", "bert4rec"):
+            scorer = make_batched_scorer(mesh, k=100,
+                                         table_axes=("model",), batch_axes=dp)
+            def serve(params, items):
+                repr_ = rs.seqrec_session_repr(params, items, cfg)
+                return scorer(repr_, params["item_emb"])
+            batch_shapes = (_sds((b, cfg.max_len), jnp.int32),)
+            batch_specs = (P(dp, None),)
+            # item_emb is param-sharded over every axis; scorer expects
+            # "model"-sharded -> spec mismatch is resolved by SPMD reshard.
+        else:
+            bs = _recsys_batch(arch, cfg, b)
+            bs.pop("label")
+            batch_shapes = tuple(bs.values())
+            batch_specs = tuple(
+                P(*((dp,) + (None,) * (len(s.shape) - 1)))
+                for s in batch_shapes)
+
+            def serve(params, *args):
+                return fwd(params, *args)
+        return BuiltCell(
+            arch, shape, "serve", serve,
+            (params_shapes,) + tuple(batch_shapes),
+            (_named(mesh, p_specs),) + tuple(
+                NamedSharding(mesh, s) for s in batch_specs),
+            None, rules,
+            {"model_flops": _recsys_flops(arch, cfg, b)})
+
+    # retrieval_cand: one query vs 1e6 candidates == the paper's index scan.
+    # The full (shard-divisible, 2^20-row) item table is scored with rows
+    # past n_candidates masked — slicing an unevenly-sharded table forces a
+    # full reshard-gather (measured: the whole 6.7 GB table replicated).
+    n_cand = d["n_candidates"]
+    scorer = make_batched_scorer(mesh, k=1000, table_axes=every,
+                                 batch_axes=())
+    if arch in ("sasrec", "bert4rec"):
+        def retrieve(params, items):
+            repr_ = rs.seqrec_session_repr(params, items, cfg)
+            return scorer(repr_, params["item_emb"], n_valid=n_cand)
+        batch_shapes = (_sds((b, cfg.max_len), jnp.int32),)
+    elif arch == "dlrm-rm2":
+        def retrieve(params, dense, sparse):
+            u = rs.dlrm_user_tower(params, dense, sparse, cfg)
+            return scorer(u, params["tables"][0], n_valid=n_cand)
+        batch_shapes = (_sds((b, cfg.n_dense), jnp.float32),
+                        _sds((b, cfg.n_sparse, cfg.multi_hot), jnp.int32))
+    else:
+        def retrieve(params, sparse):
+            u = rs.xdeepfm_user_tower(params, sparse, cfg)
+            return scorer(u, params["tables"][0], n_valid=n_cand)
+        batch_shapes = (_sds((b, cfg.n_sparse, 1), jnp.int32),)
+    batch_specs = tuple(P() for _ in batch_shapes)
+    return BuiltCell(
+        arch, shape, "retrieval", retrieve,
+        (params_shapes,) + batch_shapes,
+        (_named(mesh, p_specs),) + tuple(
+            NamedSharding(mesh, s) for s in batch_specs),
+        None, rules,
+        {"model_flops": 2.0 * n_cand * cfg.embed_dim
+         + _recsys_flops(arch, cfg, b)})
+
+
+class _DummyAttn:
+    n_heads = 1
+    n_kv_heads = 1
+    attention = "gqa"
+
+
+# ----------------------------------------------------------------- entry
+
+def build_cell(arch: str, shape: str, mesh: Mesh) -> BuiltCell:
+    fam = registry.get(arch).FAMILY
+    builder = {"lm": build_lm_cell, "gnn": build_gnn_cell,
+               "recsys": build_recsys_cell}[fam]
+    return builder(arch, shape, mesh)

@@ -1,0 +1,130 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective evidence.
+
+MUST be the process entry point (jax locks the device count on first init);
+the XLA_FLAGS line above precedes every other import for that reason.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+"""
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import registry               # noqa: E402
+from repro.dist.api import sharding_rules        # noqa: E402
+from repro.launch import roofline as rl          # noqa: E402
+from repro.launch.cells import build_cell        # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             save_hlo: bool = False, calibrate: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh)
+    with sharding_rules(mesh, cell.rules):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    hlo = compiled.as_text()
+    roof, coll = rl.analyze(compiled, cell.meta.get("model_flops", 0.0), n_dev,
+                            hlo_text=hlo)
+    mem = rl.memory_summary(compiled)
+
+    calib = None
+    if calibrate and registry.get(arch).FAMILY == "lm":
+        from repro.launch.calibrate import calibrated_costs
+        calib = calibrated_costs(arch, shape, mesh)
+        tot = calib["total"]
+        roof = rl.Roofline(flops=tot["flops"], hbm_bytes=tot["bytes"],
+                           coll_bytes=tot["coll"],
+                           model_flops=cell.meta.get("model_flops", 0.0),
+                           n_devices=n_dev)
+    record = {
+        "arch": arch, "shape": shape, "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "collectives": coll,
+        "roofline": roof.to_dict(),
+        "calibration": calib,
+        "meta": cell.meta,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}@{shape}@{record['mesh']}"
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(record, f, indent=1)
+    if save_hlo:
+        with open(os.path.join(out_dir, tag + ".hlo"), "w") as f:
+            f.write(hlo)
+    print(f"[dryrun] {tag}: OK  "
+          f"(compile {t_compile:.1f}s, dominant={roof.dominant}, "
+          f"t=({roof.t_compute:.2e},{roof.t_memory:.2e},"
+          f"{roof.t_collective:.2e})s, "
+          f"hbm/dev={mem.get('total_hbm_bytes', 0)/2**30:.2f}GiB)")
+    print("  memory_analysis:", mem)
+    print("  cost_analysis: flops/dev=%.3e bytes/dev=%.3e"
+          % (roof.flops, roof.hbm_bytes))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="trip-count-corrected costs for LM cells "
+                         "(extra reduced-layer compiles)")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose artifact JSON already exists")
+    args = ap.parse_args()
+
+    cells = (registry.all_cells() if args.all
+             else [(args.arch, args.shape)])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            tag = f"{arch}@{shape}@{'2x16x16' if multi_pod else '16x16'}"
+            if args.skip_existing and os.path.exists(
+                    os.path.join(args.out, tag + ".json")):
+                continue
+            try:
+                run_cell(arch, shape, multi_pod, args.out,
+                         save_hlo=args.save_hlo, calibrate=args.calibrate)
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape, multi_pod, repr(e)))
+                print(f"[dryrun] {arch}@{shape} multi_pod={multi_pod} "
+                      f"FAILED: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled successfully")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+``cost_analysis()`` FLOPs/bytes are for the *partitioned per-device* module,
+so terms are computed directly against single-chip peaks.  Collective bytes
+are not in cost_analysis: we parse the optimized (post-SPMD) HLO and sum
+the output-shape bytes of every collective op (for all-gather this counts
+the gathered result, a standard upper bound on the per-device ring traffic;
+for reduce-scatter the scattered output understates by ~(n-1)/n — noted).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+HW = {
+    "flops_bf16": 197e12,     # per chip
+    "hbm_bw": 819e9,          # bytes/s
+    "ici_bw": 50e9,           # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind byte totals (per device) from optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    seen_start = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        line = m.group(0)
+        # avoid double-counting async start/done pairs: count starts and
+        # plain (sync) ops; skip "-done"
+        if "-done(" in line:
+            continue
+        out[kind] += _shape_bytes(shape_str)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float              # per-device HLO flops
+    hbm_bytes: float          # per-device bytes accessed
+    coll_bytes: float         # per-device collective bytes
+    model_flops: float        # analytic useful flops (global)
+    n_devices: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / HW["flops_bf16"]
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HW["hbm_bw"]
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / HW["ici_bw"]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.flops * self.n_devices
+        return self.model_flops / total if total else float("nan")
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-roofline bound spent doing useful model
+        flops: (model_flops / chips / peak) / bound_time."""
+        ideal = self.model_flops / self.n_devices / HW["flops_bf16"]
+        return ideal / self.bound_time if self.bound_time else float("nan")
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "n_devices": self.n_devices,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(compiled, model_flops: float, n_devices: int,
+            hlo_text: Optional[str] = None) -> tuple[Roofline, dict]:
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):          # some backends return [dict]
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    rl = Roofline(flops=flops, hbm_bytes=byts, coll_bytes=float(coll["total"]),
+                  model_flops=model_flops, n_devices=n_devices)
+    return rl, coll
+
+
+def memory_summary(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        m = None
+    if m is None:
+        return {}
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(m, f, None)
+        if v is not None:
+            out[f] = int(v)
+    if "argument_size_in_bytes" in out:
+        out["total_hbm_bytes"] = (out.get("argument_size_in_bytes", 0)
+                                  + out.get("output_size_in_bytes", 0)
+                                  + out.get("temp_size_in_bytes", 0)
+                                  - out.get("alias_size_in_bytes", 0))
+    return out

@@ -1,0 +1,5 @@
+from repro.metrics.ir import (average_precision, coverage, mean_metric, mrr,
+                              ndcg_at_k, precision_at_k)
+
+__all__ = ["average_precision", "coverage", "mean_metric", "mrr",
+           "ndcg_at_k", "precision_at_k"]

@@ -1,0 +1,277 @@
+"""RecSys architectures: DLRM-RM2, xDeepFM, SASRec, BERT4Rec.
+
+Shared substrate: a multi-field EmbeddingBag over row-sharded tables (the
+hot path — see kernels/embedding_bag) + per-model feature interaction.
+
+Retrieval scoring (``retrieval_cand``): every model exposes a *query tower*
+returning a user/session embedding, scored against 10^6 candidate item
+embeddings with a batched MIPS — exactly the paper's metric-index scan, so
+the CACHE front-end applies directly (see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import constrain
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.models import common as cm
+
+
+# ------------------------------------------------------------ embeddings
+
+def field_pool(tables: jax.Array, idx: jax.Array, mode: str = "sum",
+               use_kernel: bool = False) -> jax.Array:
+    """tables: (F, V, D) stacked per-field tables; idx: (B, F, L) multi-hot
+    (single-hot when L == 1); -> (B, F, D) pooled per field.
+
+    On TPU (use_kernel) fields are flattened into one (F*V, D) table for a
+    single embedding-bag kernel pass.  The distributed/jnp path gathers
+    per-field via vmap WITHOUT reshaping: merging the unsharded field dim
+    into the vocab-sharded dim forces GSPMD to rematerialize the whole
+    table (measured: the full 6.7 GB DLRM table gathered per step)."""
+    f, v, d = tables.shape
+    b, f2, l = idx.shape
+    assert f == f2
+    if use_kernel:
+        offset = (jnp.arange(f, dtype=jnp.int32) * v)[None, :, None]
+        flat_idx = jnp.where(idx >= 0, idx + offset, -1).reshape(b * f, l)
+        flat_tab = tables.reshape(f * v, d)
+        out = embedding_bag(flat_tab, flat_idx, mode=mode,
+                            use_kernel=use_kernel)
+        return out.reshape(b, f, d)
+    valid = idx >= 0
+    safe = jnp.where(valid, idx, 0)
+    rows = jax.vmap(lambda tab, ix: tab[ix], in_axes=(0, 1),
+                    out_axes=1)(tables, safe)            # (B, F, L, D)
+    rows = rows * valid[..., None]
+    if mode == "mean":
+        cnt = jnp.maximum(valid.sum(axis=-1, keepdims=True), 1)
+        return rows.sum(axis=2) / cnt
+    if mode == "max":
+        masked = jnp.where(valid[..., None], rows, -jnp.inf)
+        out = masked.max(axis=2)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    return rows.sum(axis=2)
+
+
+def _mlp_init(key, sizes, dtype):
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [{"w": jax.random.normal(k, (a, b), dtype) * (2.0 / a) ** 0.5,
+             "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(ks, sizes[:-1], sizes[1:])]
+
+
+def _mlp(layers, x, act=jax.nn.relu, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ------------------------------------------------------------------ DLRM
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab: int = 1_000_000
+    multi_hot: int = 1
+    bot_mlp: tuple = (13, 512, 256, 64)
+    top_mlp_hidden: tuple = (512, 512, 256, 1)
+    dtype: object = jnp.float32
+
+
+def dlrm_init(key: jax.Array, cfg: DLRMConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n_pairs = (cfg.n_sparse + 1) * cfg.n_sparse // 2
+    top_in = cfg.embed_dim + n_pairs
+    return {
+        "tables": jax.random.normal(
+            k1, (cfg.n_sparse, cfg.vocab, cfg.embed_dim), cfg.dtype)
+            * cfg.embed_dim ** -0.5,
+        "bot": _mlp_init(k2, list(cfg.bot_mlp), cfg.dtype),
+        "top": _mlp_init(k3, [top_in] + list(cfg.top_mlp_hidden), cfg.dtype),
+    }
+
+
+def dlrm_forward(params: dict, dense: jax.Array, sparse_idx: jax.Array,
+                 cfg: DLRMConfig, use_kernel: bool = False) -> jax.Array:
+    """dense: (B, 13); sparse_idx: (B, 26, L). Returns (B,) logits."""
+    z0 = _mlp(params["bot"], dense.astype(cfg.dtype), final_act=True)  # (B, D)
+    emb = field_pool(params["tables"], sparse_idx, use_kernel=use_kernel)
+    emb = constrain(emb, "act_bfd")
+    feats = jnp.concatenate([z0[:, None, :], emb], axis=1)   # (B, 27, D)
+    # dot interaction: upper triangle of (27 x 27) gram
+    gram = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    f = feats.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    inter = gram[:, iu, ju]                                   # (B, 351)
+    top_in = jnp.concatenate([z0, inter], axis=1)
+    return _mlp(params["top"], top_in)[:, 0]
+
+
+def dlrm_user_tower(params: dict, dense: jax.Array, sparse_idx: jax.Array,
+                    cfg: DLRMConfig) -> jax.Array:
+    """Two-tower retrieval adaptation: pooled user repr in item-embedding space."""
+    z0 = _mlp(params["bot"], dense.astype(cfg.dtype), final_act=True)
+    emb = field_pool(params["tables"], sparse_idx)
+    return z0 + emb.mean(axis=1)                              # (B, D)
+
+
+# --------------------------------------------------------------- xDeepFM
+
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    vocab: int = 1_000_000
+    cin_layers: tuple = (200, 200, 200)
+    mlp: tuple = (400, 400)
+    dtype: object = jnp.float32
+
+
+def xdeepfm_init(key: jax.Array, cfg: XDeepFMConfig) -> dict:
+    ks = jax.random.split(key, 5 + len(cfg.cin_layers))
+    m, d = cfg.n_sparse, cfg.embed_dim
+    p = {
+        "tables": jax.random.normal(ks[0], (m, cfg.vocab, d), cfg.dtype) * d ** -0.5,
+        "linear": jax.random.normal(ks[1], (m, cfg.vocab, 1), cfg.dtype) * 0.01,
+        "dnn": _mlp_init(ks[2], [m * d] + list(cfg.mlp) + [1], cfg.dtype),
+        "cin": [],
+        "cin_out": None,
+    }
+    h_prev = m
+    for i, h in enumerate(cfg.cin_layers):
+        p["cin"].append(jax.random.normal(
+            ks[3 + i], (h, h_prev * m), cfg.dtype) * (h_prev * m) ** -0.5)
+        h_prev = h
+    p["cin_out"] = jax.random.normal(
+        ks[-1], (sum(cfg.cin_layers), 1), cfg.dtype) * 0.1
+    return p
+
+
+def xdeepfm_forward(params: dict, sparse_idx: jax.Array, cfg: XDeepFMConfig,
+                    use_kernel: bool = False) -> jax.Array:
+    """sparse_idx: (B, 39, L). Returns (B,) logits (pre-sigmoid)."""
+    x0 = field_pool(params["tables"], sparse_idx, use_kernel=use_kernel)  # (B,m,D)
+    x0 = constrain(x0, "act_bfd")
+    b, m, d = x0.shape
+    # CIN
+    xk = x0
+    pooled = []
+    for w in params["cin"]:
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0).reshape(b, -1, d)  # (B, Hk*m, D)
+        xk = jnp.einsum("hp,bpd->bhd", w, z)                        # (B, Hk+1, D)
+        pooled.append(xk.sum(axis=-1))                              # (B, Hk+1)
+    cin_logit = jnp.concatenate(pooled, axis=1) @ params["cin_out"]  # (B, 1)
+    # DNN
+    dnn_logit = _mlp(params["dnn"], x0.reshape(b, m * d))
+    # linear (order-1)
+    lin = field_pool(params["linear"], sparse_idx).sum(axis=(1, 2))
+    return (cin_logit + dnn_logit)[:, 0] + lin
+
+
+def xdeepfm_user_tower(params: dict, sparse_idx: jax.Array,
+                       cfg: XDeepFMConfig) -> jax.Array:
+    """Two-tower retrieval adaptation (mean field embedding)."""
+    return field_pool(params["tables"], sparse_idx).mean(axis=1)
+
+
+# ------------------------------------------- sequential models (shared)
+
+@dataclasses.dataclass(frozen=True)
+class SeqRecConfig:
+    name: str = "sasrec"
+    vocab: int = 1_000_000
+    max_len: int = 50
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    causal: bool = True          # SASRec causal; BERT4Rec bidirectional
+    d_ff_mult: int = 4
+    dtype: object = jnp.float32
+
+
+def seqrec_init(key: jax.Array, cfg: SeqRecConfig) -> dict:
+    ks = jax.random.split(key, 2 + 5 * cfg.n_blocks)
+    d = cfg.embed_dim
+    p = {
+        "item_emb": jax.random.normal(ks[0], (cfg.vocab, d), cfg.dtype) * d ** -0.5,
+        "pos_emb": jax.random.normal(ks[1], (cfg.max_len, d), cfg.dtype) * 0.02,
+        "blocks": [],
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    for i in range(cfg.n_blocks):
+        k = ks[2 + 5 * i: 7 + 5 * i]
+        p["blocks"].append({
+            "wq": jax.random.normal(k[0], (d, d), cfg.dtype) * d ** -0.5,
+            "wk": jax.random.normal(k[1], (d, d), cfg.dtype) * d ** -0.5,
+            "wv": jax.random.normal(k[2], (d, d), cfg.dtype) * d ** -0.5,
+            "wo": jax.random.normal(k[3], (d, d), cfg.dtype) * d ** -0.5,
+            "ffn": _mlp_init(k[4], [d, cfg.d_ff_mult * d, d], cfg.dtype),
+            "norm1": jnp.ones((d,), jnp.float32),
+            "norm2": jnp.ones((d,), jnp.float32),
+        })
+    return p
+
+
+def seqrec_encode(params: dict, items: jax.Array, cfg: SeqRecConfig) -> jax.Array:
+    """items: (B, S) int32, -1 = pad. Returns (B, S, D) hidden states."""
+    b, s = items.shape
+    d, h = cfg.embed_dim, cfg.n_heads
+    mask = items >= 0
+    x = params["item_emb"][jnp.maximum(items, 0)] * mask[..., None]
+    x = x + params["pos_emb"][None, :s]
+    x = constrain(x, "act_bsd")
+    for blk in params["blocks"]:
+        xn = cm.rms_norm(x, blk["norm1"])
+        q = (xn @ blk["wq"]).reshape(b, s, h, d // h)
+        k = (xn @ blk["wk"]).reshape(b, s, h, d // h)
+        v = (xn @ blk["wv"]).reshape(b, s, h, d // h)
+        o = cm.blockwise_attention(q, k, v, causal=cfg.causal,
+                                   q_chunk=min(256, s), kv_chunk=min(256, s))
+        x = x + o.reshape(b, s, d) @ blk["wo"]
+        xn = cm.rms_norm(x, blk["norm2"])
+        x = x + _mlp(blk["ffn"], xn)
+    x = cm.rms_norm(x, params["final_norm"])
+    return x * mask[..., None]
+
+
+def seqrec_session_repr(params: dict, items: jax.Array, cfg: SeqRecConfig) -> jax.Array:
+    """Last valid position's hidden state: the retrieval query vector."""
+    hidden = seqrec_encode(params, items, cfg)
+    lengths = jnp.maximum((items >= 0).sum(axis=1) - 1, 0)
+    return jnp.take_along_axis(hidden, lengths[:, None, None], axis=1)[:, 0]
+
+
+def seqrec_score_candidates(params: dict, session: jax.Array,
+                            cand_ids: Optional[jax.Array] = None) -> jax.Array:
+    """MIPS over item embeddings — the paper's metric-index scan.
+    session: (B, D); cand_ids: (C,) or None for the full vocab."""
+    table = params["item_emb"]
+    if cand_ids is not None:
+        table = table[cand_ids]
+    return session @ table.T
+
+
+def seqrec_bce_loss(params: dict, items: jax.Array, pos: jax.Array,
+                    neg: jax.Array, cfg: SeqRecConfig) -> jax.Array:
+    """SASRec-style BCE: one positive + one sampled negative per position.
+    items/pos/neg: (B, S) (-1 pads)."""
+    hidden = seqrec_encode(params, items, cfg)
+    valid = pos >= 0
+    e_pos = params["item_emb"][jnp.maximum(pos, 0)]
+    e_neg = params["item_emb"][jnp.maximum(neg, 0)]
+    s_pos = jnp.sum(hidden * e_pos, axis=-1)
+    s_neg = jnp.sum(hidden * e_neg, axis=-1)
+    loss = -(jax.nn.log_sigmoid(s_pos) + jax.nn.log_sigmoid(-s_neg))
+    return (loss * valid).sum() / jnp.maximum(valid.sum(), 1)

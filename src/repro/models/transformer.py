@@ -1,0 +1,503 @@
+"""Config-driven LM transformer family.
+
+One implementation covers the five assigned LM architectures:
+  * GQA attention (chatglm3 kv=2, mistral kv=8, gemma2 kv=8, llama4 kv=8)
+  * MLA latent attention + MTP head (deepseek-v3)
+  * MoE FFN with shared experts (deepseek 256e top-8 + 1 shared,
+    llama4-scout 16e top-1 + shared), dense-first-k layers
+  * RoPE (full / half "2d" chatglm style, interleaved), per-layer
+    local/global window schedules + logit softcaps (gemma2)
+
+Layers are scanned (``lax.scan`` over stacked params, grouped dense-vs-moe)
+with configurable remat, so HLO size and activation memory stay O(1 layer).
+Activation shardings are *logical* (``dist.api.constrain``) and resolved by
+the launcher for whatever mesh is active.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import constrain
+from repro.models import common as cm
+from repro.models.moe import MoEConfig, init_moe, moe_ffn
+
+# --------------------------------------------------------------- configs
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: Optional[int] = None
+    attention: str = "gqa"                  # "gqa" | "mla"
+    mla: Optional[MLAConfig] = None
+    rope_theta: float = 1e4
+    rotary_frac: float = 1.0                # 0.5 => chatglm partial rotary
+    rope_interleaved: bool = False
+    window: Optional[int] = None
+    layer_pattern: Optional[str] = None     # cycled, e.g. "lg" (gemma2)
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    moe: Optional[MoEConfig] = None
+    n_dense_layers: int = 0                 # leading dense layers when MoE
+    mtp: bool = False                       # deepseek multi-token prediction
+    mtp_weight: float = 0.3
+    norm_eps: float = 1e-6
+    use_post_norm: bool = False             # gemma2 pre+post norms
+    zero_centered_norm: bool = False        # gemma-style (1 + w)
+    embed_scale: bool = False               # multiply embeddings by sqrt(d)
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    # calibration-only knobs: unroll scans so XLA cost_analysis counts every
+    # trip (while bodies are otherwise counted once) — see launch/calibrate.
+    attn_unroll: bool = False
+    layer_unroll: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        if self.attention == "mla":
+            m = self.mla or MLAConfig()
+            return m.qk_nope_dim + m.qk_rope_dim
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def v_head_dim(self) -> int:
+        if self.attention == "mla":
+            return (self.mla or MLAConfig()).v_head_dim
+        return self.d_head or self.d_model // self.n_heads
+
+    def layer_groups(self):
+        """[(kind, count)] — dense-prefix then MoE remainder."""
+        if self.moe is None:
+            return [("dense", self.n_layers)]
+        nd = self.n_dense_layers
+        out = []
+        if nd:
+            out.append(("dense", nd))
+        out.append(("moe", self.n_layers - nd))
+        return out
+
+    def window_schedule(self) -> jnp.ndarray:
+        """Per-layer window sizes; 0 = unlimited (global)."""
+        if self.layer_pattern is None:
+            w = self.window or 0
+            return jnp.full((self.n_layers,), w, jnp.int32)
+        pat = (self.layer_pattern * self.n_layers)[: self.n_layers]
+        return jnp.asarray([(self.window or 0) if c == "l" else 0 for c in pat],
+                           jnp.int32)
+
+
+# ------------------------------------------------------------ param init
+
+def _init_attn(key, cfg: TransformerConfig) -> dict:
+    d, h, kv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.head_dim
+    s = d ** -0.5
+    if cfg.attention == "mla":
+        m = cfg.mla or MLAConfig()
+        ks = jax.random.split(key, 8)
+        dn, dr, dv = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim
+        return {
+            "wdq": jax.random.normal(ks[0], (d, m.q_lora_rank), cfg.dtype) * s,
+            "q_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+            "wuq": jax.random.normal(ks[1], (m.q_lora_rank, h * (dn + dr)),
+                                     cfg.dtype) * m.q_lora_rank ** -0.5,
+            "wdkv": jax.random.normal(ks[2], (d, m.kv_lora_rank), cfg.dtype) * s,
+            "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+            "wkr": jax.random.normal(ks[3], (d, dr), cfg.dtype) * s,
+            "wuk": jax.random.normal(ks[4], (m.kv_lora_rank, h * dn),
+                                     cfg.dtype) * m.kv_lora_rank ** -0.5,
+            "wuv": jax.random.normal(ks[5], (m.kv_lora_rank, h * dv),
+                                     cfg.dtype) * m.kv_lora_rank ** -0.5,
+            "wo": jax.random.normal(ks[6], (h * dv, d), cfg.dtype)
+                  * (h * dv) ** -0.5 / (2 * cfg.n_layers) ** 0.5,
+        }
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": jax.random.normal(ks[0], (d, h * dh), cfg.dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, kv * dh), cfg.dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, kv * dh), cfg.dtype) * s,
+        "wo": jax.random.normal(ks[3], (h * dh, d), cfg.dtype)
+              * (h * dh) ** -0.5 / (2 * cfg.n_layers) ** 0.5,
+    }
+
+
+def _init_layer(key, cfg: TransformerConfig, kind: str) -> dict:
+    k_attn, k_ffn = jax.random.split(key)
+    p = {"attn": _init_attn(k_attn, cfg),
+         "pre_attn_norm": jnp.zeros((cfg.d_model,), jnp.float32)
+         if cfg.zero_centered_norm else jnp.ones((cfg.d_model,), jnp.float32)}
+    one = jnp.zeros if cfg.zero_centered_norm else jnp.ones
+    p["pre_ffn_norm"] = one((cfg.d_model,), jnp.float32)
+    if cfg.use_post_norm:
+        p["post_attn_norm"] = one((cfg.d_model,), jnp.float32)
+        p["post_ffn_norm"] = one((cfg.d_model,), jnp.float32)
+    if kind == "moe":
+        p["ffn"] = init_moe(k_ffn, cfg.moe, cfg.d_model, cfg.dtype)
+    else:
+        k1, k2 = jax.random.split(k_ffn)
+        p["ffn"] = {
+            "wi": jax.random.normal(k1, (cfg.d_model, 2 * cfg.d_ff), cfg.dtype)
+                  * cfg.d_model ** -0.5,
+            "wo": jax.random.normal(k2, (cfg.d_ff, cfg.d_model), cfg.dtype)
+                  * cfg.d_ff ** -0.5 / (2 * cfg.n_layers) ** 0.5,
+        }
+    return p
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> dict:
+    keys = jax.random.split(key, 4)
+    params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model),
+                                   cfg.dtype) * 0.02,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32)
+        if cfg.zero_centered_norm else jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab_size), cfg.dtype) * cfg.d_model ** -0.5
+    gkey = keys[2]
+    for gi, (kind, count) in enumerate(cfg.layer_groups()):
+        gkey, sub = jax.random.split(gkey)
+        lkeys = jax.random.split(sub, count)
+        params[f"group{gi}_{kind}"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, kind))(lkeys)
+    if cfg.mtp:
+        k1, k2 = jax.random.split(keys[3])
+        params["mtp"] = {
+            "proj": jax.random.normal(k1, (2 * cfg.d_model, cfg.d_model),
+                                      cfg.dtype) * (2 * cfg.d_model) ** -0.5,
+            "block": _init_layer(k2, cfg, "dense"),
+            "norm_h": jnp.ones((cfg.d_model,), jnp.float32),
+            "norm_e": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: TransformerConfig, params) -> int:
+    """Active params per token (MoE: top_k + shared experts only)."""
+    total = param_count(params)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    routed_per_layer = m.n_experts * (cfg.d_model * 2 * m.d_ff + m.d_ff * cfg.d_model)
+    n_moe = cfg.n_layers - cfg.n_dense_layers
+    inactive = n_moe * routed_per_layer * (1 - m.top_k / m.n_experts)
+    return int(total - inactive)
+
+
+# ------------------------------------------------------------- attention
+
+def _attn_gqa(p: dict, x: jax.Array, positions: jax.Array, window,
+              cfg: TransformerConfig, kv_caches=None, cur_len=None):
+    """Returns (out, (k, v)) — k/v for cache building, or attends against
+    kv_caches (decode) when given."""
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, kv, dh)
+    v = (x @ p["wv"]).reshape(b, s, kv, dh)
+    q = cm.apply_rope(q, positions, cfg.rope_theta, cfg.rotary_frac,
+                      cfg.rope_interleaved)
+    k = cm.apply_rope(k, positions, cfg.rope_theta, cfg.rotary_frac,
+                      cfg.rope_interleaved)
+    q = constrain(q, "act_bshd")
+    k = constrain(k, "act_bskd")
+    v = constrain(v, "act_bskd")
+    if kv_caches is not None:
+        k_cache, v_cache = kv_caches
+        pos = jnp.asarray(cur_len - 1, jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
+        k_cache = constrain(k_cache, "kv_cache")
+        v_cache = constrain(v_cache, "kv_cache")
+        o = cm.decode_attention(q, k_cache, v_cache, cur_len, window=window,
+                                logit_cap=cfg.attn_softcap)
+        new_cache = (k_cache, v_cache)
+    else:
+        o = cm.blockwise_attention(q, k, v, causal=True, window=window,
+                                   q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                   logit_cap=cfg.attn_softcap,
+                                   unroll=cfg.attn_unroll)
+        new_cache = (k, v)
+    o = constrain(o, "act_bshd")
+    out = o.reshape(b, s, h * dh) @ p["wo"]
+    return out, new_cache
+
+
+def _attn_mla(p: dict, x: jax.Array, positions: jax.Array, window,
+              cfg: TransformerConfig, kv_caches=None, cur_len=None):
+    """MLA: latent-compressed KV. Train path up-projects (faithful); decode
+    path uses the absorbed formulation against the latent cache."""
+    m = cfg.mla or MLAConfig()
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv, r = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
+
+    cq = cm.rms_norm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    qall = (cq @ p["wuq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = qall[..., :dn], qall[..., dn:]
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = cm.rms_norm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)   # (b,s,r)
+    kr = cm.apply_rope((x @ p["wkr"])[:, :, None, :], positions,
+                       cfg.rope_theta)[:, :, 0, :]                  # (b,s,dr)
+    scale = (dn + dr) ** -0.5
+
+    if kv_caches is not None:
+        ckv_cache, kr_cache = kv_caches
+        pos = jnp.asarray(cur_len - 1, jnp.int32)
+        ckv_cache = jax.lax.dynamic_update_slice_in_dim(ckv_cache, ckv, pos, 1)
+        kr_cache = jax.lax.dynamic_update_slice_in_dim(kr_cache, kr, pos, 1)
+        ckv_cache = constrain(ckv_cache, "mla_cache")
+        kr_cache = constrain(kr_cache, "mla_cache_r")
+        # absorbed attention: score via latent space, O(S*r) per head
+        wuk = p["wuk"].reshape(r, h, dn)
+        q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wuk)           # (b,1,h,r)
+        s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(jnp.float32),
+                           ckv_cache.astype(jnp.float32))
+        s_rope = jnp.einsum("bqhe,bse->bhqs", q_rope.astype(jnp.float32),
+                            kr_cache.astype(jnp.float32))
+        sc = (s_lat + s_rope) * scale
+        spos = jnp.arange(ckv_cache.shape[1])
+        valid = spos[None, :] < cur_len.reshape(-1, 1)
+        sc = jnp.where(valid[:, None, None, :], sc, cm.NEG_INF)
+        pr = jax.nn.softmax(sc, axis=-1)
+        o_lat = jnp.einsum("bhqs,bsr->bqhr", pr,
+                           ckv_cache.astype(jnp.float32))
+        wuv = p["wuv"].reshape(r, h, dv)
+        o = jnp.einsum("bqhr,rhv->bqhv", o_lat, wuv.astype(jnp.float32))
+        new_cache = (ckv_cache, kr_cache)
+    else:
+        k_nope = (ckv @ p["wuk"]).reshape(b, s, h, dn)
+        vfull = (ckv @ p["wuv"]).reshape(b, s, h, dv)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr[:, :, None, :], (b, s, h, dr))], axis=-1)
+        q = constrain(q, "act_bshd")
+        k = constrain(k, "act_bshd")
+        vfull = constrain(vfull, "act_bshd")
+        o = cm.blockwise_attention(q, k, vfull, causal=True, window=window,
+                                   q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                   logit_cap=cfg.attn_softcap, scale=scale,
+                                   unroll=cfg.attn_unroll)
+        new_cache = (ckv, kr)
+    o = constrain(o.astype(x.dtype), "act_bshd")
+    out = o.reshape(b, s, h * dv) @ p["wo"]
+    return out, new_cache
+
+
+def _attention(p, x, positions, window, cfg, kv_caches=None, cur_len=None):
+    fn = _attn_mla if cfg.attention == "mla" else _attn_gqa
+    return fn(p, x, positions, window, cfg, kv_caches, cur_len)
+
+
+# ----------------------------------------------------------------- block
+
+def _dense_ffn(p: dict, x: jax.Array) -> jax.Array:
+    h = x @ p["wi"]
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    h = constrain(h, "act_bsf")
+    return h @ p["wo"]
+
+
+def _block(p: dict, x: jax.Array, positions, window, cfg: TransformerConfig,
+           kind: str, kv_caches=None, cur_len=None):
+    norm = functools.partial(cm.rms_norm, eps=cfg.norm_eps,
+                             zero_centered=cfg.zero_centered_norm)
+    a_in = norm(x, p["pre_attn_norm"])
+    a_out, new_cache = _attention(p["attn"], a_in, positions, window, cfg,
+                                  kv_caches, cur_len)
+    if cfg.use_post_norm:
+        a_out = norm(a_out, p["post_attn_norm"])
+    x = constrain(x + a_out, "act_bsd")
+
+    f_in = norm(x, p["pre_ffn_norm"])
+    if kind == "moe":
+        from repro.dist.api import active_mesh
+        from repro.models.moe import moe_ffn_sharded
+        b, s, d = f_in.shape
+        mesh = active_mesh()
+        dp_prod = 1
+        if mesh is not None:
+            for ax in mesh.axis_names:
+                if ax != "model":
+                    dp_prod *= mesh.shape[ax]
+        if mesh is not None and "model" in mesh.axis_names \
+                and cfg.moe.n_experts % mesh.shape["model"] == 0 \
+                and mesh.devices.size > 1 \
+                and (b * s) % dp_prod == 0:  # tiny decode batches: GSPMD path
+            out = moe_ffn_sharded(p["ffn"], f_in.reshape(b * s, d), cfg.moe,
+                                  mesh)
+        else:
+            out = moe_ffn(p["ffn"], f_in.reshape(b * s, d), cfg.moe)
+        f_out, aux = out.y.reshape(b, s, d), out.aux_loss
+    else:
+        f_out, aux = _dense_ffn(p["ffn"], f_in), jnp.zeros((), jnp.float32)
+    if cfg.use_post_norm:
+        f_out = norm(f_out, p["post_ffn_norm"])
+    x = constrain(x + f_out, "act_bsd")
+    return x, aux, new_cache
+
+
+# --------------------------------------------------------------- forward
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def forward(params: dict, tokens: jax.Array, cfg: TransformerConfig, *,
+            return_kv: bool = False, kv_len: Optional[int] = None,
+            remat: str = "full"):
+    """Causal forward pass (training / prefill).
+
+    Returns (logits, aux_loss, hidden, kv_caches_per_group).
+    kv caches (when return_kv) are written into (count, B, kv_len, ...) bufs.
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    x = constrain(x, "act_bsd")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    windows = cfg.window_schedule()
+    kv_len = kv_len or s
+
+    policy = REMAT_POLICIES[remat]
+    total_aux = jnp.zeros((), jnp.float32)
+    caches = []
+    base = 0
+    for gi, (kind, count) in enumerate(cfg.layer_groups()):
+        stack = params[f"group{gi}_{kind}"]
+        win_g = jax.lax.dynamic_slice_in_dim(windows, base, count)
+
+        def body(x, scanned, kind=kind):
+            p, win = scanned
+            x, aux, kv = _block(p, x, positions, win, cfg, kind)
+            if return_kv:
+                pad = [(0, 0), (0, kv_len - s)] + [(0, 0)] * (kv[0].ndim - 2)
+                kv = tuple(jnp.pad(c, pad) for c in kv)
+                names = (("mla_cache", "mla_cache_r") if cfg.attention == "mla"
+                         else ("kv_cache", "kv_cache"))
+                kv = tuple(constrain(c, n) for c, n in zip(kv, names))
+                return x, (aux, kv)
+            return x, (aux, None)
+
+        fn = body if policy is None and remat == "none" else jax.checkpoint(
+            body, policy=policy, prevent_cse=False)
+        x, (auxes, kv) = jax.lax.scan(fn, x, (stack, win_g),
+                                      unroll=count if cfg.layer_unroll else 1)
+        total_aux = total_aux + auxes.sum()
+        caches.append(kv)
+        base += count
+
+    hidden = cm.rms_norm(x, params["final_norm"], cfg.norm_eps,
+                         zero_centered=cfg.zero_centered_norm)
+    logits = _head(params, hidden, cfg)
+    return logits, total_aux, hidden, (caches if return_kv else None)
+
+
+def _head(params, hidden, cfg: TransformerConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = hidden @ w.astype(cfg.dtype)
+    logits = cm.softcap(logits, cfg.final_softcap)
+    return constrain(logits, "logits")
+
+
+def mtp_logits(params: dict, tokens: jax.Array, hidden: jax.Array,
+               cfg: TransformerConfig):
+    """DeepSeek-style MTP (depth 1): predict token t+2 from hidden_t and
+    embedding of token t+1."""
+    p = params["mtp"]
+    b, s = tokens.shape
+    emb_next = constrain(params["embed"][tokens].astype(cfg.dtype),
+                         "act_bsd")                          # teacher-forced t+1
+    hidden = constrain(hidden, "act_bsd")
+    h = jnp.concatenate([
+        cm.rms_norm(hidden, p["norm_h"], cfg.norm_eps),
+        cm.rms_norm(emb_next, p["norm_e"], cfg.norm_eps)], axis=-1) @ p["proj"]
+    h = constrain(h, "act_bsd")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    h, _aux, _kv = _block(p["block"], h, positions, 0, cfg, "dense")
+    return _head(params, cm.rms_norm(h, params["final_norm"], cfg.norm_eps), cfg)
+
+
+# ----------------------------------------------------------------- decode
+
+def init_kv_caches(cfg: TransformerConfig, batch: int, max_len: int):
+    """Per-group stacked decode caches."""
+    caches = []
+    for kind, count in cfg.layer_groups():
+        if cfg.attention == "mla":
+            m = cfg.mla or MLAConfig()
+            caches.append((
+                jnp.zeros((count, batch, max_len, m.kv_lora_rank), cfg.dtype),
+                jnp.zeros((count, batch, max_len, m.qk_rope_dim), cfg.dtype)))
+        else:
+            shape = (count, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            caches.append((jnp.zeros(shape, cfg.dtype),
+                           jnp.zeros(shape, cfg.dtype)))
+    return caches
+
+
+def decode_step(params: dict, token: jax.Array, caches, cur_len: jax.Array,
+                cfg: TransformerConfig):
+    """One token for the whole batch. token: (B,) int32; cur_len: scalar
+    (sequence length *including* this token). Returns (logits, new_caches)."""
+    b = token.shape[0]
+    x = params["embed"][token][:, None, :].astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    positions = jnp.broadcast_to(cur_len - 1, (b, 1)).astype(jnp.int32)
+    windows = cfg.window_schedule()
+    cur = jnp.asarray(cur_len, jnp.int32)  # scalar — aligned batch decode
+
+    new_caches = []
+    base = 0
+    for gi, (kind, count) in enumerate(cfg.layer_groups()):
+        stack = params[f"group{gi}_{kind}"]
+        win_g = jax.lax.dynamic_slice_in_dim(windows, base, count)
+
+        def body(x, scanned, kind=kind):
+            p, win, kv = scanned
+            x, _aux, new_kv = _block(p, x, positions, win, cfg, kind,
+                                     kv_caches=kv, cur_len=cur)
+            return x, new_kv
+
+        x, kv_out = jax.lax.scan(body, x, (stack, win_g, caches[gi]),
+                                 unroll=count if cfg.layer_unroll else 1)
+        new_caches.append(kv_out)
+        base += count
+
+    hidden = cm.rms_norm(x, params["final_norm"], cfg.norm_eps,
+                         zero_centered=cfg.zero_centered_norm)
+    return _head(params, hidden, cfg)[:, 0], new_caches

@@ -1,0 +1,102 @@
+"""End-to-end conversational search engine (Fig. 2 of the paper).
+
+Client side: query encoder (any LM backbone -> pooled, projected embedding)
++ per-session MetricCache.  Server side: sharded metric index behind the
+straggler-hedging router.  ``answer()`` implements Algorithm 1 with one
+resilience extension: if the back-end comes back *degraded* (some shards
+timed out), the turn still completes — and if the back-end fails entirely,
+a non-empty cache serves a best-effort answer (cache as fault tolerance).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import CacheConfig, MetricCache
+from repro.core.embedding import transform_queries
+from repro.serve.router import ShardAnswer, ShardedRouter
+
+
+def make_lm_query_encoder(params, cfg, proj: jax.Array):
+    """Mean-pooled final hidden states -> R^l -> Eq.1 transform.
+
+    proj: (d_model, l) projection to the retrieval space (in a full system
+    this is fine-tuned contrastively; here it is part of the encoder
+    params)."""
+    from repro.models import transformer as tf
+
+    @jax.jit
+    def encode(tokens: jax.Array) -> jax.Array:
+        _, _, hidden, _ = tf.forward(params, tokens, cfg, remat="none")
+        mask = (tokens >= 0)[..., None]
+        pooled = (hidden * mask).sum(1) / jnp.maximum(mask.sum(1), 1)
+        return transform_queries(pooled @ proj)
+
+    return encode
+
+
+@dataclasses.dataclass
+class EngineTurn:
+    ids: np.ndarray
+    scores: np.ndarray
+    hit: bool
+    degraded: bool
+    latency_s: float
+
+
+class ConversationalEngine:
+    """One engine instance serves one client session at a time (the paper's
+    client model); the router/back-end is shared across engines."""
+
+    def __init__(self, router: ShardedRouter, doc_embeddings: np.ndarray,
+                 *, dim: int, k: int = 10, k_c: int = 1000,
+                 epsilon: float = 0.04, capacity: Optional[int] = None,
+                 encoder: Optional[Callable] = None):
+        self.router = router
+        self.doc_embeddings = doc_embeddings   # transformed, host-side lookup
+        self.k, self.k_c, self.epsilon = k, k_c, epsilon
+        self.encoder = encoder
+        self.cache = MetricCache(CacheConfig(
+            capacity=capacity or 16 * k_c, dim=dim, epsilon=epsilon))
+        self.turns: list[EngineTurn] = []
+
+    def start_session(self):
+        self.cache.reset()
+        self.turns = []
+
+    def answer(self, query) -> EngineTurn:
+        t0 = time.perf_counter()
+        psi = self.encoder(query) if self.encoder else jnp.asarray(query)
+        probe = self.cache.probe(psi)
+        need_backend = self.cache.n_queries == 0 or not bool(probe.hit)
+        degraded = False
+        if need_backend:
+            try:
+                ans, degraded = self.router.search(
+                    np.asarray(psi)[None], self.k_c)
+                ids = ans.ids[0]
+                emb = jnp.asarray(self.doc_embeddings[ids])
+                radius = float(np.sqrt(max(0.0, 2.0 - 2.0 * ans.scores[0, -1])))
+                self.cache.insert(psi, radius, emb, jnp.asarray(ids))
+            except TimeoutError:
+                # total back-end failure: fall back to the cache if possible
+                degraded = True
+                if self.cache.n_docs == 0:
+                    raise
+        scores, dists, ids, _ = self.cache.query(psi, self.k)
+        turn = EngineTurn(ids=np.asarray(ids), scores=np.asarray(scores),
+                          hit=not need_backend, degraded=degraded,
+                          latency_s=time.perf_counter() - t0)
+        self.turns.append(turn)
+        return turn
+
+    def hit_rate(self) -> float:
+        if len(self.turns) <= 1:
+            return float("nan")
+        return float(np.mean([t.hit for t in self.turns[1:]]))

@@ -1,0 +1,121 @@
+"""Serving router: micro-batching + straggler mitigation + degraded answers.
+
+The back-end index is a set of shard handles (callables).  Production
+posture for thousands of nodes:
+
+  * **Micro-batching**: concurrent session queries are batched before the
+    scan (the paper batches 216 queries into FAISS for the same reason).
+  * **Hedging / straggler mitigation**: each shard call runs with a
+    deadline; shards that miss it are retried once (hedge), and if the
+    retry also misses, the router returns a *degraded* answer assembled
+    from the shards that did respond — the merge of per-shard top-k is
+    correct on the surviving subset.
+  * **Cache as fault tolerance**: when the client holds a CACHE, a degraded
+    or failed back-end turn can still be answered from cached embeddings —
+    the paper's mechanism doubles as a resilience layer (tested).
+
+This module is deliberately execution-agnostic (thread pool here; the same
+logic fronts RPC stubs on a real cluster).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ShardAnswer:
+    scores: np.ndarray     # (B, k)
+    ids: np.ndarray        # (B, k)
+
+
+@dataclasses.dataclass
+class RouterStats:
+    calls: int = 0
+    hedges: int = 0
+    failures: int = 0
+    degraded: int = 0
+
+
+class ShardedRouter:
+    """shards: callables (queries, k) -> ShardAnswer, one per corpus shard."""
+
+    def __init__(self, shards: Sequence[Callable], deadline_s: float = 1.0,
+                 hedge_after_s: Optional[float] = None, max_workers: int = 16):
+        self.shards = list(shards)
+        self.deadline_s = deadline_s
+        self.hedge_after_s = hedge_after_s or deadline_s / 2
+        self.pool = cf.ThreadPoolExecutor(max_workers=max_workers)
+        self.stats = RouterStats()
+
+    def search(self, queries: np.ndarray, k: int) -> tuple[ShardAnswer, bool]:
+        """Scatter-gather with hedging. Returns (merged answer, degraded?)."""
+        futures = {self.pool.submit(s, queries, k): i
+                   for i, s in enumerate(self.shards)}
+        self.stats.calls += 1
+        answers: dict[int, ShardAnswer] = {}
+        deadline = time.monotonic() + self.deadline_s
+        hedge_at = time.monotonic() + self.hedge_after_s
+        hedged: set[int] = set()
+        pending = dict(futures)
+        while pending and time.monotonic() < deadline:
+            done, _ = cf.wait(list(pending), timeout=0.005,
+                              return_when=cf.FIRST_COMPLETED)
+            for f in done:
+                i = pending.pop(f)
+                try:
+                    if i not in answers:
+                        answers[i] = f.result()
+                except Exception:
+                    self.stats.failures += 1
+            # hedge slow shards once
+            if time.monotonic() >= hedge_at:
+                for f, i in list(pending.items()):
+                    if i not in hedged:
+                        hedged.add(i)
+                        self.stats.hedges += 1
+                        pending[self.pool.submit(self.shards[i], queries, k)] = i
+                hedge_at = float("inf")
+        for f in pending:
+            f.cancel()
+        degraded = len(answers) < len(self.shards)
+        if degraded:
+            self.stats.degraded += 1
+        if not answers:
+            raise TimeoutError("all index shards failed or timed out")
+        return self._merge(list(answers.values()), k), degraded
+
+    @staticmethod
+    def _merge(parts: list[ShardAnswer], k: int) -> ShardAnswer:
+        scores = np.concatenate([p.scores for p in parts], axis=1)
+        ids = np.concatenate([p.ids for p in parts], axis=1)
+        order = np.argsort(-scores, axis=1)[:, :k]
+        return ShardAnswer(np.take_along_axis(scores, order, axis=1),
+                           np.take_along_axis(ids, order, axis=1))
+
+
+class MicroBatcher:
+    """Groups requests arriving within a window into one back-end call."""
+
+    def __init__(self, fn: Callable, max_batch: int = 64,
+                 window_s: float = 0.002):
+        self.fn, self.max_batch, self.window_s = fn, max_batch, window_s
+        self._queue: list = []
+
+    def submit(self, query: np.ndarray):
+        self._queue.append(query)
+        if len(self._queue) >= self.max_batch:
+            return self.flush()
+        return None
+
+    def flush(self):
+        if not self._queue:
+            return []
+        batch = np.stack(self._queue)
+        self._queue = []
+        return self.fn(batch)

@@ -1,0 +1,215 @@
+"""Optimizers (optax is not installed offline — hand-rolled, pytree-native).
+
+* AdamW — default for <=10B-class models.
+* Adafactor — factored second moments; the only optimizer whose state fits
+  per-device HBM for the 123B/671B configs at 256 chips (see DESIGN.md §6).
+  Supports bf16 parameter training with stochastic rounding.
+
+Optimizer state pytrees mirror the parameter shardings, so ZeRO-style full
+state sharding falls out of the param PartitionSpecs for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable          # (grads, state, params) -> (new_params, new_state)
+    # (param_shapes_tree, param_spec_tree) -> OptState-shaped PartitionSpec tree
+    state_spec: Callable = None
+
+
+def _schedule(lr: float, warmup: int, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+    return lr * warm
+
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          warmup: int = 100, grad_clip: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(jnp.zeros((), jnp.int32),
+                        {"m": jax.tree.map(zeros, params),
+                         "v": jax.tree.map(zeros, params)})
+
+    def update(grads, state, params):
+        step = state.step + 1
+        if grad_clip is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr_t = _schedule(lr, warmup, step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state.inner["m"], state.inner["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(step, {"m": new_m, "v": new_v})
+
+    def state_spec(param_shapes, param_specs):
+        from jax.sharding import PartitionSpec as P
+        return OptState(P(), {"m": param_specs, "v": param_specs})
+
+    return Optimizer(init, update, state_spec)
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, warmup: int = 100,
+              stochastic_rounding: bool = True, seed: int = 0) -> Optimizer:
+    """Factored Adafactor (no momentum): O(rows + cols) state for matrices."""
+
+    def _factored(shape):
+        # factor only genuine matrices (both trailing dims substantial);
+        # layer-stacked vectors like (L, d) norms stay un-factored so the
+        # state never couples across the stack axis (required for the
+        # slice-at-a-time update below)
+        return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return OptState(jnp.zeros((), jnp.int32), {"v": jax.tree.map(
+            st, params, is_leaf=lambda x: isinstance(x, jax.Array))})
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** -decay
+        lr_t = _schedule(lr, warmup, step)
+        key = jax.random.fold_in(jax.random.key(seed), step)
+
+        def upd_slice(leaf_key, p, g, v):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)   # (..., R)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)   # (..., C)
+                r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                u = g * jax.lax.rsqrt(r)[..., :, None] \
+                      * jax.lax.rsqrt(jnp.maximum(vc, eps))[..., None, :]
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(vv)
+                new_v = {"v": vv}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            new_p32 = p.astype(jnp.float32) - lr_t * u
+            if p.dtype == jnp.bfloat16 and stochastic_rounding:
+                new_p = _stochastic_round_bf16(new_p32, leaf_key)
+            else:
+                new_p = new_p32.astype(p.dtype)
+            return new_p, new_v
+
+        def upd(i, p, g, v):
+            leaf_key = jax.random.fold_in(key, i)
+            if p.ndim >= 3:
+                # layer-stacked leaf: fori_loop one layer slice at a time so
+                # f32/u32 optimizer transients (incl. stochastic-rounding
+                # noise) are per-layer, not whole-stack (whole-stack u32
+                # noise alone was 38 GiB/device on the 671B cell).
+                # dynamic_slice reads + in-place dynamic_update keep the
+                # stack buffers aliased (lax.map would copy the xs).
+                def body(j, carry):
+                    out_p, out_v = carry
+                    ps = jax.lax.dynamic_index_in_dim(p, j, keepdims=False)
+                    gs = jax.lax.dynamic_index_in_dim(g, j, keepdims=False)
+                    vs = jax.tree.map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, j, keepdims=False), v)
+                    np_s, nv_s = upd_slice(jax.random.fold_in(leaf_key, j),
+                                           ps, gs, vs)
+                    out_p = jax.lax.dynamic_update_index_in_dim(
+                        out_p, np_s.astype(out_p.dtype), j, 0)
+                    out_v = jax.tree.map(
+                        lambda a, b: jax.lax.dynamic_update_index_in_dim(
+                            a, b, j, 0), out_v, nv_s)
+                    return out_p, out_v
+                return jax.lax.fori_loop(0, p.shape[0], body, (p, v))
+            return upd_slice(leaf_key, p, g, v)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_v = treedef.flatten_up_to(state.inner["v"])
+        outs = [upd(i, p, g, v)
+                for i, (p, g, v) in enumerate(zip(flat_p, flat_g, flat_v))]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_v = treedef.unflatten([o[1] for o in outs])
+        return new_params, OptState(step, {"v": new_v})
+
+    def state_spec(param_shapes, param_specs):
+        from jax.sharding import PartitionSpec as P
+
+        def st(p, spec):
+            full = tuple(spec) + (None,) * (p.ndim - len(tuple(spec)))
+            if _factored(p.shape):
+                return {"vr": P(*full[:-1]), "vc": P(*(full[:-2] + full[-1:]))}
+            return {"v": P(*full)}
+
+        v = jax.tree.map(st, param_shapes, param_specs,
+                         is_leaf=lambda x: hasattr(x, "shape"))
+        return OptState(P(), {"v": v})
+
+    return Optimizer(init, update, state_spec)
+
+
+def _stochastic_round_bf16(x32: jax.Array, key: jax.Array) -> jax.Array:
+    """Unbiased f32 -> bf16 rounding: add uniform noise below the bf16 LSB."""
+    bits = jax.lax.bitcast_convert_type(x32, jnp.uint32)
+    noise = jax.random.randint(key, x32.shape, 0, 1 << 16, jnp.uint32)
+    return jax.lax.bitcast_convert_type(
+        (bits + noise) & jnp.uint32(0xFFFF0000), jnp.float32).astype(jnp.bfloat16)
+
+
+def _sum_sq(leaf) -> jax.Array:
+    """Sum of squares in f32. Layer-stacked leaves are reduced one slice at
+    a time (fori_loop) so the f32 upcast transient is per-layer, and the
+    sequential dependency chain keeps only one copy live."""
+    if leaf.ndim >= 3:
+        def body(i, acc):
+            s = jax.lax.dynamic_index_in_dim(leaf, i, keepdims=False)
+            s = s.astype(jnp.float32)
+            return acc + jnp.sum(s * s)
+        return jax.lax.fori_loop(0, leaf.shape[0], body,
+                                 jnp.zeros((), jnp.float32))
+    x = leaf.astype(jnp.float32)
+    return jnp.sum(x * x)
+
+
+def global_norm(tree) -> jax.Array:
+    total = jnp.zeros((), jnp.float32)
+    for l in jax.tree.leaves(tree):      # chained adds => sequenced, 1 live
+        total = total + _sum_sq(l)
+    return jnp.sqrt(total)

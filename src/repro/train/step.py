@@ -1,0 +1,104 @@
+"""Train-step factories: loss, grad accumulation, optimizer application.
+
+``make_lm_train_step`` is what the dry-run lowers for the 5 LM architectures
+(``train_4k``).  Grad accumulation scans microbatches with a donated f32
+accumulator; remat policy comes from the model config.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import transformer as tf
+from repro.train.optimizer import Optimizer, global_norm
+
+
+def lm_loss_fn(params, batch, cfg: tf.TransformerConfig, remat: str = "full"):
+    logits, aux, hidden, _ = tf.forward(params, batch["tokens"], cfg, remat=remat)
+    loss = cm.cross_entropy(logits, batch["labels"])
+    total = loss + aux
+    if cfg.mtp:
+        m_logits = tf.mtp_logits(params, batch["tokens"], hidden, cfg)
+        # MTP predicts token t+2: labels shifted one more step
+        mtp_labels = jnp.pad(batch["labels"][:, 1:], ((0, 0), (0, 1)),
+                             constant_values=-1)
+        total = total + cfg.mtp_weight * cm.cross_entropy(m_logits, mtp_labels)
+    return total, {"ce": loss, "aux": aux}
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer,
+                    accum_steps: int = 1, unroll_accum: bool = False,
+                    grad_shardings=None, accum_dtype=jnp.float32):
+    """loss_fn(params, microbatch) -> (scalar, metrics dict).
+
+    Returns train_step(state, batch) -> (state, metrics); ``state`` is
+    {"params": ..., "opt": OptState}. With accum_steps > 1, the leading batch
+    axis is split into microbatches scanned with an f32 grad accumulator —
+    activation temps scale as 1/accum_steps (the lever that fits the 123B /
+    671B train cells in 16 GiB HBM).  ``unroll_accum`` unrolls the
+    microbatch scan so calibration cost-counting sees every trip.
+    """
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+            # (p * 0) instead of zeros(): the accumulator DERIVES from the
+            # param so SPMD propagates the param sharding — plain zeros were
+            # materialized replicated (measured +10 GiB/device on deepseek).
+            # accum_dtype=bf16 halves the persistent accumulator: required to
+            # fit 671B-class training on a single 256-chip pod (f32 fits at
+            # 512 chips; see EXPERIMENTS.md §Dry-run).
+            acc0 = jax.tree.map(lambda p: (p * 0).astype(accum_dtype), params)
+
+            def _pin(tree):
+                # keep grads reduce-scattered onto the param shardings inside
+                # the loop — without this XLA all-gathers the FSDP axis of
+                # every grad (measured +8 GiB/device on the 671B cell)
+                if grad_shardings is None:
+                    return tree
+                return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                                    grad_shardings)
+
+            acc0 = _pin(acc0)
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                g = _pin(g)
+                acc = _pin(jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), acc, g))
+                return acc, (l, m)
+
+            grads, (losses, metricses) = jax.lax.scan(
+                body, acc0, micro, unroll=accum_steps if unroll_accum else 1)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), metricses)
+
+        new_params, new_opt = optimizer.update(grads, state["opt"], params)
+        metrics = dict(metrics, loss=loss, grad_norm=global_norm(grads))
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_lm_train_step(cfg: tf.TransformerConfig, optimizer: Optimizer,
+                       accum_steps: int = 1, remat: str = "full",
+                       grad_shardings=None, accum_dtype=jnp.float32):
+    loss = functools.partial(lm_loss_fn, cfg=cfg, remat=remat)
+    return make_train_step(lambda p, b: loss(p, b), optimizer, accum_steps,
+                           unroll_accum=cfg.layer_unroll,
+                           grad_shardings=grad_shardings,
+                           accum_dtype=accum_dtype)

@@ -1,0 +1,173 @@
+"""Unit + property tests for the paper's core: transform, index, cache, driver."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import embedding as emb
+from repro.core.cache import CacheConfig, MetricCache, init_cache, insert, probe, query
+from repro.core.conversation import ConversationalSearcher
+from repro.core.metric_index import MetricIndex, chunked_nn, exact_nn
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------- transform
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("dim", [8, 64, 768])
+def test_mips_l2_equivalence(seed, dim):
+    """Property (paper Eq. 1): argsort by inner product == argsort by -L2."""
+    rng = np.random.default_rng(seed)
+    docs = rng.standard_normal((200, dim)) * rng.uniform(0.5, 2.0, (200, 1))
+    q = rng.standard_normal((3, dim))
+    docs_t, m = emb.transform_documents(jnp.asarray(docs))
+    q_t = emb.transform_queries(jnp.asarray(q))
+    # unit-norm check
+    np.testing.assert_allclose(np.linalg.norm(docs_t, axis=1), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.linalg.norm(q_t, axis=1), 1.0, atol=1e-5)
+    ip_rank = np.argsort(-(q @ docs.T), axis=1)
+    d = np.asarray(emb.pairwise_distances(q_t, docs_t))
+    l2_rank = np.argsort(d, axis=1)
+    np.testing.assert_array_equal(ip_rank[:, :20], l2_rank[:, :20])
+
+
+def test_transform_incremental_batches_share_m():
+    rng = np.random.default_rng(0)
+    docs = rng.standard_normal((100, 16))
+    all_t, m = emb.transform_documents(jnp.asarray(docs))
+    part_t, _ = emb.transform_documents(jnp.asarray(docs[:50]), max_norm=m)
+    np.testing.assert_allclose(np.asarray(all_t[:50]), np.asarray(part_t), atol=1e-6)
+
+
+# ---------------------------------------------------------------- index
+@pytest.mark.parametrize("n,chunk", [(100, 32), (256, 64), (1000, 128)])
+def test_chunked_equals_exact(n, chunk):
+    rng = np.random.default_rng(1)
+    docs = rng.standard_normal((n, 32)).astype(np.float32)
+    q = rng.standard_normal((5, 32)).astype(np.float32)
+    idx = MetricIndex(jnp.asarray(docs), chunk=chunk)
+    qt = idx.transform_queries(jnp.asarray(q))
+    res = idx.search(qt, k=10)
+    ref = exact_nn(idx.doc_emb[:n], idx.doc_ids[:n], qt, 10)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+    np.testing.assert_allclose(np.asarray(res.scores), np.asarray(ref.scores), rtol=1e-5)
+
+
+def test_index_distances_sorted_ascending():
+    rng = np.random.default_rng(2)
+    idx = MetricIndex(jnp.asarray(rng.standard_normal((300, 16)).astype(np.float32)))
+    qt = idx.transform_queries(jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32)))
+    res = idx.search(qt, k=25)
+    d = np.asarray(res.distances)
+    assert (np.diff(d, axis=1) >= -1e-6).all()
+
+
+# ---------------------------------------------------------------- cache ops
+def _mini_world(seed=0, n=500, dim=24):
+    rng = np.random.default_rng(seed)
+    docs = rng.standard_normal((n, dim)).astype(np.float32)
+    idx = MetricIndex(jnp.asarray(docs))
+    return rng, idx
+
+
+def test_cache_probe_empty_is_miss():
+    cfg = CacheConfig(capacity=64, dim=25)
+    st = init_cache(cfg)
+    pr = probe(st, jnp.ones((25,)) / 5.0, cfg.epsilon)
+    assert not bool(pr.hit) and int(pr.nearest_q) == -1
+
+
+def test_cache_insert_query_roundtrip_and_dedup():
+    rng, idx = _mini_world()
+    cfg = CacheConfig(capacity=128, dim=idx.dim)
+    cache = MetricCache(cfg)
+    q = idx.transform_queries(jnp.asarray(rng.standard_normal(24).astype(np.float32)))
+    res = idx.search(q[None], 50)
+    docs = idx.doc_emb[res.ids[0]]
+    cache.insert(q, res.distances[0, -1], docs, res.ids[0])
+    assert cache.n_docs == 50 and cache.n_queries == 1
+    # idempotent re-insert (dedup)
+    cache.insert(q, res.distances[0, -1], docs, res.ids[0])
+    assert cache.n_docs == 50
+    (scores, dists, ids, _) = cache.query(q, 10)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(res.ids[0, :10]))
+
+
+def test_cache_hit_guarantee():
+    """Metric-space guarantee: if psi falls r_hat>=0 inside a cached ball, the
+    docs within the inner ball returned from cache are the exact global NNs."""
+    rng, idx = _mini_world(seed=3, n=800)
+    cfg = CacheConfig(capacity=512, dim=idx.dim)
+    cache = MetricCache(cfg)
+    base = rng.standard_normal(24).astype(np.float32)
+    qa = idx.transform_queries(jnp.asarray(base))
+    res = idx.search(qa[None], 400)
+    cache.insert(qa, res.distances[0, -1], idx.doc_emb[res.ids[0]], res.ids[0])
+    # nearby query
+    qb = idx.transform_queries(jnp.asarray(base + 0.05 * rng.standard_normal(24).astype(np.float32)))
+    pr = cache.probe(qb, epsilon=0.0)
+    assert bool(pr.hit)
+    (_, dists, ids, _) = cache.query(qb, 5)
+    exact = idx.search(qb[None], 5)
+    r_hat = float(pr.r_hat)
+    # every returned doc strictly inside the inner ball must be exact
+    inner = np.asarray(dists) <= r_hat + 1e-6
+    np.testing.assert_array_equal(np.asarray(ids)[inner], np.asarray(exact.ids[0])[inner])
+
+
+def test_cache_overflow_drops_and_counts():
+    rng, idx = _mini_world()
+    cfg = CacheConfig(capacity=30, dim=idx.dim)
+    cache = MetricCache(cfg)
+    q = idx.transform_queries(jnp.asarray(rng.standard_normal(24).astype(np.float32)))
+    res = idx.search(q[None], 50)
+    cache.insert(q, res.distances[0, -1], idx.doc_emb[res.ids[0]], res.ids[0])
+    assert cache.n_docs == 30 and cache.total_dropped == 20
+
+
+@pytest.mark.parametrize("eviction", ["lru", "ball"])
+def test_cache_eviction_keeps_capacity(eviction):
+    rng, idx = _mini_world(seed=5)
+    cfg = CacheConfig(capacity=64, dim=idx.dim, eviction=eviction)
+    cache = MetricCache(cfg)
+    for i in range(4):
+        q = idx.transform_queries(jnp.asarray(rng.standard_normal(24).astype(np.float32)))
+        res = idx.search(q[None], 40)
+        cache.insert(q, res.distances[0, -1], idx.doc_emb[res.ids[0]], res.ids[0])
+        (_, _, ids, _) = cache.query(q, 10)
+        assert (np.asarray(ids) >= 0).all()
+    assert cache.n_docs <= 64
+
+
+# ---------------------------------------------------------------- driver
+def test_conversation_first_turn_always_miss():
+    _, idx = _mini_world()
+    s = ConversationalSearcher(index=idx, k=5, k_c=100)
+    s.start_conversation()
+    rng = np.random.default_rng(7)
+    rec = s.answer(idx.transform_queries(jnp.asarray(rng.standard_normal(24).astype(np.float32))))
+    assert not rec.hit and rec.cache_docs == 100
+
+
+def test_static_policy_never_updates():
+    rng, idx = _mini_world()
+    s = ConversationalSearcher(index=idx, k=5, k_c=100, policy="static")
+    s.start_conversation()
+    base = rng.standard_normal(24).astype(np.float32)
+    for t in range(5):
+        q = idx.transform_queries(jnp.asarray(base + 0.3 * t * rng.standard_normal(24).astype(np.float32)))
+        s.answer(q)
+    assert s.cache.n_queries == 1 and s.hit_rate() == 1.0
+
+
+def test_dynamic_policy_updates_on_topic_shift():
+    rng, idx = _mini_world(seed=11, n=1000)
+    s = ConversationalSearcher(index=idx, k=5, k_c=50, epsilon=0.04)
+    s.start_conversation()
+    a = rng.standard_normal(24).astype(np.float32)
+    b = -a  # antipodal topic
+    s.answer(idx.transform_queries(jnp.asarray(a)))
+    rec = s.answer(idx.transform_queries(jnp.asarray(b)))
+    assert not rec.hit  # far query must trigger an update
+    assert s.cache.n_queries == 2

@@ -1,0 +1,62 @@
+"""Interpret-mode validation of the fused LowQuality probe kernel."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cache_probe.ops import cache_probe
+from repro.kernels.cache_probe.ref import probe_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _case(seed, qmax, d, n):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((qmax, d)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    psi = rng.standard_normal(d).astype(np.float32)
+    psi /= np.linalg.norm(psi)
+    radius = rng.uniform(0.2, 1.2, qmax).astype(np.float32)
+    return (jnp.asarray(q), jnp.asarray(psi), jnp.asarray(radius),
+            jnp.asarray(n, jnp.int32))
+
+
+@pytest.mark.parametrize("qmax,d,n", [(64, 769, 5), (16, 128, 16),
+                                      (8, 64, 0), (33, 200, 12)])
+@pytest.mark.parametrize("eps", [0.0, 0.04, 0.5])
+def test_probe_matches_ref(qmax, d, n, eps):
+    q, psi, radius, nq = _case(qmax + d, qmax, d, n)
+    hit_k, r_k, i_k = cache_probe(q, psi, radius, nq, eps, interpret=True)
+    hit_r, r_r, i_r = probe_ref(q, psi, radius, nq, eps)
+    assert bool(hit_k) == bool(hit_r)
+    if n > 0:
+        np.testing.assert_allclose(float(r_k), float(r_r), rtol=1e-5,
+                                   atol=1e-5)
+        assert int(i_k) == int(i_r)
+    else:
+        assert int(i_k) == -1
+
+
+def test_probe_agrees_with_core_cache():
+    from repro.core.cache import CacheConfig, MetricCache
+    from repro.core.metric_index import MetricIndex
+    rng = np.random.default_rng(3)
+    idx = MetricIndex(jnp.asarray(rng.standard_normal((500, 64)), jnp.float32))
+    cache = MetricCache(CacheConfig(capacity=256, dim=idx.dim, max_queries=8))
+    for i in range(3):
+        qq = idx.transform_queries(jnp.asarray(
+            rng.standard_normal(64), jnp.float32))
+        res = idx.search(qq[None], 50)
+        cache.insert(qq, res.distances[0, -1], idx.doc_emb[res.ids[0]],
+                     res.ids[0])
+    psi = idx.transform_queries(jnp.asarray(rng.standard_normal(64),
+                                            jnp.float32))
+    pr = cache.probe(psi)
+    st = cache.state
+    hit_k, r_k, i_k = cache_probe(st.q_emb, psi, st.q_radius, st.n_queries,
+                                  cache.cfg.epsilon, interpret=True)
+    assert bool(hit_k) == bool(pr.hit)
+    np.testing.assert_allclose(float(r_k), float(pr.r_hat), rtol=1e-5,
+                               atol=1e-5)
+    assert int(i_k) == int(pr.nearest_q)

@@ -1,0 +1,224 @@
+"""End-to-end system tests: conversational engine + router fault tolerance,
+checkpoint/restart, elastic meshes, data-pipeline determinism."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metric_index import MetricIndex
+from repro.data.conversations import WorldConfig, make_world
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL_WORLD = WorldConfig(n_topics=6, docs_per_topic=400, n_background=2000,
+                          dim=128, subspace_dim=8, turns=6,
+                          n_conversations=4, doc_sigma=0.6, query_sigma=0.12,
+                          drift_sigma=0.16, subtopic_prob=0.35,
+                          subtopic_sigma=0.75, seed=3)
+
+
+@pytest.fixture(scope="module")
+def world():
+    return make_world(SMALL_WORLD)
+
+
+@pytest.fixture(scope="module")
+def index(world):
+    return MetricIndex(jnp.asarray(world.doc_emb, jnp.float32))
+
+
+# ------------------------------------------------------- Algorithm 1 e2e
+def test_dynamic_cache_end_to_end(world, index):
+    from repro.core.conversation import ConversationalSearcher
+    s = ConversationalSearcher(index=index, k=10, k_c=150, epsilon=0.04,
+                               measure_coverage=True)
+    hits, covs = [], []
+    for conv in world.conversations:
+        s.start_conversation()
+        qt = index.transform_queries(jnp.asarray(conv.queries, jnp.float32))
+        for t in range(conv.queries.shape[0]):
+            rec = s.answer(qt[t])
+            covs.append(rec.coverage)
+            if t:
+                hits.append(rec.hit)
+    assert np.mean(covs) > 0.85          # paper: cov10 0.89-0.96
+    assert 0.2 < np.mean(hits) <= 1.0    # real reuse happens
+
+
+# ----------------------------------------------- router fault tolerance
+def _make_shards(index, n_shards, delays=None, fail=()):
+    """Split the corpus into host-side shard callables with fault injection."""
+    import numpy as np
+    from repro.serve.router import ShardAnswer
+    docs = np.asarray(index.doc_emb[:index.n_docs])
+    ids = np.arange(index.n_docs)
+    bounds = np.linspace(0, index.n_docs, n_shards + 1).astype(int)
+    shards = []
+    for i in range(n_shards):
+        lo, hi = bounds[i], bounds[i + 1]
+        d, did = docs[lo:hi], ids[lo:hi]
+
+        def shard(queries, k, d=d, did=did, i=i):
+            if i in fail:
+                raise RuntimeError(f"shard {i} down")
+            if delays and delays.get(i):
+                time.sleep(delays[i])
+            scores = queries @ d.T
+            top = np.argsort(-scores, axis=1)[:, :k]
+            return ShardAnswer(np.take_along_axis(scores, top, axis=1),
+                               did[top])
+        shards.append(shard)
+    return shards
+
+
+def test_router_merge_matches_exact(world, index):
+    from repro.serve.router import ShardedRouter
+    rng = np.random.default_rng(0)
+    q = np.asarray(index.transform_queries(
+        jnp.asarray(rng.standard_normal((3, world.cfg.dim)), jnp.float32)))
+    router = ShardedRouter(_make_shards(index, 4), deadline_s=10)
+    ans, degraded = router.search(q, 20)
+    assert not degraded
+    exact = index.search(jnp.asarray(q), 20)
+    np.testing.assert_array_equal(ans.ids, np.asarray(exact.ids))
+
+
+def test_router_hedges_stragglers_and_degrades(world, index):
+    from repro.serve.router import ShardedRouter
+    rng = np.random.default_rng(1)
+    q = np.asarray(index.transform_queries(
+        jnp.asarray(rng.standard_normal((2, world.cfg.dim)), jnp.float32)))
+    # shard 1 is a permanent straggler; shard 2 hard-fails
+    router = ShardedRouter(_make_shards(index, 4, delays={1: 5.0}, fail={2}),
+                           deadline_s=0.5, hedge_after_s=0.1)
+    ans, degraded = router.search(q, 10)
+    assert degraded
+    assert router.stats.hedges >= 1 and router.stats.failures >= 1
+    assert ans.ids.shape == (2, 10)      # merged from surviving shards
+
+
+def test_engine_cache_survives_backend_outage(world, index):
+    from repro.serve.engine import ConversationalEngine
+    from repro.serve.router import ShardedRouter
+    shards = _make_shards(index, 2)
+    router = ShardedRouter(shards, deadline_s=5)
+    eng = ConversationalEngine(router, np.asarray(index.doc_emb),
+                               dim=index.dim, k=5, k_c=100)
+    eng.start_session()
+    conv = world.conversations[0]
+    qt = index.transform_queries(jnp.asarray(conv.queries, jnp.float32))
+    eng.answer(np.asarray(qt[0]))                    # warm the cache
+    # back-end goes down entirely: the cache must still answer
+    router.shards = _make_shards(index, 2, fail={0, 1})
+    turn = eng.answer(np.asarray(qt[1]))
+    assert turn.ids.shape == (5,) and (turn.ids >= 0).all()
+
+
+# --------------------------------------------------------- checkpointing
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    from repro.checkpoint import restore_tree, save_tree
+    from repro.checkpoint.manager import latest_step
+    tree = {"w": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.int32)},
+            "scalar": jnp.asarray(3)}
+    for step in (1, 2, 3, 4):
+        save_tree(tree, str(tmp_path), step, keep=2)
+    assert latest_step(str(tmp_path)) == 4
+    assert not os.path.isdir(tmp_path / "step_1")     # gc'd
+    out = restore_tree(tree, str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    np.testing.assert_array_equal(np.asarray(out["nested"]["b"]),
+                                  np.asarray(tree["nested"]["b"]))
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    from repro.checkpoint import restore_tree, save_tree
+    tree = {"w": jnp.ones((4, 4))}
+    save_tree(tree, str(tmp_path), 1)
+    # flip a byte in the leaf file
+    leaf = tmp_path / "step_1" / "leaf_00000.npy"
+    data = bytearray(leaf.read_bytes())
+    data[-1] ^= 0xFF
+    leaf.write_bytes(bytes(data))
+    with pytest.raises(IOError, match="corruption"):
+        restore_tree(tree, str(tmp_path))
+
+
+def test_checkpoint_manager_async_and_resume(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), interval=2, keep=2)
+    tree = {"p": jnp.zeros((8,))}
+    for step in range(1, 6):
+        tree = {"p": tree["p"] + 1}
+        mgr.maybe_save(step, tree)
+    mgr.wait()
+    restored, step = mgr.restore_or({"p": jnp.zeros((8,))})
+    assert step == 4                                   # last multiple of 2
+    np.testing.assert_array_equal(np.asarray(restored["p"]),
+                                  np.full((8,), 4.0))
+
+
+def test_train_restart_resumes_identically(tmp_path):
+    """Fault-tolerance property: kill after step k, restore, continue — the
+    loss trajectory matches an uninterrupted run (stateless data pipeline +
+    full state checkpoint)."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import registry
+    from repro.data.lm import LMBatchSpec, TokenStream
+    from repro.models import transformer as tf
+    from repro.train.optimizer import adamw
+    from repro.train.step import make_lm_train_step
+
+    cfg = registry.get("star-encoder").smoke_config()
+    opt = adamw(lr=1e-3, warmup=1)
+    step_fn = jax.jit(make_lm_train_step(cfg, opt, remat="none"))
+    stream = TokenStream(LMBatchSpec(global_batch=4, seq_len=16,
+                                     vocab_size=cfg.vocab_size))
+
+    def fresh():
+        params = tf.init_params(jax.random.key(0), cfg)
+        return {"params": params, "opt": opt.init(params)}
+
+    # uninterrupted 6 steps
+    state = fresh()
+    losses_a = []
+    for i in range(6):
+        state, m = step_fn(state, stream.batch(i))
+        losses_a.append(float(m["loss"]))
+
+    # interrupted at step 3 + restart from checkpoint
+    mgr = CheckpointManager(str(tmp_path), interval=1)
+    state = fresh()
+    for i in range(3):
+        state, m = step_fn(state, stream.batch(i))
+        mgr.maybe_save(i + 1, state)
+    mgr.wait()
+    state2, last = mgr.restore_or(fresh())
+    assert last == 3
+    losses_b = []
+    for i in range(last, 6):
+        state2, m = step_fn(state2, stream.batch(i))
+        losses_b.append(float(m["loss"]))
+    np.testing.assert_allclose(losses_a[3:], losses_b, rtol=1e-5)
+
+
+# ------------------------------------------------------------- elasticity
+def test_elastic_mesh_shapes():
+    from repro.launch.mesh import make_elastic_mesh, make_host_mesh
+    m = make_host_mesh()
+    assert m.shape == {"data": 1, "model": 1}
+    m2 = make_elastic_mesh(n_devices=1, model_parallel=16)
+    assert m2.devices.size == 1                # degraded to what exists
+
+
+def test_token_stream_deterministic_across_restart():
+    from repro.data.lm import LMBatchSpec, TokenStream
+    spec = LMBatchSpec(global_batch=4, seq_len=32, vocab_size=1000, seed=9)
+    a = TokenStream(spec).batch(17)
+    b = TokenStream(spec).batch(17)            # "restarted" pipeline
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
