@@ -12,7 +12,8 @@ Three execution paths, all bit-compatible in ranking:
                              when ``use_kernel=True``).
 
 The distributed (sharded corpus) search lives in ``repro.dist.retrieval`` and
-reuses ``chunked_nn`` per shard.
+reuses ``streaming_topk`` per shard; ``MetricIndex(..., sharded=True)``
+delegates to it.
 """
 
 from __future__ import annotations
@@ -25,7 +26,8 @@ import jax.numpy as jnp
 
 from repro.core import embedding as emb
 
-__all__ = ["SearchResult", "exact_nn", "chunked_nn", "MetricIndex"]
+__all__ = ["SearchResult", "exact_nn", "chunked_nn", "masked_chunked_nn",
+           "streaming_topk", "MetricIndex"]
 
 
 class SearchResult(NamedTuple):
@@ -45,14 +47,15 @@ def exact_nn(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int) ->
     return _as_result(top_scores, doc_ids[top_idx])
 
 
-@functools.partial(jax.jit, static_argnames=("k", "chunk"))
-def chunked_nn(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
-               chunk: int = 4096) -> SearchResult:
-    """Streaming exact k-NN: scan corpus chunks, keep a running top-k.
+def streaming_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
+                   k: int, chunk: int, masked: bool = False):
+    """Raw streaming top-k scan shared by ``chunked_nn``, the padded-corpus
+    index path, and ``dist.retrieval``'s per-shard search.
 
-    Peak live memory is O(q*chunk + q*k) instead of O(q*n). ``n`` must be a
-    multiple of ``chunk`` (pad the corpus with -inf-scoring sentinels if not;
-    ``MetricIndex`` does this automatically).
+    Scans corpus chunks with a running (scores, ids) carry; peak live memory
+    is O(q*chunk + q*k).  ``n`` must be a multiple of ``chunk``.  When
+    ``masked`` (static), rows with sentinel id < 0 score -inf, so padded
+    corpora never win top-k.  Returns (scores (q, k), ids (q, k)).
     """
     n = docs.shape[0]
     assert n % chunk == 0, f"corpus size {n} not divisible by chunk {chunk}"
@@ -67,6 +70,8 @@ def chunked_nn(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
         best_s, best_i = carry
         cd, ci = chunk_data
         scores = queries @ cd.T                                  # (q, chunk)
+        if masked:
+            scores = jnp.where(ci[None, :] < 0, -jnp.inf, scores)
         cand_s = jnp.concatenate([best_s, scores], axis=1)
         cand_i = jnp.concatenate([best_i, jnp.broadcast_to(ci, (q, chunk))], axis=1)
         top_s, top_pos = jax.lax.top_k(cand_s, k)
@@ -74,7 +79,22 @@ def chunked_nn(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
         return (top_s, top_i), None
 
     (best_s, best_i), _ = jax.lax.scan(step, init, (docs_c, ids_c))
-    return _as_result(best_s, best_i)
+    return best_s, best_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk"))
+def chunked_nn(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
+               chunk: int = 4096) -> SearchResult:
+    """Streaming exact k-NN over an unpadded corpus (see ``streaming_topk``)."""
+    return _as_result(*streaming_topk(docs, doc_ids, queries, k, chunk))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk"))
+def masked_chunked_nn(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
+                      k: int, chunk: int = 4096) -> SearchResult:
+    """``chunked_nn`` over a sentinel-padded corpus (id < 0 rows masked)."""
+    return _as_result(*streaming_topk(docs, doc_ids, queries, k, chunk,
+                                      masked=True))
 
 
 class MetricIndex:
@@ -86,7 +106,8 @@ class MetricIndex:
     """
 
     def __init__(self, doc_emb, doc_ids=None, *, transformed: bool = False,
-                 chunk: int = 4096, use_kernel: bool = False):
+                 chunk: int = 4096, use_kernel: bool = False,
+                 sharded: bool = False, mesh=None):
         doc_emb = jnp.asarray(doc_emb)
         if doc_ids is None:
             doc_ids = jnp.arange(doc_emb.shape[0], dtype=jnp.int32)
@@ -110,6 +131,16 @@ class MetricIndex:
         self.doc_emb = emb_t
         self.doc_ids = doc_ids
         self.use_kernel = use_kernel
+        self.sharded = sharded
+        self.mesh = mesh
+        if sharded:
+            # Lay the corpus out across the mesh once at construction so
+            # every search hits the shard_map fast path (no per-query pad
+            # or host->mesh re-layout).
+            from repro.dist import retrieval as dist_retrieval
+            (self.doc_emb, self.doc_ids, self.mesh,
+             self._shard_chunk) = dist_retrieval.shard_corpus(
+                self.doc_emb, self.doc_ids, mesh=mesh, chunk=self.chunk)
 
     def transform_queries(self, psi: jax.Array) -> jax.Array:
         return emb.transform_queries(psi)
@@ -119,6 +150,13 @@ class MetricIndex:
         if queries.ndim == 1:
             queries = queries[None]
         k = min(k, self.n_docs)
+        if self.sharded:
+            # Device-sharded corpus: per-shard streaming top-k under
+            # shard_map, all-gather + merge (see repro.dist.retrieval).
+            from repro.dist import retrieval as dist_retrieval
+            return dist_retrieval.sharded_nn(self.doc_emb, self.doc_ids,
+                                             queries, k, mesh=self.mesh,
+                                             chunk=self._shard_chunk)
         if self.use_kernel:
             from repro.kernels.knn import ops as knn_ops
             scores, ids = knn_ops.knn_search(self.doc_emb[:self.n_docs],
@@ -127,32 +165,11 @@ class MetricIndex:
         elif self._pad:
             # Masked search: padded sentinel rows carry id -1; over-fetch and
             # drop is wasteful, instead mask via score -inf on sentinel ids.
-            res = self._masked_chunked(queries, k)
+            res = masked_chunked_nn(self.doc_emb, self.doc_ids, queries, k,
+                                    chunk=self.chunk)
         else:
             res = chunked_nn(self.doc_emb, self.doc_ids, queries, k, chunk=self.chunk)
         return res
-
-    @functools.partial(jax.jit, static_argnames=("self", "k"))
-    def _masked_chunked(self, queries: jax.Array, k: int) -> SearchResult:
-        n = self.doc_emb.shape[0]
-        docs_c = self.doc_emb.reshape(n // self.chunk, self.chunk, self.dim)
-        ids_c = self.doc_ids.reshape(n // self.chunk, self.chunk)
-        q = queries.shape[0]
-        init = (jnp.full((q, k), -jnp.inf, queries.dtype),
-                jnp.full((q, k), -1, jnp.int32))
-
-        def step(carry, chunk_data):
-            best_s, best_i = carry
-            cd, ci = chunk_data
-            scores = queries @ cd.T
-            scores = jnp.where(ci[None, :] < 0, -jnp.inf, scores)
-            cand_s = jnp.concatenate([best_s, scores], axis=1)
-            cand_i = jnp.concatenate([best_i, jnp.broadcast_to(ci, (q, self.chunk))], axis=1)
-            top_s, top_pos = jax.lax.top_k(cand_s, k)
-            return (top_s, jnp.take_along_axis(cand_i, top_pos, axis=1)), None
-
-        (best_s, best_i), _ = jax.lax.scan(step, init, (docs_c, ids_c))
-        return _as_result(best_s, best_i)
 
     def __hash__(self):  # allow use as a static jit argument
         return id(self)

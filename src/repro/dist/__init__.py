@@ -1,0 +1,26 @@
+"""Sharding + distribution substrate.
+
+``repro.dist`` is the single place where logical shardings become physical
+ones:
+
+  * :mod:`repro.dist.api`       — ``constrain`` (logical activation sharding),
+    the ``sharding_rules`` context, ``active_mesh``, ``data_axes``.
+  * :mod:`repro.dist.sharding`  — parameter/activation PartitionSpec
+    derivation (``param_specs``, ``lm_activation_rules``).
+  * :mod:`repro.dist.retrieval` — the distributed back-end index: sharded
+    exact k-NN over a device mesh, batched table-sharded MIPS scoring, and
+    host-callable device shard handles for the serving router.
+
+Model code only ever names *logical* axes (``constrain(x, "act_bsd")``);
+meshes and rules are bound by the launcher (``launch/cells.py``,
+``launch/dryrun.py``) or by tests.  Without an active ``sharding_rules``
+context every annotation is the identity, so single-device smoke paths run
+the exact same model code.
+"""
+
+from repro.dist import api, sharding  # noqa: F401
+
+# ``repro.dist.retrieval`` is imported on demand (``import repro.dist.retrieval``)
+# rather than eagerly: it pulls in ``repro.core``, which model modules that
+# only need ``constrain`` should not pay for at import time.
+

@@ -1,0 +1,116 @@
+"""Logical activation sharding: ``constrain`` + the ``sharding_rules`` context.
+
+Model code annotates activations with *logical* names::
+
+    x = constrain(x, "act_bsd")
+
+and never mentions a mesh.  The launcher binds a mesh and a rule table
+(``{logical name -> PartitionSpec}``) around tracing::
+
+    with sharding_rules(mesh, rules):
+        jax.jit(step, in_shardings=..., out_shardings=...).lower(*args)
+
+Inside the context every ``constrain`` lowers to
+``jax.lax.with_sharding_constraint``; outside it is the identity, so the
+same model code runs unannotated on a single device (all smoke tests).
+
+Rules are *advisory*: an axis assignment that does not divide the concrete
+dimension (smoke configs run tiny shapes through the same code) is dropped
+per-dimension rather than erroring — see ``fit_spec``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["constrain", "sharding_rules", "active_mesh", "active_rules",
+           "data_axes", "fit_spec"]
+
+
+class _Stack(threading.local):
+    """Per-thread stack of (mesh, rules) contexts (router threads must not
+    observe a context entered on the main thread mid-trace)."""
+
+    def __init__(self):
+        self.items = []
+
+
+_CTX = _Stack()
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh, rules: Mapping[str, P]):
+    """Bind ``mesh`` + logical-name rules for ``constrain`` during tracing."""
+    _CTX.items.append((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _CTX.items.pop()
+
+
+def active_mesh():
+    """The mesh of the innermost ``sharding_rules`` context, or None."""
+    return _CTX.items[-1][0] if _CTX.items else None
+
+
+def active_rules() -> dict:
+    """The rule table of the innermost context ({} when none is active)."""
+    return dict(_CTX.items[-1][1]) if _CTX.items else {}
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Every mesh axis that is not the tensor-parallel "model" axis — the
+    axes batch-like dimensions shard over (("pod", "data") on the multi-pod
+    mesh, ("data",) otherwise)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _entry_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    size = 1
+    for a in entry:
+        size *= mesh.shape[a]
+    return size
+
+
+def fit_spec(spec: P, shape: Tuple[int, ...], mesh) -> Optional[P]:
+    """Clamp a logical PartitionSpec to a concrete array shape.
+
+    Missing trailing dims are padded with None; an axis assignment whose
+    mesh-axis product does not divide the dimension is dropped (replicated).
+    Returns None when the spec has more entries than the array has dims —
+    the caller should skip the constraint entirely.
+    """
+    entries = tuple(spec)
+    if len(entries) > len(shape):
+        return None
+    entries = entries + (None,) * (len(shape) - len(entries))
+    fitted = tuple(e if dim % _entry_size(mesh, e) == 0 else None
+                   for dim, e in zip(shape, entries))
+    return P(*fitted)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Apply the active logical sharding rule ``name`` to ``x``.
+
+    Identity when no ``sharding_rules`` context is active, the name has no
+    rule, or the rule cannot fit the array's shape.
+    """
+    if not _CTX.items:
+        return x
+    mesh, rules = _CTX.items[-1]
+    spec = rules.get(name)
+    if spec is None:
+        return x
+    spec = fit_spec(spec, x.shape, mesh)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

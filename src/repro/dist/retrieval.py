@@ -1,0 +1,238 @@
+"""Distributed back-end retrieval: the sharded dense index of Fig. 2.
+
+Three layers, smallest to largest deployment:
+
+  * ``make_batched_scorer`` — a table-sharded MIPS top-k closure for use
+    *inside* jitted serving cells (recsys retrieval_cand / serve shapes):
+    candidate tables stay sharded where their params live, the (B, V) score
+    matrix never materializes unsharded.
+  * ``sharded_nn`` — exact k-NN with the corpus sharded across a device
+    mesh: each device runs the same ``streaming_topk`` scan over its slice
+    under ``shard_map``, then the per-shard top-k are all-gathered and
+    merged.  The merge is the device-level analogue of
+    ``serve.router.ShardedRouter._merge`` and is *bit-identical* in ranking
+    to ``exact_nn`` (contiguous row sharding + stable top-k tie-breaking).
+  * ``DeviceShard`` / ``make_device_shards`` — host-callable shard handles
+    over device-resident corpus slices, signature-compatible with the
+    callables ``ShardedRouter`` fronts, so the serving layer's hedging /
+    degraded-answer machinery runs unchanged on real device shards.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.metric_index import (SearchResult, _as_result,
+                                     masked_chunked_nn, streaming_topk)
+from repro.dist.api import active_mesh
+
+__all__ = ["make_batched_scorer", "sharded_nn", "shard_corpus",
+           "DeviceShard", "make_device_shards", "ShardTopK"]
+
+
+# ------------------------------------------------------- batched scoring
+
+def make_batched_scorer(mesh: Mesh, k: int, table_axes: Sequence[str] = ("model",),
+                        batch_axes: Sequence[str] = ()):
+    """Build ``scorer(queries, table, n_valid=None) -> (scores, ids)``.
+
+    ``table`` (V, D) is constrained to shard its rows over ``table_axes``,
+    ``queries`` (B, D) over ``batch_axes`` — SPMD then keeps the (B, V)
+    score matrix sharded over both and lowers the top-k to per-shard top-k
+    plus a merge collective.  ``n_valid`` masks trailing table rows (an
+    unevenly-sized candidate set scored against a shard-divisible table).
+    For use inside jitted cells; ids are row positions in ``table``.
+    """
+    t_entry = tuple(table_axes) or None
+    b_entry = tuple(batch_axes) or None
+
+    def scorer(queries: jax.Array, table: jax.Array,
+               n_valid: Optional[int] = None):
+        queries = jax.lax.with_sharding_constraint(
+            queries, NamedSharding(mesh, P(b_entry, None)))
+        table = jax.lax.with_sharding_constraint(
+            table, NamedSharding(mesh, P(t_entry, None)))
+        scores = queries @ table.T                              # (B, V)
+        if n_valid is not None:
+            col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+            scores = jnp.where(col < n_valid, scores, -jnp.inf)
+        return jax.lax.top_k(scores, min(k, table.shape[0]))
+
+    return scorer
+
+
+# ----------------------------------------------------- sharded exact k-NN
+
+def _flat_mesh() -> Mesh:
+    """A 1-axis mesh over every local device (the default retrieval mesh)."""
+    return Mesh(np.asarray(jax.devices()), ("shard",))
+
+
+def _resolve(mesh: Optional[Mesh], axes: Optional[Sequence[str]]):
+    mesh = mesh if mesh is not None else (active_mesh() or _flat_mesh())
+    axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+    n_dev = 1
+    for a in axes:
+        n_dev *= mesh.shape[a]
+    return mesh, axes, n_dev
+
+
+def _slice_layout(n: int, n_dev: int, chunk: int):
+    """(rows per device, effective chunk): equal, chunk-divisible slices."""
+    per = -(-n // n_dev)
+    chunk_eff = min(chunk, per)
+    per = -(-per // chunk_eff) * chunk_eff
+    return per, chunk_eff
+
+
+def _pad_corpus(docs: jax.Array, doc_ids: jax.Array, rows: int):
+    """Sentinel-pad (id -1, masked to -inf) to exactly ``rows`` rows."""
+    pad = rows - docs.shape[0]
+    if pad:
+        docs = jnp.concatenate(
+            [docs, jnp.zeros((pad, docs.shape[1]), docs.dtype)])
+        doc_ids = jnp.concatenate(
+            [doc_ids, jnp.full((pad,), -1, jnp.int32)])
+    return docs, doc_ids
+
+
+def shard_corpus(docs, doc_ids, *, mesh: Optional[Mesh] = None,
+                 axes: Optional[Sequence[str]] = None, chunk: int = 4096):
+    """Pad a corpus to equal per-device slices and commit it to the mesh.
+
+    Returns (docs, doc_ids, mesh, chunk_eff) with the rows already laid out
+    P(axes) across devices, so repeated ``sharded_nn`` calls (a serving
+    index) pay no per-query re-pad or host->mesh re-layout.
+    """
+    mesh, axes, n_dev = _resolve(mesh, axes)
+    docs = jnp.asarray(docs)
+    doc_ids = jnp.asarray(doc_ids, jnp.int32)
+    per, chunk_eff = _slice_layout(docs.shape[0], n_dev, chunk)
+    docs, doc_ids = _pad_corpus(docs, doc_ids, per * n_dev)
+    entry = axes if len(axes) > 1 else axes[0]
+    docs = jax.device_put(docs, NamedSharding(mesh, P(entry, None)))
+    doc_ids = jax.device_put(doc_ids, NamedSharding(mesh, P(entry)))
+    return docs, doc_ids, mesh, chunk_eff
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...], k: int, chunk: int):
+    """jit(shard_map) factory, cached per (mesh, axes, k, chunk).
+
+    Per device: masked streaming top-k over the local corpus slice, then an
+    all-gather of the (q, k) partials over the corpus axes and a local merge
+    — every device ends with the identical global top-k (replicated out).
+    """
+    axis_entry = axes if len(axes) > 1 else axes[0]
+
+    def local(docs, ids, queries):
+        part_s, part_i = streaming_topk(docs, ids, queries, k, chunk,
+                                        masked=True)
+        # shard order == row order (contiguous row sharding), so the
+        # concatenated candidate list preserves global id order and the
+        # stable top_k below breaks ties exactly like a global top_k.
+        all_s = jax.lax.all_gather(part_s, axes, axis=1, tiled=True)
+        all_i = jax.lax.all_gather(part_i, axes, axis=1, tiled=True)
+        top_s, pos = jax.lax.top_k(all_s, k)
+        return top_s, jnp.take_along_axis(all_i, pos, axis=1)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axis_entry, None), P(axis_entry), P(None, None)),
+                   out_specs=(P(None, None), P(None, None)),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def sharded_nn(docs, doc_ids, queries, k: int, *, mesh: Optional[Mesh] = None,
+               axes: Optional[Sequence[str]] = None,
+               chunk: int = 4096) -> SearchResult:
+    """Exact k-NN with the corpus sharded over ``mesh`` (all its axes by
+    default; the active ``sharding_rules`` mesh, else one flat axis over
+    every local device, when ``mesh`` is None).
+
+    The corpus is padded with sentinel rows (id -1, masked to -inf) so each
+    device gets an equal, chunk-divisible slice — a no-op when the corpus
+    was pre-laid-out with ``shard_corpus`` (the serving-index fast path).
+    Rankings are bit-identical to ``exact_nn`` on the unpadded corpus.
+    """
+    mesh, axes, n_dev = _resolve(mesh, axes)
+    docs = jnp.asarray(docs)
+    doc_ids = jnp.asarray(doc_ids, jnp.int32)
+    queries = jnp.asarray(queries)
+    if queries.ndim == 1:
+        queries = queries[None]
+
+    n = docs.shape[0]
+    per, chunk_eff = _slice_layout(n, n_dev, chunk)
+    docs, doc_ids = _pad_corpus(docs, doc_ids, per * n_dev)
+
+    fn = _sharded_search_fn(mesh, axes, int(min(k, n)), chunk_eff)
+    scores, ids = fn(docs, doc_ids, queries)
+    return _as_result(scores, ids)
+
+
+# ------------------------------------------------- host-side shard handles
+
+class ShardTopK(NamedTuple):
+    """Host-side per-shard answer (duck-compatible with serve's ShardAnswer)."""
+    scores: np.ndarray     # (B, k)
+    ids: np.ndarray        # (B, k) global doc ids, -1 past the shard's corpus
+
+
+class DeviceShard:
+    """A host-callable index shard pinned to one device.
+
+    ``shard(queries, k) -> ShardTopK`` — the exact callable signature
+    ``serve.router.ShardedRouter`` fronts, so hedging, deadlines, and
+    degraded merges apply unchanged.  Concurrent router threads run their
+    shards on distinct devices in parallel.
+    """
+
+    def __init__(self, docs, doc_ids, device=None, chunk: int = 4096):
+        docs = jnp.asarray(docs)
+        doc_ids = jnp.asarray(doc_ids, jnp.int32)
+        n = docs.shape[0]
+        self.chunk = int(min(chunk, max(8, n)))
+        docs, doc_ids = _pad_corpus(docs, doc_ids, n + (-n) % self.chunk)
+        self.device = device
+        self.n_docs = n
+        self.docs = jax.device_put(docs, device)
+        self.doc_ids = jax.device_put(doc_ids, device)
+
+    def __call__(self, queries, k: int) -> ShardTopK:
+        q = jnp.asarray(queries, self.docs.dtype)
+        if q.ndim == 1:
+            q = q[None]
+        if self.device is not None:
+            q = jax.device_put(q, self.device)
+        res = masked_chunked_nn(self.docs, self.doc_ids, q, int(k),
+                                chunk=self.chunk)
+        return ShardTopK(np.asarray(res.scores), np.asarray(res.ids))
+
+
+def make_device_shards(docs, doc_ids=None, *, devices=None,
+                       chunk: int = 4096) -> list:
+    """Split a corpus into one ``DeviceShard`` per device (equal, padded
+    slices so every shard shares a single jit trace)."""
+    docs = jnp.asarray(docs)
+    if doc_ids is None:
+        doc_ids = jnp.arange(docs.shape[0], dtype=jnp.int32)
+    doc_ids = jnp.asarray(doc_ids, jnp.int32)
+    devices = list(devices if devices is not None else jax.devices())
+    n = docs.shape[0]
+    per = -(-n // len(devices))
+    shards = []
+    for i, dev in enumerate(devices):
+        lo, hi = i * per, min((i + 1) * per, n)
+        if lo >= n:
+            break
+        shards.append(DeviceShard(docs[lo:hi], doc_ids[lo:hi], device=dev,
+                                  chunk=min(chunk, per)))
+    return shards

@@ -1,0 +1,180 @@
+"""PartitionSpec derivation: parameters (``param_specs``) and activations
+(``lm_activation_rules`` & friends).
+
+``param_specs`` walks a parameter pytree (of arrays or ShapeDtypeStructs)
+and assigns each leaf a full-rank PartitionSpec:
+
+  * name-keyed rules first — vocab/item tables get Megatron-style vocab
+    parallelism, MoE expert stacks get expert parallelism over "model";
+  * a shape heuristic otherwise — the larger of the last two dims goes to
+    "model" (column/row parallel), the other is FSDP-sharded over the data
+    axes when it divides;
+  * every assignment is divisibility-checked, small leaves replicate.
+
+Specs are what ``launch/cells.py`` feeds to ``jax.jit`` in/out shardings and
+what the optimizers mirror into their state (``Optimizer.state_spec``).
+
+``lm_activation_rules`` produces the logical-name table consumed by
+``dist.api.constrain`` for a transformer cell; per-name assignments degrade
+to replication when head/vocab counts do not divide the "model" axis (the
+rules must serve every assigned arch on every mesh).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.api import data_axes, fit_spec
+
+__all__ = ["param_specs", "lm_activation_rules", "gnn_activation_rules",
+           "replicated_specs"]
+
+
+def _tp(mesh: Mesh) -> int:
+    return dict(mesh.shape).get("model", 1)
+
+
+def _dp_prod(mesh: Mesh) -> int:
+    size = 1
+    for a in data_axes(mesh):
+        size *= mesh.shape[a]
+    return size
+
+
+def _dp_entry(mesh: Mesh):
+    """The data-axes spec entry: a single name, a tuple, or None."""
+    dp = data_axes(mesh)
+    if not dp:
+        return None
+    return dp[0] if len(dp) == 1 else dp
+
+
+def _key_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def replicated_specs(tree):
+    """A same-structure tree of fully-replicated full-rank specs."""
+    return jax.tree.map(lambda l: P(*((None,) * len(l.shape))), tree)
+
+
+def param_specs(params_shapes, mesh: Mesh, *, min_shard_size: int = 2 ** 14):
+    """Full-rank PartitionSpecs for a parameter tree on ``mesh``.
+
+    Layer-stacked leaves (vmapped init => leading stack dim) keep the stack
+    dim unsharded so slice-at-a-time optimizer updates stay local.
+    """
+    tp = _tp(mesh)
+    dp = _dp_entry(mesh)
+    dp_prod = _dp_prod(mesh)
+
+    def divides(dim: int, size: int) -> bool:
+        return size > 0 and dim % size == 0
+
+    def heuristic(shape) -> P:
+        ndim = len(shape)
+        spec = [None] * ndim
+        if ndim >= 2:
+            last, prev = ndim - 1, ndim - 2
+            cands = [d for d in (last, prev)
+                     if divides(shape[d], tp) and shape[d] >= 2 * tp]
+            if cands:
+                model_dim = max(cands, key=lambda d: (shape[d], d))
+                spec[model_dim] = "model"
+                other = prev if model_dim == last else last
+                if dp is not None and divides(shape[other], dp_prod) \
+                        and shape[other] >= 2 * dp_prod:
+                    spec[other] = dp
+        return P(*spec)
+
+    def by_name(names, shape) -> P:
+        leaf = names[-1] if names else ""
+        ndim = len(shape)
+        if leaf in ("embed", "item_emb") and ndim == 2:
+            # vocab-parallel rows (matches the vocab-sharded "logits" rule);
+            # never feature-shard a gathered table — SPMD cannot partition
+            # the token gather against a trailing-dim-sharded operand
+            return P("model" if divides(shape[0], tp) else None, None)
+        if leaf == "lm_head" and ndim == 2:
+            return P(None, "model" if divides(shape[1], tp) else None)
+        if leaf in ("tables", "linear") and ndim == 3:
+            # (fields, vocab, dim): shard the vocab rows (or replicate)
+            return P(None, "model" if divides(shape[1], tp) else None, None)
+        if leaf in ("wi", "wo") and any("moe" in n for n in names) and ndim >= 3:
+            # (stack?, experts, d, f): expert parallelism over "model"
+            e_dim = ndim - 3
+            if divides(shape[e_dim], tp):
+                spec = [None] * ndim
+                spec[e_dim] = "model"
+                return P(*spec)
+        if leaf == "router":
+            return P(*((None,) * ndim))
+        return heuristic(shape)
+
+    def leaf_spec(path, leaf):
+        shape = tuple(leaf.shape)
+        size = 1
+        for s in shape:
+            size *= s
+        if len(shape) == 0 or size < min_shard_size:
+            return P(*((None,) * len(shape)))
+        spec = by_name(_key_names(path), shape)
+        # belt & braces: every emitted assignment must divide
+        return fit_spec(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shapes)
+
+
+def lm_activation_rules(mesh: Mesh, cfg, kind: str = "train") -> dict:
+    """Logical-name -> PartitionSpec table for a transformer cell.
+
+    ``cfg`` needs ``n_heads`` / ``n_kv_heads`` / ``attention`` (a duck-typed
+    stub is fine — see launch/cells).  ``kind`` is the cell shape kind
+    ("train" | "prefill" | "decode" | "long"); decode-like cells with
+    non-TP-divisible KV heads shard the cache *sequence* axis instead, so
+    decode attention lowers to a flash-decoding-style all-reduce merge.
+    """
+    tp = _tp(mesh)
+    dp = _dp_entry(mesh)
+    heads = "model" if getattr(cfg, "n_heads", 1) % tp == 0 else None
+    kv = "model" if getattr(cfg, "n_kv_heads", 1) % tp == 0 else None
+    vocab = getattr(cfg, "vocab_size", 0)
+    logit = "model" if vocab and vocab % tp == 0 else None
+
+    kv_cache = P(dp, None, kv, None)
+    if kind in ("decode", "long") and kv is None:
+        kv_cache = P(dp, "model", None, None)   # seq-sharded cache
+
+    return {
+        "act_bsd": P(dp, None, None),
+        "act_bsf": P(dp, None, "model"),
+        "act_bfd": P(dp, None, None),
+        "act_bshd": P(dp, None, heads, None),
+        "act_bskd": P(dp, None, kv, None),
+        "attn_scores": P(dp, heads, None, None),
+        "kv_cache": kv_cache,
+        "mla_cache": P(dp, None, None),
+        "mla_cache_r": P(dp, None, None),
+        "logits": P(dp, None, logit),
+        "moe_buf": P("model", None, None),
+        "moe_hidden": P("model", None, None),
+        "moe_out": P(dp, None),
+    }
+
+
+def gnn_activation_rules(mesh: Mesh) -> dict:
+    """Edge/node tables shard over the whole mesh (segment-sum partials are
+    psum'd by SPMD)."""
+    every = tuple(mesh.axis_names)
+    return {"edges": P(every, None), "nodes": P(every, None)}

@@ -1,6 +1,7 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512").strip()
+
+from repro.launch.hostdevices import ensure_host_devices
+ensure_host_devices(512, override=True)   # production meshes need 512
 
 """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
 production meshes and record memory/cost/collective evidence.

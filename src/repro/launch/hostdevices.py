@@ -1,0 +1,30 @@
+"""Force a multi-device CPU topology BEFORE jax's first import.
+
+jax locks the device count at first init, so every entry point that wants
+virtual host devices (dry-run, benchmarks, tests) must set the flag before
+importing jax anywhere in the process.  This module is deliberately
+jax-free so it can be imported first.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+
+def ensure_host_devices(n: int = 8, *, override: bool = False) -> None:
+    """Set --xla_force_host_platform_device_count=n in XLA_FLAGS.
+
+    By default an already-present device-count flag wins (respect an
+    explicit operator choice).  ``override=True`` replaces it — for entry
+    points whose meshes only exist at a fixed topology (the 512-device
+    dry-run would otherwise fail, or silently record evidence for the
+    wrong mesh)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        if not override:
+            return
+        flags = re.sub(r"--xla_force_host_platform_device_count=\S+", "",
+                       flags).strip()
+    os.environ["XLA_FLAGS"] = (
+        flags + f" --xla_force_host_platform_device_count={n}").strip()

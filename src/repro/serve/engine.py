@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import CacheConfig, MetricCache
-from repro.core.embedding import transform_queries
+from repro.core.embedding import distance_from_scores, transform_queries
 from repro.serve.router import ShardAnswer, ShardedRouter
 
 
@@ -82,7 +82,9 @@ class ConversationalEngine:
                     np.asarray(psi)[None], self.k_c)
                 ids = ans.ids[0]
                 emb = jnp.asarray(self.doc_embeddings[ids])
-                radius = float(np.sqrt(max(0.0, 2.0 - 2.0 * ans.scores[0, -1])))
+                # r_a: distance of the k_c-th retrieved doc (unit-sphere
+                # geometry lives in one place: distance_from_scores)
+                radius = float(distance_from_scores(ans.scores[0, -1]))
                 self.cache.insert(psi, radius, emb, jnp.asarray(ids))
             except TimeoutError:
                 # total back-end failure: fall back to the cache if possible

@@ -40,10 +40,27 @@ class RouterStats:
     hedges: int = 0
     failures: int = 0
     degraded: int = 0
+    duplicates: int = 0    # hedge losers whose answers were discarded
+
+
+def _discard(future: cf.Future) -> bool:
+    """Drop a future we no longer want: cancel if not started, otherwise
+    attach a consumer so its result/exception is drained, never merged.
+    Returns True when the future was already running (a real duplicate
+    in flight), False when it was cancelled before ever starting."""
+    if future.cancel():
+        return False
+    future.add_done_callback(lambda f: f.exception())
+    return True
 
 
 class ShardedRouter:
-    """shards: callables (queries, k) -> ShardAnswer, one per corpus shard."""
+    """shards: callables (queries, k) -> ShardAnswer, one per corpus shard.
+
+    Shards may be plain host callables (RPC stubs, test lambdas) or
+    device-resident handles — ``over_devices`` builds a router fronting
+    ``repro.dist.retrieval.DeviceShard``s, one corpus slice per device.
+    """
 
     def __init__(self, shards: Sequence[Callable], deadline_s: float = 1.0,
                  hedge_after_s: Optional[float] = None, max_workers: int = 16):
@@ -53,26 +70,50 @@ class ShardedRouter:
         self.pool = cf.ThreadPoolExecutor(max_workers=max_workers)
         self.stats = RouterStats()
 
+    @classmethod
+    def over_devices(cls, docs, doc_ids=None, *, devices=None,
+                     chunk: int = 4096, **kwargs) -> "ShardedRouter":
+        """Router fronting device-sharded corpus slices (one per device)."""
+        from repro.dist.retrieval import make_device_shards
+        return cls(make_device_shards(docs, doc_ids, devices=devices,
+                                      chunk=chunk), **kwargs)
+
     def search(self, queries: np.ndarray, k: int) -> tuple[ShardAnswer, bool]:
-        """Scatter-gather with hedging. Returns (merged answer, degraded?)."""
-        futures = {self.pool.submit(s, queries, k): i
-                   for i, s in enumerate(self.shards)}
+        """Scatter-gather with hedging. Returns (merged answer, degraded?).
+
+        A hedged retry and its original can both complete; the first answer
+        per shard wins and every sibling in flight for that shard is
+        explicitly discarded (``cancel()`` alone is a no-op once a future is
+        running), so a shard's answer is merged at most once and the loop
+        never stalls waiting on a hedge loser.
+        """
         self.stats.calls += 1
         answers: dict[int, ShardAnswer] = {}
         deadline = time.monotonic() + self.deadline_s
         hedge_at = time.monotonic() + self.hedge_after_s
         hedged: set[int] = set()
-        pending = dict(futures)
+        pending: dict[cf.Future, int] = {
+            self.pool.submit(s, queries, k): i
+            for i, s in enumerate(self.shards)}
         while pending and time.monotonic() < deadline:
             done, _ = cf.wait(list(pending), timeout=0.005,
                               return_when=cf.FIRST_COMPLETED)
             for f in done:
-                i = pending.pop(f)
+                i = pending.pop(f, None)
+                if i is None:          # sibling already discarded below
+                    continue
                 try:
-                    if i not in answers:
-                        answers[i] = f.result()
+                    result = f.result()
                 except Exception:
                     self.stats.failures += 1
+                    continue
+                answers[i] = result
+                # drop the hedge sibling (winner merged, loser drained);
+                # only a loser that actually ran counts as duplicate work
+                for f2, i2 in list(pending.items()):
+                    if i2 == i:
+                        del pending[f2]
+                        self.stats.duplicates += _discard(f2)
             # hedge slow shards once
             if time.monotonic() >= hedge_at:
                 for f, i in list(pending.items()):
@@ -82,7 +123,7 @@ class ShardedRouter:
                         pending[self.pool.submit(self.shards[i], queries, k)] = i
                 hedge_at = float("inf")
         for f in pending:
-            f.cancel()
+            _discard(f)
         degraded = len(answers) < len(self.shards)
         if degraded:
             self.stats.degraded += 1

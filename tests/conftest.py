@@ -1,0 +1,15 @@
+"""Force a multi-device CPU topology before jax initializes.
+
+Loaded by pytest before any test module imports jax, so every test sees 8
+host devices — the distributed-retrieval tests need a >=2-device mesh and
+single-device tests are unaffected (jit placement defaults to device 0).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.hostdevices import ensure_host_devices  # noqa: E402
+
+ensure_host_devices(8)

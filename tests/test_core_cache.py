@@ -140,6 +140,76 @@ def test_cache_eviction_keeps_capacity(eviction):
     assert cache.n_docs <= 64
 
 
+def _unit_rows(rng, n, dim):
+    x = rng.standard_normal((n, dim)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+@pytest.mark.parametrize("eviction", ["lru", "ball"])
+def test_eviction_overflow_no_duplicates_no_clobber(eviction):
+    """Invariants of a single overflowing insert under the beyond-paper
+    eviction policies: occupied slots hold unique doc ids, and a slot the
+    call appends to is never also an eviction target of the same call."""
+    dim, cap = 8, 32
+    cfg = CacheConfig(capacity=cap, dim=dim, eviction=eviction)
+    cache = MetricCache(cfg)
+    rng = np.random.default_rng(0)
+
+    psi0 = jnp.asarray(_unit_rows(rng, 1, dim)[0])
+    cache.insert(psi0, jnp.asarray(0.9, jnp.float32),
+                 jnp.asarray(_unit_rows(rng, 20, dim)),
+                 jnp.arange(20, dtype=jnp.int32))
+    assert cache.n_docs == 20
+
+    # overflowing batch with an intra-batch duplicate and an already-cached id
+    new_ids = np.arange(100, 120, dtype=np.int32)
+    new_ids[5] = 100       # duplicate of new_ids[0] within the batch
+    new_ids[7] = 3         # already cached
+    new_emb = _unit_rows(rng, 20, dim)
+    psi1 = jnp.asarray(_unit_rows(rng, 1, dim)[0])
+    cache.insert(psi1, jnp.asarray(0.9, jnp.float32), jnp.asarray(new_emb),
+                 jnp.asarray(new_ids))
+
+    st = cache.state
+    ids = np.asarray(st.doc_ids)
+    occupied = ids[ids >= 0]
+    assert cache.n_docs == cap and occupied.size == cap
+    # 1) no duplicate doc ids anywhere in the cache
+    assert np.unique(occupied).size == occupied.size
+    # 2) every deduplicated new doc landed and its slot was not clobbered
+    #    by an eviction write of the same call
+    expected = {int(i) for j, i in enumerate(new_ids) if j not in (5, 7)}
+    assert expected <= set(occupied.tolist())
+    doc_emb = np.asarray(st.doc_emb)
+    for j, did in enumerate(new_ids):
+        if j in (5, 7):
+            continue
+        slot = int(np.nonzero(ids == did)[0][0])
+        np.testing.assert_array_equal(doc_emb[slot], new_emb[j])
+
+
+@pytest.mark.parametrize("eviction", ["lru", "ball"])
+def test_eviction_full_cache_overflow_stays_consistent(eviction):
+    """Overflow into an already-full cache: every write is an eviction."""
+    dim, cap = 8, 16
+    cfg = CacheConfig(capacity=cap, dim=dim, eviction=eviction)
+    cache = MetricCache(cfg)
+    rng = np.random.default_rng(1)
+    psi = jnp.asarray(_unit_rows(rng, 1, dim)[0])
+    cache.insert(psi, jnp.asarray(0.9, jnp.float32),
+                 jnp.asarray(_unit_rows(rng, cap, dim)),
+                 jnp.arange(cap, dtype=jnp.int32))
+    assert cache.n_docs == cap
+    cache.insert(psi, jnp.asarray(0.9, jnp.float32),
+                 jnp.asarray(_unit_rows(rng, 10, dim)),
+                 jnp.arange(100, 110, dtype=jnp.int32))
+    ids = np.asarray(cache.state.doc_ids)
+    occupied = ids[ids >= 0]
+    assert cache.n_docs == cap and occupied.size == cap
+    assert np.unique(occupied).size == occupied.size
+    assert {int(i) for i in range(100, 110)} <= set(occupied.tolist())
+
+
 # ---------------------------------------------------------------- driver
 def test_conversation_first_turn_always_miss():
     _, idx = _mini_world()

@@ -101,6 +101,49 @@ def test_router_hedges_stragglers_and_degrades(world, index):
     assert ans.ids.shape == (2, 10)      # merged from surviving shards
 
 
+def test_router_hedge_winner_merged_once(world, index):
+    """A hedged retry and its original can both complete: the first answer
+    wins, the loser is discarded (not double-merged) and the router does not
+    stall waiting for it."""
+    from repro.serve.router import ShardedRouter
+    calls = {i: 0 for i in range(3)}
+    base = _make_shards(index, 3)
+
+    def slow_first(queries, k, i=1):
+        calls[i] += 1
+        if calls[i] == 1:
+            time.sleep(2.0)       # original stalls; the hedge returns fast
+        return base[i](queries, k)
+
+    def counting(i):
+        def shard(queries, k, i=i):
+            calls[i] += 1
+            return base[i](queries, k)
+        return shard
+
+    shards = [counting(0), slow_first, counting(2)]
+    router = ShardedRouter(shards, deadline_s=5.0, hedge_after_s=0.05)
+    rng = np.random.default_rng(4)
+    q = np.asarray(index.transform_queries(
+        jnp.asarray(rng.standard_normal((2, world.cfg.dim)), jnp.float32)))
+    t0 = time.monotonic()
+    ans, degraded = router.search(q, 12)
+    elapsed = time.monotonic() - t0
+    assert not degraded and router.stats.hedges == 1
+    # the loser (still sleeping 2s) must not hold the search open
+    assert elapsed < 1.0, elapsed
+    # merged exactly once per shard: ids match the exact search, no repeats
+    exact = index.search(jnp.asarray(q), 12)
+    np.testing.assert_array_equal(ans.ids, np.asarray(exact.ids))
+    for row in ans.ids:
+        assert len(set(row.tolist())) == len(row)
+    # the in-flight duplicate was detected + drained; router stays usable
+    assert calls[1] == 2 and router.stats.duplicates >= 1
+    ans2, degraded2 = router.search(q, 12)
+    assert not degraded2
+    np.testing.assert_array_equal(ans2.ids, np.asarray(exact.ids))
+
+
 def test_engine_cache_survives_backend_outage(world, index):
     from repro.serve.engine import ConversationalEngine
     from repro.serve.router import ShardedRouter
