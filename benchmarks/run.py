@@ -91,6 +91,17 @@ def main() -> None:
         _csv("retrieval_sharded_speedup", rec["sharded_us"],
              f"vs_chunked={rec['sharded_speedup_vs_chunked']:.2f}x")
 
+    # --- batched multi-session serving (sequential loop vs waves) -----------
+    from benchmarks import serve_bench
+    rec_s = serve_bench.run((64,), repeats=1,
+                            out_path="BENCH_serve_row.json")
+    for row in rec_s["rows"]:
+        _csv(f"serve_batched_s{row['sessions']}",
+             1e6 * row["batched_s"] / max(row["queries"], 1),
+             f"qps={row['batched_qps']:.1f};"
+             f"vs_sequential={row['speedup']:.2f}x;"
+             f"hit={100 * row['hit_rate_batched']:.1f}%")
+
     # --- roofline table (from dry-run artifacts, if present) ----------------
     from benchmarks import roofline_table
     rows_r = roofline_table.load()

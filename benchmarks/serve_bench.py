@@ -1,0 +1,165 @@
+"""Multi-session serving benchmark: sequential engine loop vs batched serving.
+
+Replays the same per-session turn streams two ways —
+
+  * **sequential**: one ``ConversationalEngine`` per session, answered one
+    turn at a time (the paper's client model: one probe, one router
+    round-trip, one cache query per turn), and
+  * **batched**: one ``BatchedEngine`` answering each turn wave with one
+    batched probe, one ``router.search`` over the whole miss subset, and one
+    batched insert/query
+
+— and reports wall-clock queries/sec for each at several concurrency
+levels.  Writes ``BENCH_serve.json``.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--smoke]
+
+``--smoke`` runs a seconds-scale configuration (CI exercises the batched
+path on every push); the default sweep covers 64-512 concurrent sessions.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metric_index import MetricIndex
+from repro.data.conversations import WorldConfig, make_world
+from repro.serve.engine import ConversationalEngine
+from repro.serve.router import ShardAnswer, ShardedRouter
+from repro.serve.session import BatchedEngine
+
+
+def make_shards(index: MetricIndex, n_shards: int):
+    docs = np.asarray(index.doc_emb[:index.n_docs])
+    ids = np.arange(index.n_docs)
+    bounds = np.linspace(0, index.n_docs, n_shards + 1).astype(int)
+    shards = []
+    for i in range(n_shards):
+        d, did = docs[bounds[i]:bounds[i + 1]], ids[bounds[i]:bounds[i + 1]]
+
+        def shard(queries, k, d=d, did=did):
+            scores = queries @ d.T
+            top = np.argsort(-scores, axis=1)[:, :k]
+            return ShardAnswer(np.take_along_axis(scores, top, axis=1),
+                               did[top])
+        shards.append(shard)
+    return shards
+
+
+def _streams(world, index, n_sessions: int):
+    """Per-session transformed query streams (conversations reused round-
+    robin when sessions outnumber generated conversations)."""
+    convs = world.conversations
+    return [np.asarray(index.transform_queries(
+        jnp.asarray(convs[s % len(convs)].queries, jnp.float32)))
+        for s in range(n_sessions)]
+
+
+def bench_sequential(index, streams, *, n_shards, k, k_c, capacity):
+    router = ShardedRouter(make_shards(index, n_shards), deadline_s=30)
+    doc = np.asarray(index.doc_emb)
+    engines = [ConversationalEngine(router, doc, dim=index.dim, k=k, k_c=k_c,
+                                    capacity=capacity) for _ in streams]
+    for e in engines:
+        e.start_session()
+    turns = streams[0].shape[0]
+    t0 = time.perf_counter()
+    for t in range(turns):
+        for s, e in enumerate(engines):
+            e.answer(streams[s][t])
+    elapsed = time.perf_counter() - t0
+    hits = float(np.mean([e.hit_rate() for e in engines]))
+    return elapsed, len(streams) * turns, hits
+
+
+def bench_batched(index, streams, *, n_shards, k, k_c, capacity):
+    router = ShardedRouter(make_shards(index, n_shards), deadline_s=30)
+    engine = BatchedEngine(router, np.asarray(index.doc_emb), dim=index.dim,
+                           n_sessions=len(streams), k=k, k_c=k_c,
+                           capacity=capacity)
+    sids = list(range(len(streams)))
+    for s in sids:
+        engine.start_session(s)
+    turns = streams[0].shape[0]
+    # warm the jit caches outside the timed region (compile happens once per
+    # session-count; a server would reuse the compiled wave for its lifetime)
+    engine.answer_batch(sids, [streams[s][0] for s in sids])
+    for s in sids:
+        engine.start_session(s)
+    t0 = time.perf_counter()
+    for t in range(turns):
+        engine.answer_batch(sids, [streams[s][t] for s in sids])
+    elapsed = time.perf_counter() - t0
+    hits = float(np.mean([engine.hit_rate(s) for s in sids]))
+    return elapsed, len(streams) * turns, hits
+
+
+def run(session_counts=(64, 128, 256, 512), *, turns=4, n_shards=4,
+        k=10, k_c=100, repeats=3, world_cfg=None,
+        out_path="BENCH_serve.json") -> dict:
+    world = make_world(world_cfg or WorldConfig(
+        n_topics=8, docs_per_topic=800, n_background=4000, dim=128,
+        subspace_dim=8, turns=turns, n_conversations=16, doc_sigma=0.6,
+        query_sigma=0.12, drift_sigma=0.16, subtopic_prob=0.35,
+        subtopic_sigma=0.75, seed=7))
+    index = MetricIndex(jnp.asarray(world.doc_emb, jnp.float32))
+    capacity = 4 * k_c
+    rows = []
+    for n_sessions in session_counts:
+        streams = _streams(world, index, n_sessions)
+        # best-of-N: wall-clock on a shared host is noisy; the minimum is
+        # the least-contended estimate of each path's real cost
+        t_seq, t_bat = float("inf"), float("inf")
+        for _ in range(repeats):
+            t, n_q, hit_seq = bench_sequential(
+                index, streams, n_shards=n_shards, k=k, k_c=k_c,
+                capacity=capacity)
+            t_seq = min(t_seq, t)
+            t, _, hit_bat = bench_batched(
+                index, streams, n_shards=n_shards, k=k, k_c=k_c,
+                capacity=capacity)
+            t_bat = min(t_bat, t)
+        row = {
+            "sessions": n_sessions, "turns": int(streams[0].shape[0]),
+            "queries": n_q,
+            "sequential_s": t_seq, "batched_s": t_bat,
+            "sequential_qps": n_q / t_seq, "batched_qps": n_q / t_bat,
+            "speedup": t_seq / max(t_bat, 1e-12),
+            "hit_rate_sequential": hit_seq, "hit_rate_batched": hit_bat,
+        }
+        rows.append(row)
+        print(f"sessions={n_sessions:4d}  sequential {row['sequential_qps']:8.1f} q/s"
+              f"  batched {row['batched_qps']:8.1f} q/s"
+              f"  speedup {row['speedup']:.1f}x")
+    record = {"n_docs": index.n_docs, "dim": world.cfg.dim, "k": k,
+              "k_c": k_c, "n_shards": n_shards, "rows": rows,
+              "timestamp": time.time()}
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run for CI (8 sessions, tiny world)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    if args.smoke:
+        cfg = WorldConfig(n_topics=4, docs_per_topic=200, n_background=1000,
+                          dim=64, subspace_dim=8, turns=3, n_conversations=8,
+                          doc_sigma=0.6, query_sigma=0.12, drift_sigma=0.16,
+                          subtopic_prob=0.35, subtopic_sigma=0.75, seed=7)
+        run((8,), turns=3, k_c=50, repeats=1, world_cfg=cfg,
+            out_path=args.out)
+    else:
+        run(out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,12 +11,23 @@ State layout (all pre-allocated; ``-1`` ids / ``-inf`` radii mark empty slots):
   doc_stamp (capacity,)       last-use step (for the beyond-paper LRU policy)
   q_emb     (max_queries, dim) embeddings of queries answered by the back-end
   q_radius  (max_queries,)    r_a — distance of the k_c-th doc retrieved
-  n_docs, n_queries, step     scalars
+  n_docs, step                scalars
+  n_queries                   total queries ever recorded (monotone); the
+                              query records live in a ring, so the number of
+                              *valid* records is min(n_queries, max_queries)
 
 Paper-faithful behaviour: no eviction (overflowing inserts are an error in
 strict mode / dropped otherwise); the LowQuality test of Eq. 3/4 decides
 hits.  Beyond-paper extensions (flagged, off by default): LRU eviction and
 distance-based ("ball") eviction so unbounded conversations stay bounded.
+
+Batched multi-session serving: every op also ships in a session-batched
+variant (``probe_batched`` / ``query_batched`` / ``insert_batched``) over a
+``CacheState`` whose leaves carry a leading session axis
+(``init_batched_cache``).  The batched ops are ``vmap``s of the scalar ops —
+per session they compute exactly the same result — plus per-session ``do``
+/ ``record`` masks so a wave of concurrent turns with mixed hits and misses
+updates only the sessions that actually missed.
 """
 
 from __future__ import annotations
@@ -30,7 +41,9 @@ import jax.numpy as jnp
 from repro.core import embedding as emb
 
 __all__ = ["CacheState", "CacheConfig", "init_cache", "probe", "query",
-           "insert", "MetricCache"]
+           "insert", "MetricCache", "init_batched_cache", "reset_sessions",
+           "probe_batched", "query_batched", "insert_batched",
+           "BatchedMetricCache"]
 
 
 class CacheState(NamedTuple):
@@ -110,47 +123,67 @@ def _dedup_mask(new_ids: jax.Array, existing_ids: jax.Array) -> jax.Array:
     return jnp.logical_and(~in_cache, ~dup_later)
 
 
+def _evicting_positions(state: CacheState, capacity: int, keep: jax.Array,
+                        evict_key: jax.Array, evictable: jax.Array):
+    """Write positions for kept docs under an eviction policy.
+
+    Appends fill the empty tail ([n_docs, capacity)); once the tail is
+    exhausted, the remaining kept docs overwrite ``evictable`` slots in
+    ascending ``evict_key`` order.  Non-evictable slots (empty ones, and
+    occupied slots protected by the caller) rank last and are out of reach
+    of the placeable range, so an append target can never double as an
+    eviction target of the same call — the write sets are disjoint by
+    construction.  Kept docs beyond what appends + evictions can place are
+    dropped and counted, never collapsed onto one slot.
+    """
+    rank = jnp.cumsum(keep) - 1                       # dense rank among kept
+    append_pos = state.n_docs + rank
+    evict_order = jnp.argsort(jnp.where(evictable, evict_key, jnp.inf))
+    evict_rank = rank - (capacity - state.n_docs)     # 0-based among evictions
+    evict_pos = evict_order[jnp.clip(evict_rank, 0, capacity - 1)]
+    pos = jnp.where(append_pos < capacity, append_pos, evict_pos)
+    placeable = evict_rank < evictable.sum()          # appends are < 0 here
+    pos = jnp.where(jnp.logical_and(keep, placeable), pos, capacity)
+    dropped = jnp.logical_and(keep, ~placeable).sum().astype(jnp.int32)
+    return pos, dropped
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def insert(state: CacheState, cfg: CacheConfig, psi: jax.Array, radius: jax.Array,
-           new_emb: jax.Array, new_ids: jax.Array) -> tuple[CacheState, jax.Array]:
+           new_emb: jax.Array, new_ids: jax.Array,
+           record: jax.Array | bool = True) -> tuple[CacheState, jax.Array]:
     """Insert the k_c back-end results for a missed query ``psi``.
 
-    Records (psi, r_a) for future LowQuality probes, then appends the new
-    document embeddings (deduplicated by id when cfg.dedup).  Returns
+    Records (psi, r_a) for future LowQuality probes — unless ``record`` is
+    False (degraded back-end answers carry an inflated r_a that would poison
+    the cache with false coverage claims; the docs are still worth keeping).
+    Then appends the new document embeddings (deduplicated by id when
+    cfg.dedup; ids < 0 are sentinel padding and never inserted).  Returns
     (new_state, n_dropped) where n_dropped counts docs that did not fit
-    (always 0 under the paper's sizing assumption; >0 triggers eviction when
-    cfg.eviction != "none").
+    (always 0 under the paper's sizing assumption; eviction policies only
+    drop when a single batch exceeds the whole capacity).
     """
     kc = new_ids.shape[0]
     keep = _dedup_mask(new_ids, state.doc_ids) if cfg.dedup else jnp.ones((kc,), bool)
+    keep = jnp.logical_and(keep, new_ids >= 0)
 
-    if cfg.eviction == "lru":
-        # Beyond-paper: rank existing slots by staleness; overflow overwrites
-        # the stalest slots instead of dropping.
-        n_new = keep.sum()
-        overflow = jnp.maximum(0, state.n_docs + n_new - cfg.capacity)
-        # staleness order: empty slots first (stamp -1), then oldest stamps
-        stamp = jnp.where(state.doc_ids >= 0, state.doc_stamp, -1)
-        evict_order = jnp.argsort(stamp)                       # stalest first
-        # positions: fill empty tail first, then evict stalest
-        append_pos = state.n_docs + jnp.cumsum(keep) - 1
-        evict_pos = evict_order[jnp.cumsum(keep) - 1]
-        pos = jnp.where(append_pos < cfg.capacity, append_pos, evict_pos)
-        pos = jnp.where(keep, pos, cfg.capacity)               # dropped -> OOB
-        dropped = jnp.zeros((), jnp.int32)
-        new_n = jnp.minimum(state.n_docs + n_new, cfg.capacity)
-    elif cfg.eviction == "ball":
-        # Beyond-paper: overflow evicts docs farthest from the current query.
-        n_new = keep.sum()
-        d_exist = emb.distance_from_scores(state.doc_emb @ psi)
-        d_exist = jnp.where(state.doc_ids >= 0, d_exist, jnp.inf)  # empty first... (inf = best target)
-        evict_order = jnp.argsort(-jnp.where(jnp.isinf(d_exist), 1e9, d_exist))
-        append_pos = state.n_docs + jnp.cumsum(keep) - 1
-        evict_pos = evict_order[jnp.cumsum(keep) - 1]
-        pos = jnp.where(append_pos < cfg.capacity, append_pos, evict_pos)
-        pos = jnp.where(keep, pos, cfg.capacity)
-        dropped = jnp.zeros((), jnp.int32)
-        new_n = jnp.minimum(state.n_docs + n_new, cfg.capacity)
+    if cfg.eviction in ("lru", "ball"):
+        # Slots holding ids that this batch re-retrieved are part of the
+        # (psi, r_a) coverage claim being recorded right now (dedup keeps
+        # them out of the batch precisely because they are already cached);
+        # evicting one in the same call would break the claim.
+        occupied = state.doc_ids >= 0
+        in_batch = (state.doc_ids[:, None] == new_ids[None, :]).any(axis=1)
+        evictable = jnp.logical_and(occupied, ~in_batch)
+        if cfg.eviction == "lru":
+            # Beyond-paper: overflow overwrites the stalest occupied slots.
+            key = state.doc_stamp.astype(state.q_radius.dtype)
+        else:
+            # Beyond-paper: overflow evicts docs farthest from the query.
+            key = -emb.distance_from_scores(state.doc_emb @ psi)
+        pos, dropped = _evicting_positions(state, cfg.capacity, keep, key,
+                                           evictable)
+        new_n = jnp.minimum(state.n_docs + keep.sum(), cfg.capacity)
     else:  # paper-faithful: append, drop overflow (and report it)
         append_pos = state.n_docs + jnp.cumsum(keep) - 1
         fits = append_pos < cfg.capacity
@@ -162,15 +195,20 @@ def insert(state: CacheState, cfg: CacheConfig, psi: jax.Array, radius: jax.Arra
     doc_ids = state.doc_ids.at[pos].set(new_ids, mode="drop")
     doc_stamp = state.doc_stamp.at[pos].set(state.step, mode="drop")
 
-    qslot = jnp.minimum(state.n_queries, state.q_emb.shape[0] - 1)
-    q_emb = state.q_emb.at[qslot].set(psi)
-    q_radius = state.q_radius.at[qslot].set(radius)
+    # query records live in a ring: slot = total-count mod max_queries, so a
+    # full cache overwrites the *oldest* record, not the most recent one
+    rec = jnp.asarray(record, bool)
+    qslot = jnp.mod(state.n_queries, state.q_emb.shape[0])
+    q_emb = state.q_emb.at[qslot].set(
+        jnp.where(rec, psi, state.q_emb[qslot]))
+    q_radius = state.q_radius.at[qslot].set(
+        jnp.where(rec, radius, state.q_radius[qslot]))
 
     new_state = CacheState(
         doc_emb=doc_emb, doc_ids=doc_ids, doc_stamp=doc_stamp,
         q_emb=q_emb, q_radius=q_radius,
         n_docs=new_n.astype(jnp.int32),
-        n_queries=jnp.minimum(state.n_queries + 1, state.q_emb.shape[0]).astype(jnp.int32),
+        n_queries=(state.n_queries + rec.astype(jnp.int32)),
         step=state.step + 1,
     )
     return new_state, dropped
@@ -194,6 +232,12 @@ class MetricCache:
 
     @property
     def n_queries(self) -> int:
+        """Number of *valid* query records (the ring holds the newest)."""
+        return int(min(int(self.state.n_queries), self.cfg.max_queries))
+
+    @property
+    def total_queries(self) -> int:
+        """Total queries ever recorded, including ring-overwritten ones."""
         return int(self.state.n_queries)
 
     def probe(self, psi, epsilon=None, use_kernel: bool = False) -> ProbeResult:
@@ -210,12 +254,136 @@ class MetricCache:
         out, self.state = query(self.state, psi, k)
         return out
 
-    def insert(self, psi, radius, new_emb, new_ids):
-        self.state, dropped = insert(self.state, self.cfg, psi, radius, new_emb, new_ids)
+    def insert(self, psi, radius, new_emb, new_ids, record=True):
+        self.state, dropped = insert(self.state, self.cfg, psi, radius,
+                                     new_emb, new_ids, record)
         self.total_dropped += int(dropped)
 
     def memory_bytes(self) -> int:
         """Worst-case occupancy (paper RQ1.C): embeddings dominate."""
+        s = self.state
+        return sum(int(x.size) * x.dtype.itemsize for x in
+                   (s.doc_emb, s.doc_ids, s.doc_stamp, s.q_emb, s.q_radius))
+
+
+# --------------------------------------------------------------------------
+# Session-batched variants: one stacked CacheState for S concurrent sessions.
+# Each op is a vmap of the scalar op, so per session the arithmetic — matmuls,
+# argsorts, scatters — is the same program and the results match the scalar
+# path exactly.  ``do``/``record`` masks make a mixed hit/miss wave update
+# only the sessions that missed (hit sessions keep their state bitwise).
+# --------------------------------------------------------------------------
+
+def init_batched_cache(cfg: CacheConfig, n_sessions: int) -> CacheState:
+    """A CacheState whose every leaf carries a leading (n_sessions,) axis."""
+    one = init_cache(cfg)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_sessions,) + x.shape), one)
+
+
+def reset_sessions(state: CacheState, cfg: CacheConfig,
+                   mask: jax.Array) -> CacheState:
+    """Re-initialize the sessions where ``mask`` is True; others untouched."""
+    fresh = init_batched_cache(cfg, mask.shape[0])
+    return jax.tree_util.tree_map(
+        lambda f, s: jnp.where(mask.reshape(mask.shape + (1,) * (s.ndim - 1)),
+                               f, s), fresh, state)
+
+
+@jax.jit
+def probe_batched(state: CacheState, psi: jax.Array,
+                  epsilon: jax.Array | float) -> ProbeResult:
+    """vmap of ``probe`` over the session axis: psi is (S, dim)."""
+    return jax.vmap(probe, in_axes=(0, 0, None))(state, psi, epsilon)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def query_batched(state: CacheState, psi: jax.Array, k: int):
+    """vmap of ``query``: per-session top-k over (S,)-stacked caches."""
+    return jax.vmap(query, in_axes=(0, 0, None))(state, psi, k)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def insert_batched(state: CacheState, cfg: CacheConfig, psi: jax.Array,
+                   radius: jax.Array, new_emb: jax.Array, new_ids: jax.Array,
+                   do: jax.Array | None = None,
+                   record: jax.Array | None = None):
+    """vmap of ``insert`` with per-session gating.
+
+    psi (S, dim), radius (S,), new_emb (S, kc, dim), new_ids (S, kc).
+    ``do`` masks which sessions insert at all (hit sessions pass False and
+    keep their state unchanged); ``record`` masks the (psi, r_a) query
+    record per session (False for degraded back-end answers).
+    """
+    n = new_ids.shape[0]
+    do = jnp.ones((n,), bool) if do is None else jnp.asarray(do, bool)
+    record = do if record is None else jnp.asarray(record, bool)
+
+    def _one(s, p, r, e, i, d, rec):
+        new_s, dropped = insert(s, cfg, p, r, e, i, rec)
+        merged = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(d, a, b), new_s, s)
+        return merged, jnp.where(d, dropped, 0)
+
+    return jax.vmap(_one)(state, psi, radius, new_emb, new_ids, do, record)
+
+
+class BatchedMetricCache:
+    """Stateful host wrapper over the session-batched functional ops."""
+
+    def __init__(self, cfg: CacheConfig, n_sessions: int):
+        self.cfg = cfg
+        self.n_sessions = n_sessions
+        self.state = init_batched_cache(cfg, n_sessions)
+        self.total_dropped = 0
+
+    def reset(self, sessions=None):
+        """Reset all sessions, or just the given session indices."""
+        if sessions is None:
+            self.state = init_batched_cache(self.cfg, self.n_sessions)
+            self.total_dropped = 0
+            return
+        # write only the target rows (a fresh full stacked state per open
+        # would make opening S sessions O(S^2) in state traffic)
+        idx = jnp.asarray(sessions)
+        fresh = init_cache(self.cfg)
+        self.state = jax.tree_util.tree_map(
+            lambda full, one: full.at[idx].set(one), self.state, fresh)
+
+    @property
+    def n_docs(self):
+        return jax.device_get(self.state.n_docs)
+
+    @property
+    def n_queries(self):
+        return jax.device_get(
+            jnp.minimum(self.state.n_queries, self.cfg.max_queries))
+
+    def gather(self, sessions) -> CacheState:
+        """Sub-state holding only the given session indices (a wave)."""
+        idx = jnp.asarray(sessions)
+        return jax.tree_util.tree_map(lambda x: x[idx], self.state)
+
+    def scatter(self, sessions, sub: CacheState):
+        """Write a wave's updated sub-state back into the stacked state."""
+        idx = jnp.asarray(sessions)
+        self.state = jax.tree_util.tree_map(
+            lambda full, part: full.at[idx].set(part), self.state, sub)
+
+    def probe(self, psi, epsilon=None) -> ProbeResult:
+        eps = self.cfg.epsilon if epsilon is None else epsilon
+        return probe_batched(self.state, psi, eps)
+
+    def query(self, psi, k: int):
+        out, self.state = query_batched(self.state, psi, k)
+        return out
+
+    def insert(self, psi, radius, new_emb, new_ids, do=None, record=None):
+        self.state, dropped = insert_batched(
+            self.state, self.cfg, psi, radius, new_emb, new_ids, do, record)
+        self.total_dropped += int(dropped.sum())
+
+    def memory_bytes(self) -> int:
         s = self.state
         return sum(int(x.size) * x.dtype.itemsize for x in
                    (s.doc_emb, s.doc_ids, s.doc_stamp, s.q_emb, s.q_radius))

@@ -1,0 +1,9 @@
+"""Serving tier: hedging shard router, single-session engine, and the
+session-batched multi-session engine + scheduler."""
+
+from repro.serve.engine import ConversationalEngine, EngineTurn
+from repro.serve.router import MicroBatcher, ShardAnswer, ShardedRouter
+from repro.serve.session import BatchedEngine, SessionManager
+
+__all__ = ["ConversationalEngine", "EngineTurn", "MicroBatcher",
+           "ShardAnswer", "ShardedRouter", "BatchedEngine", "SessionManager"]

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core.cache import CacheConfig, MetricCache
 from repro.core.embedding import distance_from_scores, transform_queries
-from repro.serve.router import ShardAnswer, ShardedRouter
+from repro.serve.router import ShardedRouter
 
 
 def make_lm_query_encoder(params, cfg, proj: jax.Array):
@@ -48,6 +48,25 @@ class EngineTurn:
     hit: bool
     degraded: bool
     latency_s: float
+
+
+def radius_and_docs(scores: np.ndarray, ids: np.ndarray,
+                    doc_embeddings: np.ndarray):
+    """r_a and insertable docs from one merged back-end row.
+
+    The merge pads short rows (surviving shards held < k_c candidates) with
+    (score -inf, id -1) sentinels: r_a is taken from the *last valid*
+    column — the distance of the farthest doc actually retrieved, a
+    conservative under-claim — never from a sentinel, whose -inf score
+    would turn into an infinite radius.  Sentinel ids are clipped for the
+    embedding lookup; ``insert`` drops ids < 0 so they are never cached.
+    """
+    n_valid = int((ids >= 0).sum())
+    if n_valid == 0:
+        raise TimeoutError("back-end answer holds no valid documents")
+    radius = float(distance_from_scores(scores[n_valid - 1]))
+    emb = jnp.asarray(doc_embeddings[np.maximum(ids, 0)])
+    return radius, emb, jnp.asarray(ids)
 
 
 class ConversationalEngine:
@@ -80,12 +99,14 @@ class ConversationalEngine:
             try:
                 ans, degraded = self.router.search(
                     np.asarray(psi)[None], self.k_c)
-                ids = ans.ids[0]
-                emb = jnp.asarray(self.doc_embeddings[ids])
-                # r_a: distance of the k_c-th retrieved doc (unit-sphere
-                # geometry lives in one place: distance_from_scores)
-                radius = float(distance_from_scores(ans.scores[0, -1]))
-                self.cache.insert(psi, radius, emb, jnp.asarray(ids))
+                radius, emb, ids = radius_and_docs(
+                    ans.scores[0], ans.ids[0], self.doc_embeddings)
+                # A degraded merge is missing shards, so its k_c-th distance
+                # is inflated: recording (psi, r_a) would over-claim coverage
+                # and yield false hits on later turns.  Keep the docs, skip
+                # the query record (record=False).
+                self.cache.insert(psi, radius, emb, ids,
+                                  record=not degraded)
             except TimeoutError:
                 # total back-end failure: fall back to the cache if possible
                 degraded = True

@@ -1,0 +1,243 @@
+"""Session-batched serving: many concurrent conversational sessions per wave.
+
+The single-session ``ConversationalEngine`` pays one encoder call, one cache
+probe, one router round-trip, and one cache query *per turn*.  Under heavy
+traffic the same work batches: ``BatchedEngine`` holds one stacked
+``CacheState`` for S session slots and answers a wave of concurrent turns
+with
+
+  * one (batched) encoder call,
+  * one ``probe_batched`` over the wave's cache slices,
+  * one ``router.search`` for the whole miss subset (the paper batches 216
+    queries into FAISS for the same reason), scattered back per session,
+  * one ``insert_batched`` gated by per-session ``do``/``record`` masks,
+  * one ``query_batched`` for the answers.
+
+Per session the cache ops are vmaps of the scalar ops, so a wave produces
+results bit-identical to running a sequential ``ConversationalEngine`` loop
+over the same turn stream (tested).  One semantic difference is inherent to
+batching: the router degrades per *call*, so a degraded back-end wave marks
+every miss in that wave degraded (and, like the sequential engine, skips
+their (psi, r_a) records so the caches are never poisoned).
+
+``SessionManager`` puts an asynchronous front door on the engine: it maps
+external session keys to engine slots and micro-batches ``submit``-ed turns
+into waves via ``MicroBatcher`` — callers get a Future per turn, resolved
+when the wave executes (batch full or window elapsed).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import (BatchedMetricCache, CacheConfig, insert_batched,
+                              probe_batched, query_batched)
+from repro.core.embedding import distance_from_scores
+from repro.serve.engine import EngineTurn
+from repro.serve.router import MicroBatcher, ShardedRouter
+
+__all__ = ["BatchedEngine", "SessionManager"]
+
+
+class BatchedEngine:
+    """S concurrent client sessions over one stacked metric cache."""
+
+    def __init__(self, router: ShardedRouter, doc_embeddings: np.ndarray,
+                 *, dim: int, n_sessions: int, k: int = 10, k_c: int = 1000,
+                 epsilon: float = 0.04, capacity: Optional[int] = None,
+                 encoder: Optional[Callable] = None):
+        self.router = router
+        self.doc_embeddings = doc_embeddings
+        self.n_sessions = n_sessions
+        self.k, self.k_c, self.epsilon = k, k_c, epsilon
+        self.encoder = encoder
+        self.cache = BatchedMetricCache(CacheConfig(
+            capacity=capacity or 16 * k_c, dim=dim, epsilon=epsilon),
+            n_sessions)
+        self.turns: list[list[EngineTurn]] = [[] for _ in range(n_sessions)]
+
+    def start_session(self, session: int):
+        self.cache.reset([session])
+        self.turns[session] = []
+
+    def _bucket(self, n: int) -> int:
+        """Pad wave sizes to powers of two (capped at n_sessions): the
+        batched ops are jitted per shape, so free-running traffic would
+        otherwise pay a fresh XLA compile for every distinct wave size."""
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, self.n_sessions)
+
+    def answer_batch(self, sessions, queries) -> list:
+        """Answer one concurrent turn per listed session (a wave).
+
+        sessions: sequence of distinct session-slot indices.
+        queries: matching sequence of raw queries (or pre-transformed psi
+        when no encoder is configured).
+        Returns one entry per session, in input order: an ``EngineTurn``,
+        or a ``TimeoutError`` instance for a session whose back-end failed
+        entirely while its cache was still empty (the same per-session
+        failure a sequential engine loop raises).  Raises only when *every*
+        session in the wave is in that state.
+        """
+        t0 = time.perf_counter()
+        sids = np.asarray(sessions, np.int32)
+        if np.unique(sids).size != sids.size:
+            raise ValueError("one turn per session per wave")
+        wave = len(sids)
+        bucket = self._bucket(wave)
+        # pad the wave with copies of row 0 (probe-only: do/need are forced
+        # False and padded rows are never scattered back or reported)
+        pad_sids = np.concatenate([sids, np.repeat(sids[:1], bucket - wave)])
+        q = jnp.stack([jnp.asarray(x) for x in queries])
+        q = jnp.concatenate([q, jnp.broadcast_to(q[:1], (bucket - wave,)
+                                                 + q.shape[1:])])
+        psi = self.encoder(q) if self.encoder else q
+
+        sub = self.cache.gather(pad_sids)
+        pr = probe_batched(sub, psi, self.epsilon)
+        n_queries = np.asarray(sub.n_queries)
+        need = np.logical_or(n_queries == 0, ~np.asarray(pr.hit))
+        need[wave:] = False
+        degraded = False
+        failed = np.zeros((bucket,), bool)
+
+        if need.any():
+            miss = np.nonzero(need)[0]
+            try:
+                ans, degraded = self.router.search(
+                    np.asarray(psi)[miss], self.k_c)
+                n_valid = (ans.ids >= 0).sum(axis=1)
+                if (n_valid == 0).any():
+                    raise TimeoutError("back-end answer holds no valid docs")
+                # r_a per row from the last *valid* column (short merges are
+                # sentinel-padded); same guard as the sequential engine
+                radii = np.asarray(distance_from_scores(jnp.asarray(
+                    np.take_along_axis(ans.scores, n_valid[:, None] - 1,
+                                       axis=1)[:, 0])))
+                new_ids = np.full((bucket, self.k_c), -1, ans.ids.dtype)
+                new_ids[miss] = ans.ids
+                new_emb = np.zeros((bucket, self.k_c,
+                                    self.doc_embeddings.shape[1]),
+                                   self.doc_embeddings.dtype)
+                new_emb[miss] = self.doc_embeddings[np.maximum(ans.ids, 0)]
+                rad = np.zeros((bucket,), np.float32)
+                rad[miss] = radii
+                do = jnp.asarray(need)
+                record = do if not degraded else jnp.zeros((bucket,), bool)
+                sub, dropped = insert_batched(
+                    sub, self.cache.cfg, psi, jnp.asarray(rad),
+                    jnp.asarray(new_emb), jnp.asarray(new_ids),
+                    do=do, record=record)
+                self.cache.total_dropped += int(np.asarray(dropped).sum())
+            except TimeoutError as e:
+                # total back-end failure: miss sessions fall back to their
+                # caches; one with an empty cache fails alone, like its
+                # sequential counterpart — not the whole wave
+                degraded = True
+                failed = np.logical_and(need, np.asarray(sub.n_docs) == 0)
+                if failed[:wave].all():
+                    raise
+                outage = e
+
+        (scores, _dists, ids, _slots), sub = query_batched(sub, psi, self.k)
+        able = np.nonzero(~failed[:wave])[0]
+        # write back only real, answerable rows (padded rows are shadows of
+        # row 0; failed rows must stay exactly as they were, like a
+        # sequential engine raising before its cache query)
+        self.cache.scatter(sids[able],
+                           jax.tree_util.tree_map(lambda x: x[able], sub))
+
+        latency = time.perf_counter() - t0
+        out: list = []
+        for i, s in enumerate(sids):
+            if failed[i]:
+                out.append(TimeoutError(
+                    f"session {int(s)}: back-end down and cache empty"
+                    f" ({outage})"))
+                continue
+            turn = EngineTurn(ids=np.asarray(ids[i]),
+                              scores=np.asarray(scores[i]),
+                              hit=not bool(need[i]),
+                              degraded=bool(degraded and need[i]),
+                              latency_s=latency)
+            self.turns[int(s)].append(turn)
+            out.append(turn)
+        return out
+
+    def hit_rate(self, session: int) -> float:
+        turns = self.turns[session]
+        if len(turns) <= 1:
+            return float("nan")
+        return float(np.mean([t.hit for t in turns[1:]]))
+
+
+class SessionManager:
+    """Asynchronous front door: session keys -> engine slots -> waves.
+
+    ``submit(key, query)`` returns a Future[EngineTurn]; turns are grouped
+    into ``BatchedEngine.answer_batch`` waves by a ``MicroBatcher`` (flush
+    on batch-full or window expiry).  Two turns of the same session in one
+    wave are split into consecutive sub-waves, preserving arrival order.
+    """
+
+    def __init__(self, engine: BatchedEngine, *, window_s: float = 0.002,
+                 max_batch: Optional[int] = None):
+        self.engine = engine
+        self._slots: dict = {}
+        self._free = list(range(engine.n_sessions - 1, -1, -1))
+        self.batcher = MicroBatcher(self._run_wave,
+                                    max_batch=max_batch or engine.n_sessions,
+                                    window_s=window_s)
+
+    def open(self, key) -> int:
+        """Start a session for ``key``; returns its engine slot."""
+        if key in self._slots:
+            raise KeyError(f"session {key!r} already open")
+        if not self._free:
+            raise RuntimeError("no free session slots")
+        slot = self._free.pop()
+        self.engine.start_session(slot)
+        self._slots[key] = slot
+        return slot
+
+    def close(self, key):
+        """End a session and recycle its slot.  Flushes the pending wave
+        first so a turn already submitted for this key cannot execute
+        against the slot's next occupant."""
+        self.batcher.flush()
+        self._free.append(self._slots.pop(key))
+
+    @property
+    def active_sessions(self) -> int:
+        return len(self._slots)
+
+    def submit(self, key, query):
+        """Enqueue one turn; returns a Future resolved with its EngineTurn."""
+        return self.batcher.submit((self._slots[key], query))
+
+    def flush(self):
+        """Force the pending wave to execute now (tests, shutdown)."""
+        self.batcher.flush()
+
+    def _run_wave(self, items: list) -> list:
+        results: list = [None] * len(items)
+        pending = list(enumerate(items))
+        while pending:      # split same-session turns into ordered sub-waves
+            seen, now, later = set(), [], []
+            for entry in pending:
+                (_, (slot, _)) = entry
+                (now if slot not in seen else later).append(entry)
+                seen.add(slot)
+            turns = self.engine.answer_batch([s for _, (s, _) in now],
+                                             [q for _, (_, q) in now])
+            for (pos, _), turn in zip(now, turns):
+                results[pos] = turn
+            pending = later
+        return results

@@ -210,6 +210,144 @@ def test_eviction_full_cache_overflow_stays_consistent(eviction):
     assert {int(i) for i in range(100, 110)} <= set(occupied.tolist())
 
 
+@pytest.mark.parametrize("eviction", ["lru", "ball"])
+def test_eviction_insert_straddling_capacity_no_self_clobber(eviction):
+    """Regression: an insert straddling the capacity boundary must append
+    and evict to disjoint slots — the old position assignment indexed evict
+    targets from the front of the staleness order (empty tail slots first),
+    clobbering its own freshly appended docs once the batch spilled past
+    the order's occupied region."""
+    dim, cap = 8, 16
+    cache = MetricCache(CacheConfig(capacity=cap, dim=dim, eviction=eviction))
+    rng = np.random.default_rng(0)
+    psi = jnp.asarray(_unit_rows(rng, 1, dim)[0])
+    cache.insert(psi, jnp.asarray(0.9, jnp.float32),
+                 jnp.asarray(_unit_rows(rng, 10, dim)),
+                 jnp.arange(10, dtype=jnp.int32))
+    # 20 new docs into 6 free slots: 6 append, 10 evict, 4 genuinely cannot
+    # fit (the batch alone exceeds capacity) and must be counted as dropped
+    cache.insert(psi, jnp.asarray(0.9, jnp.float32),
+                 jnp.asarray(_unit_rows(rng, 20, dim)),
+                 jnp.arange(100, 120, dtype=jnp.int32))
+    ids = np.asarray(cache.state.doc_ids)
+    occupied = ids[ids >= 0]
+    assert cache.n_docs == cap and occupied.size == cap
+    assert np.unique(occupied).size == occupied.size
+    landed = [i for i in range(100, 120) if i in occupied]
+    assert len(landed) == cap                 # old code lost part of the batch
+    assert cache.total_dropped == 20 - cap
+
+
+@pytest.mark.parametrize("eviction", ["lru", "ball"])
+def test_eviction_partial_overflow_keeps_whole_batch(eviction):
+    """A batch that straddles capacity but fits overall loses nothing."""
+    dim, cap = 8, 16
+    cache = MetricCache(CacheConfig(capacity=cap, dim=dim, eviction=eviction))
+    rng = np.random.default_rng(1)
+    psi = jnp.asarray(_unit_rows(rng, 1, dim)[0])
+    cache.insert(psi, jnp.asarray(0.9, jnp.float32),
+                 jnp.asarray(_unit_rows(rng, 12, dim)),
+                 jnp.arange(12, dtype=jnp.int32))
+    cache.insert(psi, jnp.asarray(0.9, jnp.float32),
+                 jnp.asarray(_unit_rows(rng, 10, dim)),
+                 jnp.arange(100, 110, dtype=jnp.int32))
+    ids = np.asarray(cache.state.doc_ids)
+    occupied = ids[ids >= 0]
+    assert cache.n_docs == cap and occupied.size == cap
+    assert np.unique(occupied).size == occupied.size
+    assert {int(i) for i in range(100, 110)} <= set(occupied.tolist())
+    assert cache.total_dropped == 0
+
+
+@pytest.mark.parametrize("eviction", ["lru", "ball"])
+def test_eviction_never_evicts_docs_rejoined_by_same_batch(eviction):
+    """A doc whose id appears in the incoming batch is part of the
+    (psi, r_a) claim being recorded: dedup keeps it out of the batch
+    *because* it is cached, so the same call must not evict it."""
+    dim, cap = 8, 8
+    cache = MetricCache(CacheConfig(capacity=cap, dim=dim, eviction=eviction))
+    rng = np.random.default_rng(6)
+    psi = jnp.asarray(_unit_rows(rng, 1, dim)[0])
+    cache.insert(psi, jnp.asarray(0.9, jnp.float32),
+                 jnp.asarray(_unit_rows(rng, cap, dim)),
+                 jnp.arange(cap, dtype=jnp.int32))
+    # full cache; new answer re-retrieves cached id 0 plus 7 fresh docs
+    new_ids = np.asarray([0, 100, 101, 102, 103, 104, 105, 106], np.int32)
+    cache.insert(jnp.asarray(_unit_rows(rng, 1, dim)[0]),
+                 jnp.asarray(0.9, jnp.float32),
+                 jnp.asarray(_unit_rows(rng, 8, dim)), jnp.asarray(new_ids))
+    occupied = set(np.asarray(cache.state.doc_ids).tolist())
+    assert 0 in occupied                      # the re-claimed doc survived
+    assert {100, 101, 102, 103, 104, 105, 106} <= occupied
+    assert cache.n_docs == cap
+
+
+def test_query_slots_ring_overwrite_oldest():
+    """Past max_queries inserts, the ring overwrites the *oldest* record —
+    the old clamp kept slot max_queries-1 forever, losing the newest."""
+    dim = 8
+    cfg = CacheConfig(capacity=256, dim=dim, max_queries=4)
+    cache = MetricCache(cfg)
+    rng = np.random.default_rng(2)
+    for i in range(6):
+        cache.insert(jnp.asarray(_unit_rows(rng, 1, dim)[0]),
+                     jnp.asarray(float(i), jnp.float32),
+                     jnp.asarray(_unit_rows(rng, 2, dim)),
+                     jnp.arange(2 * i, 2 * i + 2, dtype=jnp.int32))
+    assert cache.n_queries == 4 and cache.total_queries == 6
+    # slots 0,1 held queries 0,1 — overwritten by 4,5; slots 2,3 survive
+    np.testing.assert_array_equal(np.asarray(cache.state.q_radius),
+                                  np.asarray([4.0, 5.0, 2.0, 3.0], np.float32))
+
+
+def test_query_slots_ring_probe_reflects_newest():
+    """The most recent query must stay probe-able after the ring wraps."""
+    dim = 8
+    cfg = CacheConfig(capacity=256, dim=dim, max_queries=4)
+    cache = MetricCache(cfg)
+    rng = np.random.default_rng(3)
+    psis = _unit_rows(rng, 6, dim)
+    for i in range(6):
+        cache.insert(jnp.asarray(psis[i]), jnp.asarray(0.5, jnp.float32),
+                     jnp.asarray(_unit_rows(rng, 2, dim)),
+                     jnp.arange(2 * i, 2 * i + 2, dtype=jnp.int32))
+    # probing exactly the newest recorded query: ~zero self-distance (sqrt
+    # of float32 rounding leaves ~3e-4), so r_hat ~= r_a
+    pr = cache.probe(jnp.asarray(psis[5]), epsilon=0.4)
+    assert bool(pr.hit) and abs(float(pr.r_hat) - 0.5) < 1e-3
+    # the oldest queries were evicted from the ring: a re-probe of query 0
+    # no longer finds its own record (distance-0 self-match), so its best
+    # r_hat drops below the self-match value of 0.5
+    pr_old = cache.probe(jnp.asarray(psis[0]), epsilon=0.4)
+    assert float(pr_old.r_hat) < 0.5 - 1e-3 and not bool(pr_old.hit)
+
+
+def test_insert_record_false_keeps_docs_skips_query_record():
+    """Degraded back-end answers: docs are cached, (psi, r_a) is not."""
+    rng, idx = _mini_world()
+    cache = MetricCache(CacheConfig(capacity=128, dim=idx.dim))
+    q = idx.transform_queries(jnp.asarray(rng.standard_normal(24).astype(np.float32)))
+    res = idx.search(q[None], 50)
+    cache.insert(q, res.distances[0, -1], idx.doc_emb[res.ids[0]], res.ids[0],
+                 record=False)
+    assert cache.n_docs == 50 and cache.n_queries == 0
+    assert not bool(cache.probe(q).hit)       # no record -> no coverage claim
+
+
+def test_insert_ignores_sentinel_ids():
+    """ids < 0 are merge padding, never inserted — even into a full cache."""
+    dim = 8
+    cache = MetricCache(CacheConfig(capacity=16, dim=dim))
+    rng = np.random.default_rng(4)
+    psi = jnp.asarray(_unit_rows(rng, 1, dim)[0])
+    ids = np.arange(8, dtype=np.int32)
+    ids[5:] = -1
+    cache.insert(psi, jnp.asarray(0.9, jnp.float32),
+                 jnp.asarray(_unit_rows(rng, 8, dim)), jnp.asarray(ids))
+    assert cache.n_docs == 5
+    assert (np.asarray(cache.state.doc_ids) >= 0).sum() == 5
+
+
 # ---------------------------------------------------------------- driver
 def test_conversation_first_turn_always_miss():
     _, idx = _mini_world()

@@ -1,0 +1,350 @@
+"""Batched serving tests: MicroBatcher plumbing, short-merge padding,
+BatchedEngine equivalence to the sequential engine, SessionManager waves."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metric_index import MetricIndex
+from repro.data.conversations import WorldConfig, make_world
+from repro.serve.engine import ConversationalEngine
+from repro.serve.router import MicroBatcher, ShardAnswer, ShardedRouter
+from repro.serve.session import BatchedEngine, SessionManager
+
+jax.config.update("jax_platform_name", "cpu")
+
+WORLD = WorldConfig(n_topics=6, docs_per_topic=300, n_background=1500,
+                    dim=96, subspace_dim=8, turns=5, n_conversations=6,
+                    doc_sigma=0.6, query_sigma=0.12, drift_sigma=0.16,
+                    subtopic_prob=0.35, subtopic_sigma=0.75, seed=5)
+
+
+@pytest.fixture(scope="module")
+def world():
+    return make_world(WORLD)
+
+
+@pytest.fixture(scope="module")
+def index(world):
+    return MetricIndex(jnp.asarray(world.doc_emb, jnp.float32))
+
+
+def make_shards(index, n_shards, fail=()):
+    docs = np.asarray(index.doc_emb[:index.n_docs])
+    ids = np.arange(index.n_docs)
+    bounds = np.linspace(0, index.n_docs, n_shards + 1).astype(int)
+    shards = []
+    for i in range(n_shards):
+        d, did = docs[bounds[i]:bounds[i + 1]], ids[bounds[i]:bounds[i + 1]]
+
+        def shard(queries, k, d=d, did=did, i=i):
+            if i in fail:
+                raise RuntimeError(f"shard {i} down")
+            scores = queries @ d.T
+            top = np.argsort(-scores, axis=1)[:, :k]
+            return ShardAnswer(np.take_along_axis(scores, top, axis=1),
+                               did[top])
+        shards.append(shard)
+    return shards
+
+
+def _streams(world, index, n_sessions):
+    convs = world.conversations
+    return [np.asarray(index.transform_queries(
+        jnp.asarray(convs[s % len(convs)].queries, jnp.float32)))
+        for s in range(n_sessions)]
+
+
+# ------------------------------------------------------------ MicroBatcher
+def test_microbatcher_full_batch_flushes_inline():
+    calls = []
+
+    def fn(items):
+        calls.append(list(items))
+        return [x * 10 for x in items]
+
+    mb = MicroBatcher(fn, max_batch=3, window_s=60.0)   # window can't fire
+    futs = [mb.submit(i) for i in range(3)]
+    assert [f.result(timeout=1) for f in futs] == [0, 10, 20]
+    assert calls == [[0, 1, 2]]
+
+
+def test_microbatcher_window_flushes_stragglers():
+    """A lone request below max_batch must still complete within ~window_s —
+    the old MicroBatcher never honored window_s and stranded it forever."""
+    mb = MicroBatcher(lambda items: [x + 1 for x in items],
+                      max_batch=64, window_s=0.05)
+    t0 = time.monotonic()
+    fut = mb.submit(41)
+    assert fut.result(timeout=2) == 42
+    assert time.monotonic() - t0 < 1.0
+
+
+def test_microbatcher_routes_results_to_submitters():
+    mb = MicroBatcher(lambda items: [x * x for x in items],
+                      max_batch=4, window_s=0.02)
+    futs = {x: mb.submit(x) for x in (3, 5, 7)}          # below max_batch
+    for x, fut in futs.items():
+        assert fut.result(timeout=2) == x * x
+
+
+def test_microbatcher_exception_fails_all_waiters():
+    def boom(items):
+        raise RuntimeError("backend exploded")
+
+    mb = MicroBatcher(boom, max_batch=2, window_s=60.0)
+    f1, f2 = mb.submit(1), mb.submit(2)
+    for f in (f1, f2):
+        with pytest.raises(RuntimeError, match="exploded"):
+            f.result(timeout=1)
+
+
+def test_microbatcher_exception_result_fails_only_its_waiter():
+    """A per-item exception *result* routes to its own submitter; the rest
+    of the batch still succeeds (per-session back-end failures)."""
+    def fn(items):
+        return [ValueError(f"bad {x}") if x < 0 else x * 2 for x in items]
+
+    mb = MicroBatcher(fn, max_batch=3, window_s=60.0)
+    f1, f2, f3 = mb.submit(1), mb.submit(-5), mb.submit(3)
+    assert f1.result(timeout=1) == 2 and f3.result(timeout=1) == 6
+    with pytest.raises(ValueError, match="bad -5"):
+        f2.result(timeout=1)
+
+
+def test_microbatcher_serializes_batch_execution():
+    """Overlapping flushes (timer vs batch-full) must not run fn
+    concurrently — a stateful fn (a BatchedEngine wave) is not re-entrant."""
+    import threading
+    active, overlaps = [0], [0]
+    lock = threading.Lock()
+
+    def fn(items):
+        with lock:
+            active[0] += 1
+            overlaps[0] = max(overlaps[0], active[0])
+        time.sleep(0.05)
+        with lock:
+            active[0] -= 1
+        return items
+
+    mb = MicroBatcher(fn, max_batch=2, window_s=0.01)
+    futs = [mb.submit(i) for i in range(7)]      # mixes full + timer flushes
+    for f in futs:
+        f.result(timeout=5)
+    assert overlaps[0] == 1
+
+
+def test_microbatcher_for_router_splits_rows(world, index):
+    router = ShardedRouter(make_shards(index, 3), deadline_s=10)
+    mb = MicroBatcher.for_router(router, k=8, max_batch=4, window_s=0.02)
+    rng = np.random.default_rng(0)
+    q = np.asarray(index.transform_queries(
+        jnp.asarray(rng.standard_normal((4, WORLD.dim)), jnp.float32)))
+    futs = [mb.submit(q[i]) for i in range(4)]           # full batch
+    exact = index.search(jnp.asarray(q), 8)
+    assert router.stats.calls == 1                        # one batched call
+    for i, fut in enumerate(futs):
+        ans, degraded = fut.result(timeout=2)
+        assert not degraded
+        np.testing.assert_array_equal(ans.ids[0], np.asarray(exact.ids[i]))
+
+
+# ------------------------------------------------------- short-merge guard
+def test_merge_pads_short_answers_to_k():
+    parts = [ShardAnswer(np.asarray([[0.9, 0.1]]), np.asarray([[4, 7]])),
+             ShardAnswer(np.asarray([[0.5]]), np.asarray([[2]]))]
+    ans = ShardedRouter._merge(parts, k=6)
+    assert ans.ids.shape == (1, 6) and ans.scores.shape == (1, 6)
+    np.testing.assert_array_equal(ans.ids[0], [4, 2, 7, -1, -1, -1])
+    assert np.isneginf(ans.scores[0, 3:]).all()
+
+
+def test_engine_radius_guarded_on_short_merge(world, index):
+    """k_c larger than the corpus: the merge is sentinel-padded and r_a must
+    come from the last real doc, not the -inf pad (which would make every
+    later probe a false hit via an infinite radius)."""
+    router = ShardedRouter(make_shards(index, 2), deadline_s=10)
+    eng = ConversationalEngine(router, np.asarray(index.doc_emb),
+                               dim=index.dim, k=5, k_c=index.n_docs + 50)
+    eng.start_session()
+    qt = _streams(world, index, 1)[0]
+    turn = eng.answer(qt[0])
+    assert not turn.degraded
+    radius = float(np.asarray(eng.cache.state.q_radius[0]))
+    assert np.isfinite(radius) and radius <= 2.0          # max unit-sphere gap
+    assert eng.cache.n_docs == index.n_docs               # pads never cached
+
+
+# ------------------------------------------- BatchedEngine == sequential
+def test_batched_engine_bit_identical_to_sequential_loop(world, index):
+    S, T, k, k_c = 6, 5, 10, 120
+    doc = np.asarray(index.doc_emb)
+    seq_router = ShardedRouter(make_shards(index, 4), deadline_s=30)
+    seq = [ConversationalEngine(seq_router, doc, dim=index.dim, k=k, k_c=k_c)
+           for _ in range(S)]
+    bat = BatchedEngine(ShardedRouter(make_shards(index, 4), deadline_s=30),
+                        doc, dim=index.dim, n_sessions=S, k=k, k_c=k_c)
+    streams = _streams(world, index, S)
+    for s in range(S):
+        seq[s].start_session()
+        bat.start_session(s)
+    for t in range(T):
+        wave = bat.answer_batch(list(range(S)), [streams[s][t] for s in range(S)])
+        for s in range(S):
+            ref = seq[s].answer(streams[s][t])
+            np.testing.assert_array_equal(ref.ids, wave[s].ids)
+            np.testing.assert_array_equal(ref.scores, wave[s].scores)
+            assert ref.hit == wave[s].hit and ref.degraded == wave[s].degraded
+    # cache states match leaf-for-leaf (q_radius to BLAS batch-vs-row noise:
+    # the radii derive from router *scores*, and NumPy GEMM results differ
+    # in the last ulp between batch sizes)
+    ref_state = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[e.cache.state for e in seq])
+    for name, a, b in zip(type(bat.cache.state)._fields, ref_state,
+                          bat.cache.state):
+        if name == "q_radius":
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"leaf {name}")
+    for s in range(S):
+        assert seq[s].hit_rate() == bat.hit_rate(s)
+
+
+def test_batched_engine_partial_waves_match_sequential(world, index):
+    """Waves smaller than n_sessions are padded to bucket sizes; the real
+    rows must still reproduce the sequential engines exactly."""
+    S, k, k_c = 5, 8, 100
+    doc = np.asarray(index.doc_emb)
+    seq_router = ShardedRouter(make_shards(index, 3), deadline_s=30)
+    seq = [ConversationalEngine(seq_router, doc, dim=index.dim, k=k, k_c=k_c)
+           for _ in range(S)]
+    bat = BatchedEngine(ShardedRouter(make_shards(index, 3), deadline_s=30),
+                        doc, dim=index.dim, n_sessions=S, k=k, k_c=k_c)
+    streams = _streams(world, index, S)
+    for s in range(S):
+        seq[s].start_session()
+        bat.start_session(s)
+    # waves of 3 then 2 sessions per turn (bucket-padded to 4 and 2)
+    for t in range(4):
+        for group in ([0, 1, 2], [3, 4]):
+            wave = bat.answer_batch(group, [streams[s][t] for s in group])
+            for s, got in zip(group, wave):
+                ref = seq[s].answer(streams[s][t])
+                np.testing.assert_array_equal(ref.ids, got.ids)
+                np.testing.assert_array_equal(ref.scores, got.scores)
+                assert ref.hit == got.hit
+
+
+def test_batched_engine_outage_fails_only_empty_sessions(world, index):
+    """Total back-end failure: a warm session's turn still answers from its
+    cache, while a fresh (empty-cache) session in the same wave fails alone
+    — mirroring the per-session TimeoutError of the sequential loop."""
+    router = ShardedRouter(make_shards(index, 2), deadline_s=10)
+    eng = BatchedEngine(router, np.asarray(index.doc_emb), dim=index.dim,
+                        n_sessions=2, k=5, k_c=100)
+    streams = _streams(world, index, 2)
+    eng.start_session(0)
+    eng.start_session(1)
+    eng.answer_batch([0], [streams[0][0]])      # warm only session 0
+    router.shards = make_shards(index, 2, fail={0, 1})
+    wave = eng.answer_batch([0, 1], [streams[0][1], streams[1][0]])
+    from repro.serve.engine import EngineTurn
+    assert isinstance(wave[0], EngineTurn) and wave[0].ids.shape == (5,)
+    assert wave[0].degraded or wave[0].hit
+    assert isinstance(wave[1], TimeoutError)
+    assert len(eng.turns[1]) == 0               # failed turn never recorded
+    # a wave where every member is an empty-cache miss still raises
+    with pytest.raises(TimeoutError):
+        eng.answer_batch([1], [streams[1][0]])
+
+
+def test_batched_engine_cache_survives_backend_outage(world, index):
+    S = 3
+    router = ShardedRouter(make_shards(index, 2), deadline_s=10)
+    eng = BatchedEngine(router, np.asarray(index.doc_emb), dim=index.dim,
+                        n_sessions=S, k=5, k_c=100)
+    streams = _streams(world, index, S)
+    for s in range(S):
+        eng.start_session(s)
+    eng.answer_batch(list(range(S)), [streams[s][0] for s in range(S)])
+    router.shards = make_shards(index, 2, fail={0, 1})    # total outage
+    wave = eng.answer_batch(list(range(S)), [streams[s][1] for s in range(S)])
+    for s, turn in enumerate(wave):
+        if not turn.hit:
+            assert turn.degraded
+        assert turn.ids.shape == (5,) and (turn.ids >= 0).all()
+
+
+def test_batched_engine_rejects_duplicate_sessions_in_wave(world, index):
+    router = ShardedRouter(make_shards(index, 2), deadline_s=10)
+    eng = BatchedEngine(router, np.asarray(index.doc_emb), dim=index.dim,
+                        n_sessions=2, k=5, k_c=50)
+    q = _streams(world, index, 1)[0][0]
+    with pytest.raises(ValueError, match="one turn per session"):
+        eng.answer_batch([0, 0], [q, q])
+
+
+# ----------------------------------------------------------- SessionManager
+def test_session_manager_waves_match_sequential(world, index):
+    S, T, k, k_c = 4, 4, 8, 100
+    doc = np.asarray(index.doc_emb)
+    seq_router = ShardedRouter(make_shards(index, 3), deadline_s=30)
+    seq = [ConversationalEngine(seq_router, doc, dim=index.dim, k=k, k_c=k_c)
+           for _ in range(S)]
+    for e in seq:
+        e.start_session()
+    eng = BatchedEngine(ShardedRouter(make_shards(index, 3), deadline_s=30),
+                        doc, dim=index.dim, n_sessions=S, k=k, k_c=k_c)
+    mgr = SessionManager(eng, window_s=10.0, max_batch=S)  # flush on full
+    streams = _streams(world, index, S)
+    for s in range(S):
+        mgr.open(f"user-{s}")
+    for t in range(T):
+        futs = [mgr.submit(f"user-{s}", streams[s][t]) for s in range(S)]
+        for s, fut in enumerate(futs):
+            turn = fut.result(timeout=30)
+            ref = seq[s].answer(streams[s][t])
+            np.testing.assert_array_equal(ref.ids, turn.ids)
+            np.testing.assert_array_equal(ref.scores, turn.scores)
+            assert ref.hit == turn.hit
+
+
+def test_session_manager_splits_same_session_turns(world, index):
+    """Two turns of one session submitted into one wave must execute in
+    arrival order (sub-waves), not collide in a single batched call."""
+    eng = BatchedEngine(ShardedRouter(make_shards(index, 2), deadline_s=30),
+                        np.asarray(index.doc_emb), dim=index.dim,
+                        n_sessions=2, k=5, k_c=80)
+    mgr = SessionManager(eng, window_s=10.0, max_batch=3)
+    mgr.open("a")
+    mgr.open("b")
+    qa = _streams(world, index, 1)[0]
+    f1 = mgr.submit("a", qa[0])
+    f2 = mgr.submit("b", qa[0])
+    f3 = mgr.submit("a", qa[1])            # same session, same wave -> split
+    t1, t2, t3 = (f.result(timeout=30) for f in (f1, f2, f3))
+    assert not t1.hit                       # compulsory first miss
+    assert len(eng.turns[0]) == 2           # both turns landed, in order
+    assert eng.turns[0][0] is t1 and eng.turns[0][1] is t3
+
+
+def test_session_manager_window_flush_and_slot_reuse(world, index):
+    eng = BatchedEngine(ShardedRouter(make_shards(index, 2), deadline_s=30),
+                        np.asarray(index.doc_emb), dim=index.dim,
+                        n_sessions=1, k=5, k_c=50)
+    mgr = SessionManager(eng, window_s=0.05, max_batch=8)
+    mgr.open("x")
+    q = _streams(world, index, 1)[0]
+    fut = mgr.submit("x", q[0])             # below max_batch: window flushes
+    assert fut.result(timeout=10).ids.shape == (5,)
+    mgr.close("x")
+    assert mgr.active_sessions == 0
+    slot = mgr.open("y")                    # slot recycled, cache reset
+    assert slot == 0 and eng.cache.n_docs[0] == 0
+    with pytest.raises(RuntimeError, match="no free session slots"):
+        mgr._free.clear() or mgr.open("z")

@@ -144,6 +144,77 @@ def test_router_hedge_winner_merged_once(world, index):
     np.testing.assert_array_equal(ans2.ids, np.asarray(exact.ids))
 
 
+def test_degraded_turn_does_not_poison_cache(world, index):
+    """Regression: a *degraded* back-end answer (shards missing) carries an
+    inflated k_c-th distance.  Recording that (psi, r_a) made the cache
+    over-claim coverage: a repeat of the same query would falsely hit.  The
+    engine must skip the record, so the repeat goes back to the back-end —
+    exactly as an exact turn stream would behave for an unknown region."""
+    from repro.serve.engine import ConversationalEngine
+    from repro.serve.router import ShardedRouter
+    conv = world.conversations[0]
+    qt = index.transform_queries(jnp.asarray(conv.queries, jnp.float32))
+
+    # healthy baseline: answering the same query twice is a certain hit
+    healthy = ConversationalEngine(
+        ShardedRouter(_make_shards(index, 4), deadline_s=5),
+        np.asarray(index.doc_emb), dim=index.dim, k=5, k_c=150)
+    healthy.start_session()
+    healthy.answer(np.asarray(qt[0]))
+    assert healthy.answer(np.asarray(qt[0])).hit
+
+    # degraded first turn: shard 2 is down, the answer merges 3/4 shards
+    degraded_eng = ConversationalEngine(
+        ShardedRouter(_make_shards(index, 4, fail={2}), deadline_s=5),
+        np.asarray(index.doc_emb), dim=index.dim, k=5, k_c=150)
+    degraded_eng.start_session()
+    turn1 = degraded_eng.answer(np.asarray(qt[0]))
+    assert turn1.degraded and not turn1.hit
+    # no (psi, r_a) record -> no false coverage claim on the repeat
+    assert degraded_eng.cache.n_queries == 0
+    turn2 = degraded_eng.answer(np.asarray(qt[0]))
+    assert not turn2.hit
+    # the cached docs were still useful as a fallback corpus
+    assert degraded_eng.cache.n_docs > 0
+
+
+def test_concurrent_sessions_through_session_manager(world, index):
+    """Concurrent multi-session scenario: S interleaved sessions submitted
+    through SessionManager waves must reproduce S independent sequential
+    engines turn-for-turn (ids, scores, hit flags, hit rates)."""
+    from repro.serve.engine import ConversationalEngine
+    from repro.serve.router import ShardedRouter
+    from repro.serve.session import BatchedEngine, SessionManager
+    S, k, k_c = 4, 8, 120
+    doc = np.asarray(index.doc_emb)
+    seq_router = ShardedRouter(_make_shards(index, 4), deadline_s=30)
+    seq = [ConversationalEngine(seq_router, doc, dim=index.dim, k=k, k_c=k_c)
+           for _ in range(S)]
+    for e in seq:
+        e.start_session()
+    eng = BatchedEngine(ShardedRouter(_make_shards(index, 4), deadline_s=30),
+                        doc, dim=index.dim, n_sessions=S, k=k, k_c=k_c)
+    mgr = SessionManager(eng, window_s=10.0, max_batch=S)
+    streams = []
+    for s in range(S):
+        conv = world.conversations[s % len(world.conversations)]
+        streams.append(np.asarray(index.transform_queries(
+            jnp.asarray(conv.queries, jnp.float32))))
+        mgr.open(s)
+    turns = streams[0].shape[0]
+    for t in range(turns):
+        futs = [mgr.submit(s, streams[s][t]) for s in range(S)]
+        for s, fut in enumerate(futs):
+            got = fut.result(timeout=60)
+            ref = seq[s].answer(streams[s][t])
+            np.testing.assert_array_equal(ref.ids, got.ids)
+            np.testing.assert_array_equal(ref.scores, got.scores)
+            assert ref.hit == got.hit
+    for s in range(S):
+        assert seq[s].hit_rate() == eng.hit_rate(s)
+        assert eng.hit_rate(s) > 0.0         # sessions actually reuse work
+
+
 def test_engine_cache_survives_backend_outage(world, index):
     from repro.serve.engine import ConversationalEngine
     from repro.serve.router import ShardedRouter
