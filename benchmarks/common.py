@@ -29,7 +29,8 @@ KC_SWEEP = (125, 250, 500, 1000)
 K_EVAL = 200
 
 
-def build_index(world: TopicWorld, use_kernel: bool = False) -> MetricIndex:
+def build_index(world: TopicWorld, use_kernel: bool | None = None) -> MetricIndex:
+    """None follows the serving default: compiled kernel on TPU, jnp off it."""
     return MetricIndex(jnp.asarray(world.doc_emb, jnp.float32),
                        use_kernel=use_kernel)
 
@@ -50,6 +51,7 @@ class SweepRow:
     p_ndcg: float
     max_cache_docs: int
     per_query: dict
+    elapsed_s: float = 0.0   # wall clock of THIS row's sweep (per-policy)
 
 
 def welch_p(a: np.ndarray, b: np.ndarray) -> float:
@@ -64,6 +66,7 @@ def welch_p(a: np.ndarray, b: np.ndarray) -> float:
 def evaluate_policy(world: TopicWorld, index: MetricIndex, policy: str,
                     k_c: int, epsilon: float = 0.04,
                     conversations=None) -> SweepRow:
+    t_row = time.perf_counter()
     convs = conversations if conversations is not None else world.conversations
     per_q = {"map": [], "mrr": [], "ndcg": [], "p1": [], "p3": [],
              "cov10": [], "hit": [], "r_hat": []}
@@ -102,7 +105,8 @@ def evaluate_policy(world: TopicWorld, index: MetricIndex, policy: str,
         cov10=float(np.mean(per_q["cov10"])) if per_q["cov10"] else float("nan"),
         hit_rate=float(np.mean(per_q["hit"])) if per_q["hit"] else float("nan"),
         p_map=float("nan"), p_ndcg=float("nan"),
-        max_cache_docs=max_docs, per_query=per_q)
+        max_cache_docs=max_docs, per_query=per_q,
+        elapsed_s=time.perf_counter() - t_row)
 
 
 def attach_significance(row: SweepRow, base: SweepRow) -> SweepRow:

@@ -1,54 +1,185 @@
-"""Kernel-path benchmarks: fused kNN (vs chunked jnp) and embedding bag.
+"""Kernel-path benchmarks: dispatch-tier rows (ref / interpret / compiled)
+for the fused kNN corpus scan and the session-batched cache probe, plus the
+embedding bag.
 
-On this CPU container the Pallas kernels run in interpret mode (orders of
-magnitude slower — functional timing only); the jnp paths are the CPU
-production paths. TPU projections come from the roofline (corpus stream
+On a CPU container the Pallas kernels run in interpret mode (orders of
+magnitude slower — functional timing only, plus an equivalence gate); the
+ref (jnp) rows are the CPU production paths.  Compiled rows appear only on
+a real TPU backend.  TPU projections come from the roofline (corpus stream
 bytes / HBM bandwidth) since the scan is bandwidth-bound.
+
+Writes its row set under the ``"kernels"`` key of ``BENCH_retrieval.json``
+(merge-update, so the retrieval rows written by ``retrieval_bench`` are
+preserved).  ``--smoke`` runs tiny shapes and FAILS (non-zero exit) if the
+interpret-mode kernels disagree with the ref tier in ranking — the CI
+regression gate for the kernel path.
 """
 
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks import common as C
+from repro.core.cache import CacheConfig, init_batched_cache, probe_batched
+from repro.core.metric_index import scan_topk
+from repro.kernels import dispatch
 from repro.kernels.embedding_bag.ops import embedding_bag
 from repro.kernels.knn.ops import knn_search
 from repro.launch.roofline import HW
 
+FULL = dict(n=65536, d=768, b=16, k=100, s=64, qmax=64)
+SMOKE = dict(n=2048, d=128, b=4, k=10, s=8, qmax=16)
 
-def run():
+
+def timed(fn, n: int = 3, warmup: int = 1):
+    """Standalone copy of benchmarks.common.timed (this module must run as
+    a plain script: ``python benchmarks/kernel_bench.py --smoke``)."""
+    for _ in range(warmup):
+        out = fn()
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n, out
+
+
+def _unit(rng, shape):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def _knn_rows(p, rows, check: bool):
     rng = np.random.default_rng(0)
-    rows = {}
-    docs = rng.standard_normal((65536, 768)).astype(np.float32)
-    docs /= np.linalg.norm(docs, axis=1, keepdims=True)
-    q = rng.standard_normal((16, 768)).astype(np.float32)
-    ids = jnp.arange(docs.shape[0], dtype=jnp.int32)
-    docs_j, q_j = jnp.asarray(docs), jnp.asarray(q)
+    docs = jnp.asarray(_unit(rng, (p["n"], p["d"])))
+    q = jnp.asarray(_unit(rng, (p["b"], p["d"])))
+    ids = jnp.arange(p["n"], dtype=jnp.int32)
+    tag = f"{p['n'] // 1024}k"
+    k = p["k"]
 
-    from repro.core.metric_index import MetricIndex
-    idx = MetricIndex(docs_j, chunk=8192)
-    qt = idx.transform_queries(q_j)
-    t, _ = C.timed(lambda: idx.search(qt, 100))
-    rows["knn_jnp_chunked_64k"] = t
-    t, _ = C.timed(lambda: knn_search(docs_j, ids, q_j, 100, interpret=True),
-                   n=1, warmup=1)
-    rows["knn_pallas_interpret_64k"] = t
-    rows["knn_tpu_roofline_64k"] = docs.nbytes / HW["hbm_bw"]
+    t, ref_out = timed(lambda: knn_search(docs, ids, q, k, backend="ref"))
+    rows[f"knn_ref_{tag}"] = t
+    t, _ = timed(lambda: scan_topk(docs, ids, q, k, chunk=min(8192, p["n"]),
+                                     backend="ref"))
+    rows[f"knn_chunked_{tag}"] = t
+    t, int_out = timed(
+        lambda: knn_search(docs, ids, q, k, backend="interpret"),
+        n=1, warmup=1)
+    rows[f"knn_pallas_interpret_{tag}"] = t
+    t, _ = timed(
+        lambda: knn_search(docs, ids, q, k, backend="interpret",
+                           two_stage=True),
+        n=1, warmup=1)
+    rows[f"knn_pallas_interpret_two_stage_{tag}"] = t
+    if dispatch.on_tpu():
+        t, comp_out = timed(
+            lambda: knn_search(docs, ids, q, k, backend="compiled"))
+        rows[f"knn_pallas_compiled_{tag}"] = t
+        if check:
+            np.testing.assert_array_equal(np.asarray(comp_out[1]),
+                                          np.asarray(ref_out[1]))
+    rows[f"knn_tpu_roofline_{tag}"] = p["n"] * p["d"] * 4 / HW["hbm_bw"]
+    if check:
+        np.testing.assert_array_equal(np.asarray(int_out[1]),
+                                      np.asarray(ref_out[1]))
+        np.testing.assert_allclose(np.asarray(int_out[0]),
+                                   np.asarray(ref_out[0]),
+                                   rtol=2e-5, atol=2e-5)
 
+
+def _probe_rows(p, rows, check: bool):
+    rng = np.random.default_rng(1)
+    s, qmax, d = p["s"], p["qmax"], p["d"] + 1
+    cfg = CacheConfig(capacity=8, dim=d, max_queries=qmax)
+    state = init_batched_cache(cfg, s)
+    state = state._replace(
+        q_emb=jnp.asarray(_unit(rng, (s, qmax, d))),
+        q_radius=jnp.asarray(rng.uniform(0.2, 1.2, (s, qmax)).astype(np.float32)),
+        # mixed fills: empty, partial, and ring-wrapped sessions
+        n_queries=jnp.asarray(rng.integers(0, 2 * qmax, (s,)), jnp.int32))
+    psi = jnp.asarray(_unit(rng, (s, d)))
+    tag = f"s{s}"
+
+    t, ref_out = timed(lambda: probe_batched(state, psi, 0.04,
+                                               backend="ref"))
+    rows[f"probe_ref_{tag}"] = t
+    t, int_out = timed(lambda: probe_batched(state, psi, 0.04,
+                                               backend="interpret"),
+                         n=1, warmup=1)
+    rows[f"probe_pallas_interpret_{tag}"] = t
+    if dispatch.on_tpu():
+        t, comp_out = timed(lambda: probe_batched(state, psi, 0.04,
+                                                    backend="compiled"))
+        rows[f"probe_pallas_compiled_{tag}"] = t
+        if check:
+            np.testing.assert_array_equal(np.asarray(comp_out.nearest_q),
+                                          np.asarray(ref_out.nearest_q))
+    if check:
+        np.testing.assert_array_equal(np.asarray(int_out.hit),
+                                      np.asarray(ref_out.hit))
+        np.testing.assert_array_equal(np.asarray(int_out.nearest_q),
+                                      np.asarray(ref_out.nearest_q))
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_retrieval.json"):
+    p = SMOKE if smoke else FULL
+    rows: dict[str, float] = {}
+    _knn_rows(p, rows, check=smoke)
+    _probe_rows(p, rows, check=smoke)
+
+    rng = np.random.default_rng(0)
+    nbag = 4096 if not smoke else 256
     table = jnp.asarray(rng.standard_normal((100000, 64)).astype(np.float32))
-    bag_idx = jnp.asarray(rng.integers(0, 100000, (4096, 26)).astype(np.int32))
-    t, _ = C.timed(lambda: embedding_bag(table, bag_idx, mode="sum"))
-    rows["embedding_bag_jnp_4096x26"] = t
-    rows["embedding_bag_tpu_roofline"] = (4096 * 26 * 64 * 4) / HW["hbm_bw"]
+    bag_idx = jnp.asarray(rng.integers(0, 100000, (nbag, 26)).astype(np.int32))
+    t, _ = timed(lambda: embedding_bag(table, bag_idx, mode="sum"))
+    rows[f"embedding_bag_jnp_{nbag}x26"] = t
+    rows["embedding_bag_tpu_roofline"] = (nbag * 26 * 64 * 4) / HW["hbm_bw"]
+
+    if out_path:
+        merge_json(out_path, {"kernels": {
+            "backend": dispatch.default_backend(),
+            "shapes": dict(p), "smoke": smoke,
+            "rows_us": {k: 1e6 * v for k, v in rows.items()},
+            "timestamp": time.time(),
+        }})
     return rows
 
 
+def merge_json(path: str, updates: dict) -> None:
+    """Merge ``updates`` into a JSON object file, preserving other keys
+    (kernel_bench and retrieval_bench co-own BENCH_retrieval.json)."""
+    rec = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            rec = {}
+    if not isinstance(rec, dict):
+        rec = {}
+    rec.update(updates)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
 def main():
-    rows = run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + ref/kernel equivalence gate")
+    ap.add_argument("--out", default="BENCH_retrieval.json",
+                    help="JSON path to merge the kernels row set into")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke, out_path=args.out)
     for k, v in rows.items():
-        print(f"{k:>32} {1e3 * v:10.3f} ms")
+        print(f"{k:>40} {1e3 * v:10.3f} ms")
+    if args.smoke:
+        print("kernel smoke: interpret-mode rankings match ref")
     return rows
 
 

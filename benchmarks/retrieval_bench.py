@@ -68,8 +68,9 @@ def run(out_path: str = "BENCH_retrieval.json") -> dict:
         "rankings_identical": identical,
         "timestamp": time.time(),
     }
-    with open(out_path, "w") as f:
-        json.dump(record, f, indent=1)
+    # merge-update: keep other sections (e.g. kernel_bench's "kernels" rows)
+    from benchmarks.kernel_bench import merge_json
+    merge_json(out_path, record)
     return record
 
 

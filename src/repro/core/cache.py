@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import embedding as emb
+from repro.kernels import dispatch as kdispatch
 
 __all__ = ["CacheState", "CacheConfig", "init_cache", "probe", "query",
            "insert", "MetricCache", "init_batched_cache", "reset_sessions",
@@ -103,13 +104,21 @@ def probe(state: CacheState, psi: jax.Array, epsilon: jax.Array | float) -> Prob
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def query(state: CacheState, psi: jax.Array, k: int):
-    """NN(C, psi, k): top-k cached docs. Returns (scores, distances, ids, slots)."""
+    """NN(C, psi, k): top-k cached docs. Returns (scores, distances, ids, slots).
+
+    A cache holding fewer than k docs pads the answer with (id -1, score
+    -inf) sentinel slots; callers must drop those rows before ranking-metric
+    or result use (``serve.engine`` does).
+    """
     scores = state.doc_emb @ psi                                  # (capacity,)
     scores = jnp.where(state.doc_ids >= 0, scores, -jnp.inf)
     top_s, slots = jax.lax.top_k(scores, k)
     ids = state.doc_ids[slots]
-    # touch LRU stamps of returned docs
-    new_stamp = state.doc_stamp.at[slots].set(state.step)
+    # touch LRU stamps of returned docs — real ones only: refreshing the
+    # stamp of an empty sentinel slot would make LRU eviction prefer
+    # evicting live documents over reusing the untouched empty slot
+    touch = jnp.where(ids >= 0, slots, state.doc_stamp.shape[0])
+    new_stamp = state.doc_stamp.at[touch].set(state.step, mode="drop")
     state = state._replace(doc_stamp=new_stamp, step=state.step + 1)
     return (top_s, emb.distance_from_scores(top_s), ids, slots), state
 
@@ -240,13 +249,19 @@ class MetricCache:
         """Total queries ever recorded, including ring-overwritten ones."""
         return int(self.state.n_queries)
 
-    def probe(self, psi, epsilon=None, use_kernel: bool = False) -> ProbeResult:
+    def probe(self, psi, epsilon=None, use_kernel: bool | None = None
+              ) -> ProbeResult:
         eps = self.cfg.epsilon if epsilon is None else epsilon
+        be = kdispatch.default_backend()
+        if use_kernel is None:  # serving default: follow the dispatch tier
+            use_kernel = be != "ref"
         if use_kernel:  # fused Pallas probe (TPU; interpret elsewhere)
             from repro.kernels.cache_probe.ops import cache_probe
             st = self.state
-            hit, r_hat, idx = cache_probe(st.q_emb, psi, st.q_radius,
-                                          st.n_queries, eps)
+            hit, r_hat, idx = cache_probe(
+                st.q_emb, psi, st.q_radius, st.n_queries, eps,
+                interpret=(None if be == "ref"
+                           else kdispatch.interpret_flag(be)))
             return ProbeResult(hit, r_hat, idx)
         return probe(self.state, psi, eps)
 
@@ -290,11 +305,27 @@ def reset_sessions(state: CacheState, cfg: CacheConfig,
                                f, s), fresh, state)
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("backend",))
 def probe_batched(state: CacheState, psi: jax.Array,
-                  epsilon: jax.Array | float) -> ProbeResult:
-    """vmap of ``probe`` over the session axis: psi is (S, dim)."""
-    return jax.vmap(probe, in_axes=(0, 0, None))(state, psi, epsilon)
+                  epsilon: jax.Array | float,
+                  backend: str | None = None) -> ProbeResult:
+    """One LowQuality test per session: psi is (S, dim).
+
+    Dispatches on the kernel backend tier (``repro.kernels.dispatch``):
+    the ref tier is a vmap of the scalar ``probe``; interpret/compiled run
+    the whole wave as ONE fused Pallas launch over the stacked state
+    (``cache_probe_batched``), ring-buffer validity included.  Both tiers
+    agree bitwise on hit/nearest_q and to float tolerance on r_hat.
+    """
+    be = kdispatch.resolve(backend)
+    if be == "ref":
+        return ProbeResult(*jax.vmap(probe, in_axes=(0, 0, None))(
+            state, psi, epsilon))
+    from repro.kernels.cache_probe.ops import cache_probe_batched
+    hit, r_hat, idx = cache_probe_batched(
+        state.q_emb, psi, state.q_radius, state.n_queries, epsilon,
+        interpret=kdispatch.interpret_flag(be))
+    return ProbeResult(hit, r_hat, idx)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -370,9 +401,9 @@ class BatchedMetricCache:
         self.state = jax.tree_util.tree_map(
             lambda full, part: full.at[idx].set(part), self.state, sub)
 
-    def probe(self, psi, epsilon=None) -> ProbeResult:
+    def probe(self, psi, epsilon=None, backend=None) -> ProbeResult:
         eps = self.cfg.epsilon if epsilon is None else epsilon
-        return probe_batched(self.state, psi, eps)
+        return probe_batched(self.state, psi, eps, backend=backend)
 
     def query(self, psi, k: int):
         out, self.state = query_batched(self.state, psi, k)

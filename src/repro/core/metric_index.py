@@ -3,17 +3,20 @@
 The back-end of the paper's architecture (Fig. 2): the whole collection's
 transformed embeddings, answering ``NN(M, psi, k)`` queries exactly.
 
-Three execution paths, all bit-compatible in ranking:
-  * ``exact_nn``           — one-shot jnp reference (small corpora / oracle).
-  * ``chunked_nn``         — ``lax.scan`` over corpus chunks with a running
-                             top-k carry; bounds peak memory to O(B*chunk) and
-                             mirrors the Pallas kernel's streaming structure.
-  * ``kernels.knn``        — fused Pallas scan+top-k (imported lazily; used
-                             when ``use_kernel=True``).
+``scan_topk`` is THE corpus-scan contract: one signature, one sentinel
+convention (id -1 rows masked out, -inf result positions carry id -1),
+dispatched across the ``repro.kernels.dispatch`` tiers —
 
-The distributed (sharded corpus) search lives in ``repro.dist.retrieval`` and
-reuses ``streaming_topk`` per shard; ``MetricIndex(..., sharded=True)``
-delegates to it.
+  * ``ref``       — ``streaming_topk``: a ``lax.scan`` over corpus chunks
+                    with a running top-k carry (peak memory O(B*chunk));
+                    the production path on CPU and the oracle in tests.
+  * ``interpret`` / ``compiled`` — the fused Pallas scan+top-k
+                    (``kernels.knn``) with its cross-tile merge on chip.
+
+``MetricIndex.search``, the per-shard body of ``dist.retrieval.sharded_nn``,
+and ``dist.retrieval.DeviceShard`` all route through it, so single-device
+and device-sharded search share one scan implementation.  ``exact_nn``
+remains the one-shot full-matrix oracle for small corpora.
 """
 
 from __future__ import annotations
@@ -25,9 +28,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import embedding as emb
+from repro.kernels import dispatch as kdispatch
 
 __all__ = ["SearchResult", "exact_nn", "chunked_nn", "masked_chunked_nn",
-           "streaming_topk", "MetricIndex"]
+           "streaming_topk", "scan_topk", "MetricIndex"]
 
 
 class SearchResult(NamedTuple):
@@ -97,16 +101,47 @@ def masked_chunked_nn(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
                                       masked=True))
 
 
+def scan_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
+              *, chunk: int = 4096, backend: str | None = None,
+              tile_n: int | None = None):
+    """The one corpus-scan contract (see module docstring).
+
+    docs (N, D) with N a ``chunk`` multiple on the ref tier (the kernel
+    tiers pad internally); doc_ids (N,) int32, -1 on sentinel rows;
+    queries (B, D).  Returns raw (scores (B, k), ids (B, k)) — descending
+    scores, sentinel id -1 wherever the score is -inf — identical in
+    ranking across tiers.  Trace-safe: usable inside jit and ``shard_map``
+    bodies (``backend`` must then be a concrete tier, resolved outside).
+    """
+    be = kdispatch.resolve(backend)
+    if be == "ref":
+        return _streaming_topk_masked(docs, doc_ids, queries, k=k,
+                                      chunk=chunk)
+    from repro.kernels.knn import ops as knn_ops
+    return knn_ops.knn_search(docs, doc_ids, queries, k, tile_n=tile_n,
+                              backend=be)
+
+
+_streaming_topk_masked = jax.jit(
+    functools.partial(streaming_topk, masked=True),
+    static_argnames=("k", "chunk"))
+
+
 class MetricIndex:
     """Host-side handle over a (possibly padded) corpus of transformed embeddings.
 
     Accepts *raw* (l-dim) or *transformed* (l+1-dim, unit norm) embeddings.
     Raw input is transformed with Eq. 1 and the corpus max-norm M is kept so
     queries/documents added later share the same geometry.
+
+    ``use_kernel`` selects the scan tier: ``None`` (default) follows
+    ``kernels.dispatch.default_backend()`` — the compiled Pallas kernel on
+    TPU, the jnp streaming scan elsewhere; ``True`` pins the kernel
+    (interpret mode off-TPU); ``False`` pins the jnp scan.
     """
 
     def __init__(self, doc_emb, doc_ids=None, *, transformed: bool = False,
-                 chunk: int = 4096, use_kernel: bool = False,
+                 chunk: int = 4096, use_kernel: bool | None = None,
                  sharded: bool = False, mesh=None):
         doc_emb = jnp.asarray(doc_emb)
         if doc_ids is None:
@@ -131,6 +166,12 @@ class MetricIndex:
         self.doc_emb = emb_t
         self.doc_ids = doc_ids
         self.use_kernel = use_kernel
+        if use_kernel is None:
+            self.backend = kdispatch.default_backend()
+        elif use_kernel:
+            self.backend = kdispatch.kernel_backend()
+        else:
+            self.backend = "ref"
         self.sharded = sharded
         self.mesh = mesh
         if sharded:
@@ -151,25 +192,15 @@ class MetricIndex:
             queries = queries[None]
         k = min(k, self.n_docs)
         if self.sharded:
-            # Device-sharded corpus: per-shard streaming top-k under
+            # Device-sharded corpus: the same scan per shard under
             # shard_map, all-gather + merge (see repro.dist.retrieval).
             from repro.dist import retrieval as dist_retrieval
             return dist_retrieval.sharded_nn(self.doc_emb, self.doc_ids,
                                              queries, k, mesh=self.mesh,
-                                             chunk=self._shard_chunk)
-        if self.use_kernel:
-            from repro.kernels.knn import ops as knn_ops
-            scores, ids = knn_ops.knn_search(self.doc_emb[:self.n_docs],
-                                             self.doc_ids[:self.n_docs], queries, k)
-            res = _as_result(scores, ids)
-        elif self._pad:
-            # Masked search: padded sentinel rows carry id -1; over-fetch and
-            # drop is wasteful, instead mask via score -inf on sentinel ids.
-            res = masked_chunked_nn(self.doc_emb, self.doc_ids, queries, k,
-                                    chunk=self.chunk)
-        else:
-            res = chunked_nn(self.doc_emb, self.doc_ids, queries, k, chunk=self.chunk)
-        return res
+                                             chunk=self._shard_chunk,
+                                             backend=self.backend)
+        return _as_result(*scan_topk(self.doc_emb, self.doc_ids, queries, k,
+                                     chunk=self.chunk, backend=self.backend))
 
     def __hash__(self):  # allow use as a static jit argument
         return id(self)

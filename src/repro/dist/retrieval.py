@@ -7,11 +7,13 @@ Three layers, smallest to largest deployment:
     candidate tables stay sharded where their params live, the (B, V) score
     matrix never materializes unsharded.
   * ``sharded_nn`` — exact k-NN with the corpus sharded across a device
-    mesh: each device runs the same ``streaming_topk`` scan over its slice
-    under ``shard_map``, then the per-shard top-k are all-gathered and
-    merged.  The merge is the device-level analogue of
-    ``serve.router.ShardedRouter._merge`` and is *bit-identical* in ranking
-    to ``exact_nn`` (contiguous row sharding + stable top-k tie-breaking).
+    mesh: each device runs the same ``scan_topk`` contract over its slice
+    under ``shard_map`` (the jnp streaming scan on the ref tier, the fused
+    Pallas kernel on TPU — the SAME implementation single-device search
+    uses), then the per-shard top-k are all-gathered and merged.  The merge
+    is the device-level analogue of ``serve.router.ShardedRouter._merge``
+    and is *bit-identical* in ranking to ``exact_nn`` (contiguous row
+    sharding + stable top-k tie-breaking).
   * ``DeviceShard`` / ``make_device_shards`` — host-callable shard handles
     over device-resident corpus slices, signature-compatible with the
     callables ``ShardedRouter`` fronts, so the serving layer's hedging /
@@ -29,9 +31,9 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.metric_index import (SearchResult, _as_result,
-                                     masked_chunked_nn, streaming_topk)
+from repro.core.metric_index import SearchResult, _as_result, scan_topk
 from repro.dist.api import active_mesh
+from repro.kernels import dispatch as kdispatch
 
 __all__ = ["make_batched_scorer", "sharded_nn", "shard_corpus",
            "DeviceShard", "make_device_shards", "ShardTopK"]
@@ -123,18 +125,21 @@ def shard_corpus(docs, doc_ids, *, mesh: Optional[Mesh] = None,
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...], k: int, chunk: int):
-    """jit(shard_map) factory, cached per (mesh, axes, k, chunk).
+def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...], k: int, chunk: int,
+                       backend: str):
+    """jit(shard_map) factory, cached per (mesh, axes, k, chunk, backend).
 
-    Per device: masked streaming top-k over the local corpus slice, then an
-    all-gather of the (q, k) partials over the corpus axes and a local merge
-    — every device ends with the identical global top-k (replicated out).
+    Per device: the shared ``scan_topk`` contract over the local corpus
+    slice (jnp streaming scan or the fused Pallas kernel, per ``backend``),
+    then an all-gather of the (q, k) partials over the corpus axes and a
+    local merge — every device ends with the identical global top-k
+    (replicated out).
     """
     axis_entry = axes if len(axes) > 1 else axes[0]
 
     def local(docs, ids, queries):
-        part_s, part_i = streaming_topk(docs, ids, queries, k, chunk,
-                                        masked=True)
+        part_s, part_i = scan_topk(docs, ids, queries, k, chunk=chunk,
+                                   backend=backend)
         # shard order == row order (contiguous row sharding), so the
         # concatenated candidate list preserves global id order and the
         # stable top_k below breaks ties exactly like a global top_k.
@@ -151,8 +156,8 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...], k: int, chunk: int):
 
 
 def sharded_nn(docs, doc_ids, queries, k: int, *, mesh: Optional[Mesh] = None,
-               axes: Optional[Sequence[str]] = None,
-               chunk: int = 4096) -> SearchResult:
+               axes: Optional[Sequence[str]] = None, chunk: int = 4096,
+               backend: Optional[str] = None) -> SearchResult:
     """Exact k-NN with the corpus sharded over ``mesh`` (all its axes by
     default; the active ``sharding_rules`` mesh, else one flat axis over
     every local device, when ``mesh`` is None).
@@ -160,7 +165,9 @@ def sharded_nn(docs, doc_ids, queries, k: int, *, mesh: Optional[Mesh] = None,
     The corpus is padded with sentinel rows (id -1, masked to -inf) so each
     device gets an equal, chunk-divisible slice — a no-op when the corpus
     was pre-laid-out with ``shard_corpus`` (the serving-index fast path).
-    Rankings are bit-identical to ``exact_nn`` on the unpadded corpus.
+    ``backend`` picks the per-shard scan tier (``kernels.dispatch``; the
+    default is compiled-kernel-on-TPU / jnp elsewhere).  Rankings are
+    bit-identical to ``exact_nn`` on the unpadded corpus.
     """
     mesh, axes, n_dev = _resolve(mesh, axes)
     docs = jnp.asarray(docs)
@@ -173,7 +180,8 @@ def sharded_nn(docs, doc_ids, queries, k: int, *, mesh: Optional[Mesh] = None,
     per, chunk_eff = _slice_layout(n, n_dev, chunk)
     docs, doc_ids = _pad_corpus(docs, doc_ids, per * n_dev)
 
-    fn = _sharded_search_fn(mesh, axes, int(min(k, n)), chunk_eff)
+    fn = _sharded_search_fn(mesh, axes, int(min(k, n)), chunk_eff,
+                            kdispatch.resolve(backend))
     scores, ids = fn(docs, doc_ids, queries)
     return _as_result(scores, ids)
 
@@ -192,16 +200,19 @@ class DeviceShard:
     ``shard(queries, k) -> ShardTopK`` — the exact callable signature
     ``serve.router.ShardedRouter`` fronts, so hedging, deadlines, and
     degraded merges apply unchanged.  Concurrent router threads run their
-    shards on distinct devices in parallel.
+    shards on distinct devices in parallel.  The scan is the shared
+    ``scan_topk`` contract (``backend`` pins a ``kernels.dispatch`` tier).
     """
 
-    def __init__(self, docs, doc_ids, device=None, chunk: int = 4096):
+    def __init__(self, docs, doc_ids, device=None, chunk: int = 4096,
+                 backend: Optional[str] = None):
         docs = jnp.asarray(docs)
         doc_ids = jnp.asarray(doc_ids, jnp.int32)
         n = docs.shape[0]
         self.chunk = int(min(chunk, max(8, n)))
         docs, doc_ids = _pad_corpus(docs, doc_ids, n + (-n) % self.chunk)
         self.device = device
+        self.backend = kdispatch.resolve(backend)
         self.n_docs = n
         self.docs = jax.device_put(docs, device)
         self.doc_ids = jax.device_put(doc_ids, device)
@@ -212,9 +223,9 @@ class DeviceShard:
             q = q[None]
         if self.device is not None:
             q = jax.device_put(q, self.device)
-        res = masked_chunked_nn(self.docs, self.doc_ids, q, int(k),
-                                chunk=self.chunk)
-        return ShardTopK(np.asarray(res.scores), np.asarray(res.ids))
+        scores, ids = scan_topk(self.docs, self.doc_ids, q, int(k),
+                                chunk=self.chunk, backend=self.backend)
+        return ShardTopK(np.asarray(scores), np.asarray(ids))
 
 
 def make_device_shards(docs, doc_ids=None, *, devices=None,

@@ -1,10 +1,21 @@
-"""Fused LowQuality-probe Pallas kernel (paper Eq. 3/4).
+"""Fused LowQuality-probe Pallas kernels (paper Eq. 3/4).
 
 The probe runs on EVERY utterance, fused with the query encoder on the
 serving chip: one (Qmax, D) x (D,) matvec on the MXU, the sqrt/subtract on
 the VPU, emitting per-cached-query r_hat = r_a - delta(psi_a, psi).
 Single-tile (Qmax <= 64 cached queries by the paper's design: one per cache
 miss in a <=13-turn conversation), so the whole working set sits in VMEM.
+
+Two entry points:
+
+  * ``probe_rhat``         — one session (the original scalar kernel).
+  * ``probe_rhat_batched`` — S sessions in ONE launch: grid over the
+    session axis of a stacked cache, each step probing one (Qmax, D) record
+    block against that session's psi.  This is the serving hot path for
+    ``BatchedEngine`` waves — one kernel launch per wave instead of S
+    matvecs, with the ring-buffer validity mask (slot < n_queries, where
+    n_queries counts *total* records and the ring keeps the newest
+    min(n_queries, Qmax)) already folded into the radius operand.
 """
 
 from __future__ import annotations
@@ -40,5 +51,34 @@ def probe_rhat(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
                   pl.BlockSpec((qmax, 1), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((qmax, 1), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((qmax, 1), jnp.float32),
+        interpret=interpret,
+    )(q_emb, psi, radius)
+
+
+def _probe_batched_kernel(q_emb_ref, psi_ref, radius_ref, out_ref):
+    q = q_emb_ref[0]                                     # (Qmax, D)
+    psi = psi_ref[0]                                     # (8, D) row 0 live
+    scores = jax.lax.dot_general(
+        q, psi, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (Qmax, 8)
+    dist = jnp.sqrt(jnp.clip(2.0 - 2.0 * scores[:, :1], 0.0, None))
+    out_ref[0] = radius_ref[0] - dist                    # (Qmax, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def probe_rhat_batched(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
+                       interpret: bool = False) -> jax.Array:
+    """One launch over a stacked cache. q_emb: (S, Qmax, D) unit rows; psi:
+    (S, 8, D) (row 0 = that session's query); radius: (S, Qmax, 1) with
+    -inf on empty/invalid slots. Returns r_hat (S, Qmax, 1) f32."""
+    s, qmax, d = q_emb.shape
+    return pl.pallas_call(
+        _probe_batched_kernel,
+        grid=(s,),
+        in_specs=[pl.BlockSpec((1, qmax, d), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((1, 8, d), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((1, qmax, 1), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, qmax, 1), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, qmax, 1), jnp.float32),
         interpret=interpret,
     )(q_emb, psi, radius)

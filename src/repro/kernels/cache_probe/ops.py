@@ -1,4 +1,13 @@
-"""Public wrapper: pad/mask handling + hit decision for the probe kernel."""
+"""Public wrappers: pad/mask handling + hit decision for the probe kernels.
+
+``cache_probe`` is the single-session entry point; ``cache_probe_batched``
+fuses a whole serving wave — S sessions' LowQuality tests — into one
+Pallas launch over the stacked cache state.  Both apply the ring-buffer
+validity mask (a slot is live iff its index < n_queries; n_queries counts
+*total* records, so a wrapped ring keeps every slot live) by folding -inf
+into the radius operand, and both return nearest_q = -1 for a cache that
+holds no query records.
+"""
 
 from __future__ import annotations
 
@@ -7,7 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.cache_probe.cache_probe import probe_rhat
+from repro.kernels import dispatch
+from repro.kernels.cache_probe.cache_probe import probe_rhat, probe_rhat_batched
 
 LANE = 128
 SUBLANE = 8
@@ -20,7 +30,7 @@ def cache_probe(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
     """Fused LowQuality test. q_emb (Qmax, D); psi (D,); radius (Qmax,);
     n_queries scalar. Returns (hit, best_r_hat, best_idx)."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = dispatch.interpret_flag(dispatch.resolve(None, kernel=True))
     qmax, d = q_emb.shape
     dpad = (-d) % LANE
     qpad = (-qmax) % SUBLANE
@@ -35,3 +45,41 @@ def cache_probe(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
     best = jnp.argmax(r_hat)
     hit = jnp.logical_and(n_queries > 0, r_hat[best] >= epsilon)
     return hit, r_hat[best], jnp.where(n_queries > 0, best, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cache_probe_batched(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
+                        n_queries: jax.Array, epsilon,
+                        interpret: bool | None = None):
+    """One fused LowQuality test per session, one kernel launch total.
+
+    q_emb (S, Qmax, D) stacked record embeddings; psi (S, D) the wave's
+    queries; radius (S, Qmax); n_queries (S,) total-record counters (ring
+    semantics: valid slots are those with index < n_queries).  Returns
+    (hit (S,) bool, best_r_hat (S,) f32, best_idx (S,) int32 with -1 for
+    empty caches).
+    """
+    if interpret is None:
+        interpret = dispatch.interpret_flag(dispatch.resolve(None, kernel=True))
+    s, qmax, d = q_emb.shape
+    dpad = (-d) % LANE
+    qpad = (-qmax) % SUBLANE
+    q_emb_p = jnp.pad(q_emb, ((0, 0), (0, qpad), (0, dpad)))
+    psi_p = jnp.broadcast_to(
+        jnp.pad(psi, ((0, 0), (0, dpad)))[:, None, :],
+        (s, SUBLANE, d + dpad))
+    # ring-aware validity: n_queries is the monotone total, so a wrapped
+    # ring (n_queries >= Qmax) keeps every slot live
+    valid = jnp.arange(qmax + qpad)[None, :] < n_queries[:, None]   # (S, Qp)
+    radius_m = jnp.where(
+        valid,
+        jnp.pad(radius, ((0, 0), (0, qpad)), constant_values=-jnp.inf),
+        -jnp.inf)
+    r_hat = probe_rhat_batched(q_emb_p, psi_p, radius_m[..., None],
+                               interpret=interpret)[..., 0]         # (S, Qp)
+    r_hat = jnp.where(valid, r_hat, -jnp.inf)
+    best = jnp.argmax(r_hat, axis=1)
+    best_r = jnp.take_along_axis(r_hat, best[:, None], axis=1)[:, 0]
+    has_q = n_queries > 0
+    hit = jnp.logical_and(has_q, best_r >= epsilon)
+    return hit, best_r, jnp.where(has_q, best.astype(jnp.int32), -1)

@@ -1,0 +1,82 @@
+"""Backend dispatch for the Pallas kernel layer.
+
+Every kernel op ships in three tiers sharing one contract:
+
+  * ``ref``       — pure-jnp implementation; the production path on CPU
+                    hosts (interpret-mode Pallas is orders of magnitude
+                    slower than XLA:CPU) and the oracle in tests/benches.
+  * ``interpret`` — the Pallas kernel under the Pallas interpreter; used
+                    off-TPU to exercise the *kernel code path* (CI runs the
+                    equivalence suite in this tier on CPU).
+  * ``compiled``  — the Mosaic-compiled Pallas kernel; the serving hot path
+                    on TPU.
+
+``default_backend()`` is what serving components (``MetricIndex``,
+``probe_batched``, ``BatchedEngine``) use when the caller does not pin a
+tier: compiled on TPU, ref elsewhere.  ``kernel_backend()`` is what an
+*explicit* kernel entry point (``knn_search``, ``cache_probe``) uses:
+calling the kernel off-TPU means you want the kernel, so it degrades to
+interpret, never silently to ref.
+
+The ``REPRO_KERNEL_BACKEND`` environment variable pins the default for a
+whole process (e.g. ``REPRO_KERNEL_BACKEND=interpret`` to smoke the kernel
+path in a CPU CI job without touching call sites).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["BACKENDS", "on_tpu", "default_backend", "kernel_backend",
+           "resolve", "interpret_flag"]
+
+BACKENDS = ("ref", "interpret", "compiled")
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _env_backend() -> str | None:
+    env = os.environ.get("REPRO_KERNEL_BACKEND", "").strip().lower()
+    if not env:
+        return None
+    if env not in BACKENDS:
+        raise ValueError(
+            f"REPRO_KERNEL_BACKEND={env!r}: expected one of {BACKENDS}")
+    return env
+
+
+def default_backend() -> str:
+    """Tier for serving components that did not pin one."""
+    env = _env_backend()
+    if env is not None:
+        return env
+    return "compiled" if on_tpu() else "ref"
+
+
+def kernel_backend() -> str:
+    """Tier for explicit kernel entry points (never degrades to ref)."""
+    env = _env_backend()
+    if env is not None and env != "ref":
+        return env
+    return "compiled" if on_tpu() else "interpret"
+
+
+def resolve(backend: str | None, *, kernel: bool = False) -> str:
+    """Validate ``backend``; None picks the appropriate default tier."""
+    if backend is None:
+        return kernel_backend() if kernel else default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r}: expected one of {BACKENDS}")
+    return backend
+
+
+def interpret_flag(backend: str) -> bool:
+    """The ``interpret=`` argument a ``pallas_call`` wrapper should pass for
+    an already-resolved non-ref backend."""
+    if backend == "ref":
+        raise ValueError("ref tier never reaches a pallas_call")
+    return backend == "interpret"

@@ -1,4 +1,4 @@
-"""Fused corpus-scan + top-k Pallas TPU kernel — the paper's hot spot.
+"""Fused corpus-scan + top-k Pallas TPU kernels — the paper's hot spot.
 
 The exhaustive FAISS scan (paper Table 3, ~1 s / 216-query batch on a Xeon)
 is re-thought for the TPU memory hierarchy:
@@ -6,14 +6,29 @@ is re-thought for the TPU memory hierarchy:
   * grid over corpus tiles; each step DMAs one (TILE_N, D) tile HBM->VMEM,
   * scores = Q @ tile.T on the MXU (D is zero-padded to a lane multiple by
     the wrapper, which leaves inner products unchanged),
-  * a per-tile top-k (iterative max-extract on the VPU) so the full (B, N)
-    score matrix is NEVER materialized in HBM — the corpus is read exactly
-    once and only O(tiles * B * k) candidates are written back.
+  * top-k extraction by iterative max-extract on the VPU, so the full (B, N)
+    score matrix is NEVER materialized in HBM.
+
+Two merge strategies:
+
+  * ``knn_fused_topk`` — the serving kernel.  The running global top-k is a
+    (B, k) carry held in VMEM *scratch* across grid steps: each tile's
+    scores are merged against the carry in-register and only the final
+    (B, k) answer is ever written to HBM.  The corpus is read exactly once
+    and the candidate traffic of the two-stage scheme (O(tiles * B * k)
+    rows through HBM plus a second launch to merge) disappears entirely.
+    Validity is data-driven — scores at sentinel rows (id < 0) are masked
+    to -inf — so one kernel serves unpadded, padded, and device-sharded
+    corpora, and extracted -inf candidates report id -1, never a clipped
+    real id.
+  * ``knn_tile_topk`` — the original two-stage scheme (per-tile top-k
+    candidates to HBM, cross-tile ``lax.top_k`` merge in the wrapper), kept
+    as the A/B baseline for ``kernel_bench`` and for the k > tile_n regime.
 
 Arithmetic intensity of the scan is ~2*B flops per corpus byte, so for
 serving batches (B <= 256 at fp32) the kernel is HBM-bandwidth bound; the
 design goal is to stream at full bandwidth, which the single-pass structure
-achieves.  Final cross-tile merge is a tiny ``lax.top_k`` in the wrapper.
+achieves.
 """
 
 from __future__ import annotations
@@ -23,24 +38,112 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = float("-inf")
 
 
-def _knn_kernel(q_ref, docs_ref, out_vals_ref, out_idx_ref, *, k: int,
-                tile_n: int, n_docs: int):
+def _masked_scores(q, docs, ids):
+    """(B, TILE_N) MXU scores with sentinel rows (id < 0) masked to -inf."""
+    scores = jax.lax.dot_general(
+        q, docs, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (B, TILE_N)
+    return jnp.where(ids < 0, NEG_INF, scores)
+
+
+def _fused_kernel(q_ref, docs_ref, ids_ref, out_vals_ref, out_idx_ref,
+                  carry_v, carry_i, *, k: int):
+    """One grid step: merge one corpus tile into the VMEM top-k carry."""
+    tile = pl.program_id(0)
+
+    @pl.when(tile == 0)
+    def _init():
+        carry_v[...] = jnp.full(carry_v.shape, NEG_INF, jnp.float32)
+        carry_i[...] = jnp.full(carry_i.shape, -1, jnp.int32)
+
+    q = q_ref[...]                                     # (B, D)
+    docs = docs_ref[...]                               # (TILE_N, D)
+    ids = ids_ref[...]                                 # (1, TILE_N) int32
+    scores = _masked_scores(q, docs, ids)              # (B, TILE_N)
+    b = scores.shape[0]
+
+    # candidate pool = running carry ++ this tile; carry columns come first,
+    # so equal scores resolve to the earliest corpus position — the same
+    # tie-break a stable global lax.top_k applies.
+    cand_v = jnp.concatenate([carry_v[...], scores], axis=1)
+    cand_i = jnp.concatenate(
+        [carry_i[...], jnp.broadcast_to(ids, scores.shape)], axis=1)
+    col = jax.lax.broadcasted_iota(jnp.int32, cand_v.shape, 1)
+
+    def extract(j, s):
+        m = jnp.max(s, axis=1)                             # (B,)
+        a = jnp.argmax(s, axis=1).astype(jnp.int32)        # (B,)
+        hit = col == a[:, None]
+        # one-hot reduce instead of a gather: id at the extracted column
+        picked = jnp.sum(jnp.where(hit, cand_i, 0), axis=1).astype(jnp.int32)
+        picked = jnp.where(m == NEG_INF, -1, picked)       # sentinel, not id
+        carry_v[:, pl.dslice(j, 1)] = m[:, None]
+        carry_i[:, pl.dslice(j, 1)] = picked[:, None]
+        return jnp.where(hit, NEG_INF, s)
+
+    jax.lax.fori_loop(0, k, extract, cand_v)
+
+    @pl.when(tile == pl.num_programs(0) - 1)
+    def _emit():
+        out_vals_ref[...] = carry_v[...]
+        out_idx_ref[...] = carry_i[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_n", "interpret"))
+def knn_fused_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
+                   k: int, tile_n: int = 1024, interpret: bool = False):
+    """Single-launch exact top-k with the cross-tile merge on chip.
+
+    docs: (N, D) padded to a tile_n multiple and lane-aligned D; doc_ids:
+    (N,) int32 with -1 on padded/sentinel rows; queries: (B, D).  Returns
+    (scores (B, k) f32 descending, ids (B, k) int32, -1 at -inf positions).
+    """
+    n, d = docs.shape
+    b = queries.shape[0]
+    assert n % tile_n == 0
+    tiles = n // tile_n
+    ids_2d = doc_ids.reshape(tiles, tile_n)
+    kernel = functools.partial(_fused_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),        # queries: resident
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),   # corpus tile stream
+            pl.BlockSpec((1, tile_n), lambda i: (i, 0)),   # tile ids
+        ],
+        out_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, k), jnp.float32),               # running top-k vals
+            pltpu.VMEM((b, k), jnp.int32),                 # running top-k ids
+        ],
+        interpret=interpret,
+    )(queries, docs, ids_2d)
+
+
+def _knn_kernel(q_ref, docs_ref, ids_ref, out_vals_ref, out_idx_ref, *,
+                k: int, tile_n: int):
     """One grid step: score one corpus tile against all queries; emit top-k."""
     tile = pl.program_id(0)
     q = q_ref[...]                      # (B, D)
     docs = docs_ref[...]                # (TILE_N, D)
-    scores = jax.lax.dot_general(
-        q, docs, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)           # (B, TILE_N)
-
-    # mask out padded corpus rows in the last tile
+    ids = ids_ref[...]                  # (1, TILE_N) int32
+    # same data-driven validity as the fused kernel: sentinel rows (id < 0)
+    # can never win a per-tile extraction, wherever they sit in the corpus
+    scores = _masked_scores(q, docs, ids)             # (B, TILE_N)
     base = tile * tile_n
-    local = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-    scores = jnp.where(base + local < n_docs, scores, NEG_INF)
 
     def body(j, s):
         m = jnp.max(s, axis=1)                         # (B,)
@@ -54,25 +157,29 @@ def _knn_kernel(q_ref, docs_ref, out_vals_ref, out_idx_ref, *, k: int,
     jax.lax.fori_loop(0, k, body, scores)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "tile_n", "n_valid", "interpret"))
-def knn_tile_topk(docs: jax.Array, queries: jax.Array, k: int,
-                  tile_n: int = 1024, n_valid: int | None = None,
-                  interpret: bool = False):
-    """Per-tile top-k candidates. docs: (N, D) padded to tile_n multiple and
-    lane-aligned D; queries: (B, D). ``n_valid``: original (unpadded) corpus
-    size — padded rows are masked to -inf. Returns (tiles, B, k) vals + idx."""
+@functools.partial(jax.jit, static_argnames=("k", "tile_n", "interpret"))
+def knn_tile_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
+                  k: int, tile_n: int = 1024, interpret: bool = False):
+    """Per-tile top-k candidates (two-stage scheme). docs: (N, D) padded to a
+    tile_n multiple and lane-aligned D; doc_ids: (N,) int32 with -1 on
+    sentinel/padded rows (masked to -inf, same contract as the fused
+    kernel); queries: (B, D). Returns (tiles, B, k) vals + idx; idx are
+    *positions* in the padded corpus (a fully-masked extraction can emit
+    any position at a -inf value — the wrapper must sentinel those on
+    merge)."""
     n, d = docs.shape
     b = queries.shape[0]
     assert n % tile_n == 0 and k <= tile_n
     tiles = n // tile_n
-    kernel = functools.partial(_knn_kernel, k=k, tile_n=tile_n,
-                               n_docs=n if n_valid is None else n_valid)
+    ids_2d = doc_ids.reshape(tiles, tile_n)
+    kernel = functools.partial(_knn_kernel, k=k, tile_n=tile_n)
     return pl.pallas_call(
         kernel,
         grid=(tiles,),
         in_specs=[
             pl.BlockSpec((b, d), lambda i: (0, 0)),        # queries: resident
             pl.BlockSpec((tile_n, d), lambda i: (i, 0)),   # corpus tile stream
+            pl.BlockSpec((1, tile_n), lambda i: (i, 0)),   # tile ids
         ],
         out_specs=[
             pl.BlockSpec((1, b, k), lambda i: (i, 0, 0)),
@@ -83,4 +190,4 @@ def knn_tile_topk(docs: jax.Array, queries: jax.Array, k: int,
             jax.ShapeDtypeStruct((tiles, b, k), jnp.int32),
         ],
         interpret=interpret,
-    )(queries, docs)
+    )(queries, docs, ids_2d)

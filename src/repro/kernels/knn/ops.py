@@ -1,8 +1,11 @@
-"""jit'd public wrapper for the fused kNN Pallas kernel.
+"""jit'd public wrapper for the fused kNN Pallas kernels.
 
-Handles padding (corpus rows to the tile multiple, feature dim to the lane
-multiple, batch to the sublane multiple — all score-preserving zero pads),
-backend dispatch (interpret mode off-TPU), and the cross-tile merge.
+Handles backend dispatch (``repro.kernels.dispatch`` tiers: ref / interpret
+/ compiled), padding (corpus rows to the tile multiple with sentinel id -1,
+feature dim to the lane multiple, batch to the sublane multiple — all
+score-preserving), the ``tile_n``/``k_eff`` autotuner, and sentinel-id
+hygiene: any -inf candidate (k > n_valid, fully-masked tiles) reports id -1
+— never a padded-row position clipped onto a real document.
 """
 
 from __future__ import annotations
@@ -12,49 +15,113 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.knn.knn import knn_tile_topk
+from repro.kernels import dispatch
+from repro.kernels.knn.knn import NEG_INF, knn_fused_topk, knn_tile_topk
 
 LANE = 128
 SUBLANE = 8
 
 
-def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
     pad = (-x.shape[axis]) % mult
     if pad == 0:
         return x
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+    return jnp.pad(x, widths, constant_values=value)
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+@functools.lru_cache(maxsize=None)
+def autotune_knn(n: int, d: int, b: int, k: int) -> tuple[int, int]:
+    """Pick (tile_n, k_eff) for a corpus of shape (n, d) and batch (b, k).
 
-
-@functools.partial(jax.jit, static_argnames=("k", "tile_n", "interpret"))
-def knn_search(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
-               tile_n: int = 1024, interpret: bool | None = None):
-    """Top-k MIPS over the corpus. Returns (scores (B,k), ids (B,k)).
-
-    docs: (N, D) unit-norm transformed embeddings; doc_ids: (N,) int32
-    (use arange for positional); queries: (B, D).
+    tile_n: largest power of two (<= 4096, >= the sublane multiple, no
+    larger than the padded corpus) whose VMEM working set — the streamed
+    tile, resident queries, and the merge candidate pool — fits a ~6 MB
+    budget (half of VMEM, leaving room for double buffering).  k_eff is the
+    per-tile candidate count of the two-stage scheme (min(k, tile_n)).
     """
-    if interpret is None:
-        interpret = not _on_tpu()
-    n_valid = docs.shape[0]
-    tile_n = min(tile_n, max(SUBLANE, 1 << (n_valid - 1).bit_length()))
-    k_eff = min(k, tile_n)
+    dp = d + (-d) % LANE
+    bp = b + (-b) % SUBLANE
+    cap = max(SUBLANE, 1 << max(n - 1, 1).bit_length())
+    tile = min(4096, cap)
+    budget = 6 * 2 ** 20
+
+    def working_set(t: int) -> int:
+        return 4 * (t * dp + bp * dp + 3 * bp * (k + t))
+
+    while tile > SUBLANE and working_set(tile) > budget:
+        tile //= 2
+    return tile, min(k, tile)
+
+
+def _ref_search(docs, doc_ids, queries, k):
+    """Oracle tier: one masked (B, N) score matrix + stable top-k."""
+    scores = queries.astype(jnp.float32) @ docs.astype(jnp.float32).T
+    scores = jnp.where(doc_ids[None, :] < 0, NEG_INF, scores)
+    ids = doc_ids
+    if k > scores.shape[1]:
+        pad = k - scores.shape[1]
+        scores = jnp.pad(scores, ((0, 0), (0, pad)), constant_values=NEG_INF)
+        ids = jnp.pad(ids, (0, pad), constant_values=-1)
+    top_s, pos = jax.lax.top_k(scores, k)
+    top_i = jnp.where(jnp.isneginf(top_s), -1, ids[pos])
+    return top_s, top_i
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "tile_n", "interpret", "backend", "two_stage"))
+def knn_search(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
+               tile_n: int | None = None, interpret: bool | None = None,
+               backend: str | None = None, two_stage: bool = False):
+    """Top-k MIPS over the corpus. Returns (scores (B, k), ids (B, k)).
+
+    docs: (N, D) unit-norm transformed embeddings; doc_ids: (N,) int32 with
+    -1 marking sentinel/padded rows (use arange for positional); queries:
+    (B, D).  Sentinel rows never win top-k; -inf result positions carry id
+    -1.  ``backend``: a ``repro.kernels.dispatch`` tier (default: compiled
+    on TPU, interpret elsewhere — an explicit kernel call never silently
+    degrades to the jnp path; pass backend="ref" for the oracle).
+    ``interpret`` is the legacy spelling of backend="interpret".
+    ``two_stage`` opts out of the on-chip cross-tile merge (A/B baseline);
+    both merge paths share the id-driven validity masking.
+    """
+    if backend is None and interpret is not None:
+        backend = "interpret" if interpret else "compiled"
+    be = dispatch.resolve(backend, kernel=True)
+    if be == "ref":
+        return _ref_search(docs, doc_ids, queries, k)
+
+    n, d = docs.shape
+    b = queries.shape[0]
+    if tile_n is None:
+        tile_n, k_eff = autotune_knn(n, d, b, k)
+    else:
+        tile_n = min(tile_n, max(SUBLANE, 1 << max(n - 1, 1).bit_length()))
+        k_eff = min(k, tile_n)
 
     docs_p = _pad_to(_pad_to(docs, 1, LANE), 0, tile_n)
+    ids_p = _pad_to(doc_ids.astype(jnp.int32), 0, tile_n, value=-1)
     q_p = _pad_to(_pad_to(queries, 1, LANE), 0, SUBLANE)
-    b = queries.shape[0]
+    interp = dispatch.interpret_flag(be)
 
-    vals, idx = knn_tile_topk(docs_p, q_p, k_eff, tile_n=tile_n,
-                              n_valid=n_valid, interpret=interpret)
+    if not two_stage:
+        vals, idx = knn_fused_topk(docs_p, ids_p, q_p, k, tile_n=tile_n,
+                                   interpret=interp)
+        return vals[:b], idx[:b]
+
+    vals, idx = knn_tile_topk(docs_p, ids_p, q_p, k_eff, tile_n=tile_n,
+                              interpret=interp)
     tiles = vals.shape[0]
+    assert tiles * k_eff >= k, (
+        f"two-stage candidate pool {tiles}x{k_eff} < k={k}; "
+        f"use the fused merge (two_stage=False)")
     vals = vals.transpose(1, 0, 2).reshape(q_p.shape[0], tiles * k_eff)
     idx = idx.transpose(1, 0, 2).reshape(q_p.shape[0], tiles * k_eff)
 
     top_s, pos = jax.lax.top_k(vals, k)
     top_i = jnp.take_along_axis(idx, pos, axis=1)
-    return top_s[:b], doc_ids[top_i[:b]]
+    # a fully-masked extraction emits an arbitrary position at a -inf value;
+    # sentinel it instead of letting the id lookup alias a real document
+    ids = jnp.where(jnp.isneginf(top_s), -1, ids_p[top_i])
+    return top_s[:b], ids[:b]

@@ -113,7 +113,11 @@ class ConversationalEngine:
                 if self.cache.n_docs == 0:
                     raise
         scores, dists, ids, _ = self.cache.query(psi, self.k)
-        turn = EngineTurn(ids=np.asarray(ids), scores=np.asarray(scores),
+        # a cache holding fewer than k docs pads with (id -1, score -inf)
+        # sentinel slots; drop them so they never reach rankings or metrics
+        ids, scores = np.asarray(ids), np.asarray(scores)
+        real = ids >= 0
+        turn = EngineTurn(ids=ids[real], scores=scores[real],
                           hit=not need_backend, degraded=degraded,
                           latency_s=time.perf_counter() - t0)
         self.turns.append(turn)

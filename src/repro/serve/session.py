@@ -162,8 +162,12 @@ class BatchedEngine:
                     f"session {int(s)}: back-end down and cache empty"
                     f" ({outage})"))
                 continue
-            turn = EngineTurn(ids=np.asarray(ids[i]),
-                              scores=np.asarray(scores[i]),
+            # drop (id -1, score -inf) sentinel slots of a short cache, the
+            # same trim the sequential engine applies
+            row_ids = np.asarray(ids[i])
+            row_scores = np.asarray(scores[i])
+            real = row_ids >= 0
+            turn = EngineTurn(ids=row_ids[real], scores=row_scores[real],
                               hit=not bool(need[i]),
                               degraded=bool(degraded and need[i]),
                               latency_s=latency)

@@ -379,3 +379,28 @@ def test_dynamic_policy_updates_on_topic_shift():
     rec = s.answer(idx.transform_queries(jnp.asarray(b)))
     assert not rec.hit  # far query must trigger an update
     assert s.cache.n_queries == 2
+
+
+def test_query_short_cache_sentinels_and_untouched_stamps():
+    """Regression: a cache holding fewer than k docs answers with (id -1,
+    score -inf) sentinel slots, and the LRU stamp touch used to refresh
+    those *empty* slots' stamps — making LRU eviction prefer overwriting
+    live documents over reusing untouched empty slots."""
+    rng = np.random.default_rng(0)
+    cfg = CacheConfig(capacity=6, dim=8, eviction="lru")
+    cache = MetricCache(cfg)
+    psi = jnp.asarray(rng.standard_normal(8), jnp.float32)
+    docs = jnp.asarray(rng.standard_normal((2, 8)), jnp.float32)
+    cache.insert(psi, 0.5, docs, jnp.asarray([7, 9], jnp.int32))
+
+    scores, _dists, ids, _slots = cache.query(psi, 5)
+    ids, scores = np.asarray(ids), np.asarray(scores)
+    assert (ids[:2] >= 0).all()
+    np.testing.assert_array_equal(ids[2:], -1)
+    assert np.isneginf(scores[2:]).all()
+
+    stamps = np.asarray(cache.state.doc_stamp)
+    # insert stamped slots 0-1 at step 0; the query touched them at step 1;
+    # the four empty slots must still read 0, not the query step
+    np.testing.assert_array_equal(stamps[:2], 1)
+    np.testing.assert_array_equal(stamps[2:], 0)

@@ -1,0 +1,222 @@
+"""Kernel/reference equivalence across awkward shapes — all in interpret
+mode, so CI exercises the Pallas code paths on CPU.
+
+Covers the contract the serving hot path now rides on: the fused kNN scan
+(on-chip cross-tile merge) and the session-batched cache probe must agree
+with the jnp ref tier in ranking — including non-multiple feature/batch
+dims, k > n_valid (the sentinel-id regression), single-doc corpora,
+sentinel-padded shard slices, ring-wrapped query records, and the
+composition of the kernel with ``shard_map``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import (CacheConfig, MetricCache, init_batched_cache,
+                              probe_batched)
+from repro.core.metric_index import MetricIndex, exact_nn, scan_topk
+from repro.kernels.knn.ops import autotune_knn, knn_search
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _unit(rng, shape):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def _corpus(seed, n, d, b):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(_unit(rng, (n, d))),
+            jnp.arange(n, dtype=jnp.int32),
+            jnp.asarray(_unit(rng, (b, d))))
+
+
+def _assert_same(kernel_out, ref_out, rtol=2e-5, atol=2e-5):
+    s_k, i_k = (np.asarray(x) for x in kernel_out)
+    s_r, i_r = (np.asarray(x) for x in ref_out)
+    np.testing.assert_allclose(s_k, s_r, rtol=rtol, atol=atol)
+    np.testing.assert_array_equal(i_k, i_r)
+
+
+# ------------------------------------------------------------- fused kNN
+@pytest.mark.parametrize("n,d,b,k", [
+    (257, 65, 3, 17),      # nothing aligned
+    (1000, 769, 4, 10),    # paper geometry: STAR 768(+1)-d
+    (300, 32, 1, 5),       # ragged corpus, single query
+    (129, 130, 9, 33),     # B and D both off the sublane/lane grid
+    (96, 16, 7, 96),       # k == n
+])
+def test_knn_fused_matches_ref_awkward_shapes(n, d, b, k):
+    docs, ids, q = _corpus(n + d + b + k, n, d, b)
+    _assert_same(knn_search(docs, ids, q, k, backend="interpret"),
+                 knn_search(docs, ids, q, k, backend="ref"))
+
+
+@pytest.mark.parametrize("n,k", [(5, 12), (3, 8), (1, 3)])
+def test_knn_k_exceeds_n_valid_emits_sentinels(n, k):
+    """Regression (sentinel-id leak): k > n_valid used to return the LAST
+    REAL doc id at -inf score positions (padded-row argmax clipped by the
+    doc_ids lookup).  Those positions must be (score -inf, id -1)."""
+    docs, ids, q = _corpus(7, n, 33, 2)
+    s, i = knn_search(docs, ids, q, k, backend="interpret")
+    s, i = np.asarray(s), np.asarray(i)
+    assert np.isneginf(s[:, n:]).all()
+    np.testing.assert_array_equal(i[:, n:], -1)
+    # the real prefix is still the exact answer
+    ref = exact_nn(docs, ids, q, n)
+    np.testing.assert_array_equal(i[:, :n], np.asarray(ref.ids))
+    _assert_same((s, i), knn_search(docs, ids, q, k, backend="ref"))
+
+
+def test_knn_two_stage_sentinels_and_merge_parity():
+    """The A/B two-stage path gets the same sentinel hygiene: padded-tile
+    extractions must not alias real ids, and its merge must equal the
+    fused on-chip merge."""
+    docs, ids, q = _corpus(11, 5, 16, 2)
+    out2 = knn_search(docs, ids, q, 8, backend="interpret", two_stage=True)
+    _assert_same(out2, knn_search(docs, ids, q, 8, backend="interpret"))
+    docs, ids, q = _corpus(12, 300, 48, 3)
+    out2 = knn_search(docs, ids, q, 20, tile_n=64, backend="interpret",
+                      two_stage=True)
+    _assert_same(out2, knn_search(docs, ids, q, 20, backend="ref"))
+
+
+def test_scan_topk_contract_on_sentinel_padded_slice():
+    """scan_topk tiers agree on a shard-style slice: real prefix + interior
+    chunk alignment + sentinel (id -1) tail rows that must never surface."""
+    rng = np.random.default_rng(5)
+    real, pad = 96, 32
+    docs = np.concatenate(
+        [_unit(rng, (real, 24)), np.zeros((pad, 24), np.float32)])
+    ids = np.concatenate([np.arange(real), np.full(pad, -1)]).astype(np.int32)
+    q = jnp.asarray(_unit(rng, (4, 24)))
+    docs, ids = jnp.asarray(docs), jnp.asarray(ids)
+    ref = scan_topk(docs, ids, q, 10, chunk=32, backend="ref")
+    ker = scan_topk(docs, ids, q, 10, chunk=32, backend="interpret")
+    _assert_same(ker, ref)
+    assert (np.asarray(ker[1]) >= 0).all()      # k <= real: no sentinel rows
+
+
+def test_metric_index_kernel_tier_matches_ref_tier():
+    rng = np.random.default_rng(4)
+    raw = jnp.asarray(rng.standard_normal((900, 64)).astype(np.float32))
+    idx_ref = MetricIndex(raw, use_kernel=False)
+    idx_ker = MetricIndex(raw, use_kernel=True)
+    assert idx_ref.backend == "ref" and idx_ker.backend == "interpret"
+    q = idx_ref.transform_queries(
+        jnp.asarray(rng.standard_normal((6, 64)).astype(np.float32)))
+    r_ref, r_ker = idx_ref.search(q, 15), idx_ker.search(q, 15)
+    np.testing.assert_array_equal(np.asarray(r_ref.ids),
+                                  np.asarray(r_ker.ids))
+    np.testing.assert_allclose(np.asarray(r_ref.scores),
+                               np.asarray(r_ker.scores), rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_nn_runs_kernel_scan_per_shard():
+    """The shard_map body and single-device search share one scan: the
+    kernel tier composes with the mesh and stays bit-identical to exact."""
+    from repro.dist.retrieval import sharded_nn
+    rng = np.random.default_rng(9)
+    docs = jnp.asarray(_unit(rng, (1000, 32)))
+    ids = jnp.arange(1000, dtype=jnp.int32)
+    q = jnp.asarray(_unit(rng, (3, 32)))
+    ref = exact_nn(docs, ids, q, 25)
+    res = sharded_nn(docs, ids, q, 25, chunk=64, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+    np.testing.assert_allclose(np.asarray(res.scores),
+                               np.asarray(ref.scores), rtol=1e-5, atol=1e-5)
+
+
+def test_autotune_knn_bounds():
+    tile, k_eff = autotune_knn(1 << 20, 768, 16, 100)
+    assert tile & (tile - 1) == 0 and 128 <= tile <= 4096
+    assert k_eff == 100
+    tile_small, k_small = autotune_knn(5, 33, 2, 12)
+    assert tile_small == 8 and k_small == 8
+
+
+# ------------------------------------------------- session-batched probe
+def _stacked_state(seed, s, qmax, d, n_queries):
+    rng = np.random.default_rng(seed)
+    cfg = CacheConfig(capacity=8, dim=d, max_queries=qmax)
+    state = init_batched_cache(cfg, s)
+    state = state._replace(
+        q_emb=jnp.asarray(_unit(rng, (s, qmax, d))),
+        q_radius=jnp.asarray(
+            rng.uniform(0.2, 1.2, (s, qmax)).astype(np.float32)),
+        n_queries=jnp.asarray(n_queries, jnp.int32))
+    psi = jnp.asarray(_unit(rng, (s, d)))
+    return state, psi
+
+
+@pytest.mark.parametrize("qmax,d", [(8, 64), (33, 200), (64, 769)])
+def test_probe_batched_kernel_matches_vmap_ref(qmax, d):
+    """Empty, partial, full, and ring-wrapped (n_queries > max_queries)
+    sessions in one wave: the fused launch must agree with vmap(probe)."""
+    s = 6
+    n_queries = [0, 1, qmax // 2, qmax, qmax + 3, 5 * qmax]
+    state, psi = _stacked_state(qmax + d, s, qmax, d, n_queries)
+    ref = probe_batched(state, psi, 0.04, backend="ref")
+    ker = probe_batched(state, psi, 0.04, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(ref.hit), np.asarray(ker.hit))
+    np.testing.assert_array_equal(np.asarray(ref.nearest_q),
+                                  np.asarray(ker.nearest_q))
+    # r_hat agreement only on sessions that hold records (-inf == -inf else)
+    live = np.asarray(n_queries) > 0
+    np.testing.assert_allclose(np.asarray(ref.r_hat)[live],
+                               np.asarray(ker.r_hat)[live],
+                               rtol=1e-5, atol=1e-5)
+    assert np.isneginf(np.asarray(ker.r_hat)[~live]).all()
+    assert (np.asarray(ker.nearest_q)[~live] == -1).all()
+
+
+def test_cache_probe_ring_wrapped_scalar_cache():
+    """A real cache driven past max_queries: the ring overwrites the oldest
+    record and the kernel probe must treat EVERY slot as live — exactly
+    like the scalar jnp probe."""
+    from repro.kernels.cache_probe.ops import cache_probe
+    rng = np.random.default_rng(3)
+    cfg = CacheConfig(capacity=256, dim=17, max_queries=4)
+    cache = MetricCache(cfg)
+    for i in range(7):                      # 7 inserts > max_queries=4
+        psi = jnp.asarray(_unit(rng, (17,)))
+        emb = jnp.asarray(_unit(rng, (3, 17)))
+        ids = jnp.asarray(rng.integers(0, 100, 3), jnp.int32)
+        cache.insert(psi, rng.uniform(0.3, 1.0), emb, ids)
+    assert cache.total_queries == 7 and cache.n_queries == 4
+    psi = jnp.asarray(_unit(rng, (17,)))
+    ref = cache.probe(psi)                  # scalar jnp probe
+    st = cache.state
+    hit, r_hat, idx = cache_probe(st.q_emb, psi, st.q_radius, st.n_queries,
+                                  cfg.epsilon, interpret=True)
+    assert bool(hit) == bool(ref.hit)
+    assert int(idx) == int(ref.nearest_q)
+    np.testing.assert_allclose(float(r_hat), float(ref.r_hat),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("two_stage", [False, True])
+def test_knn_sentinel_rows_never_win_over_negative_scores(two_stage):
+    """Regression: zero-vector sentinel rows (id -1) score 0.0 and used to
+    outrank real documents with negative scores on the two-stage path
+    (prefix masking missed interior sentinels), surfacing id -1 at finite
+    scores while real docs were dropped.  Both merge paths must mask by
+    ids, wherever the sentinels sit."""
+    rng = np.random.default_rng(13)
+    q = _unit(rng, (2, 16))
+    real = _unit(rng, (8, 16))
+    real[:4] = -_unit(rng, (2, 16)).mean(0)     # make some scores negative
+    real = real / np.linalg.norm(real, axis=1, keepdims=True)
+    docs = np.concatenate([real[:4], np.zeros((8, 16), np.float32), real[4:]])
+    ids = np.concatenate(
+        [np.arange(4), np.full(8, -1), np.arange(4, 8)]).astype(np.int32)
+    s, i = knn_search(jnp.asarray(docs), jnp.asarray(ids), jnp.asarray(q), 8,
+                      tile_n=8, backend="interpret", two_stage=two_stage)
+    s, i = np.asarray(s), np.asarray(i)
+    assert (i >= 0).all(), f"sentinel rows leaked into top-k: {i}"
+    assert np.isfinite(s).all()
+    _assert_same((s, i), knn_search(jnp.asarray(docs), jnp.asarray(ids),
+                                    jnp.asarray(q), 8, backend="ref"))

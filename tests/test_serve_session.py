@@ -348,3 +348,18 @@ def test_session_manager_window_flush_and_slot_reuse(world, index):
     assert slot == 0 and eng.cache.n_docs[0] == 0
     with pytest.raises(RuntimeError, match="no free session slots"):
         mgr._free.clear() or mgr.open("z")
+
+
+def test_batched_engine_trims_sentinel_rows_when_cache_short(index):
+    """Regression twin of the sequential-engine test: a wave answered from
+    caches holding fewer than k docs must not surface sentinel slots."""
+    rng = np.random.default_rng(2)
+    tiny = MetricIndex(jnp.asarray(rng.standard_normal((4, 24)), jnp.float32))
+    router = ShardedRouter(make_shards(tiny, 1), deadline_s=10)
+    eng = BatchedEngine(router, np.asarray(tiny.doc_emb), dim=tiny.dim,
+                        n_sessions=4, k=9, k_c=4)
+    qs = np.asarray(tiny.transform_queries(
+        jnp.asarray(rng.standard_normal((2, 24)), jnp.float32)))
+    for turn in eng.answer_batch([0, 1], list(qs)):
+        assert turn.ids.shape == (4,) and (turn.ids >= 0).all()
+        assert np.isfinite(turn.scores).all()

@@ -336,3 +336,23 @@ def test_token_stream_deterministic_across_restart():
     b = TokenStream(spec).batch(17)            # "restarted" pipeline
     np.testing.assert_array_equal(np.asarray(a["tokens"]),
                                   np.asarray(b["tokens"]))
+
+
+def test_engine_trims_sentinel_rows_when_cache_short():
+    """Regression: with a corpus smaller than k the cache can never hold k
+    docs; EngineTurn used to surface the cache's (id -1, score -inf)
+    sentinel slots straight into rankings and IR metrics."""
+    from repro.serve.engine import ConversationalEngine
+    from repro.serve.router import ShardedRouter
+    rng = np.random.default_rng(0)
+    tiny = MetricIndex(jnp.asarray(rng.standard_normal((3, 16)), jnp.float32))
+    router = ShardedRouter(_make_shards(tiny, 1), deadline_s=10)
+    eng = ConversationalEngine(router, np.asarray(tiny.doc_emb),
+                               dim=tiny.dim, k=10, k_c=3)
+    eng.start_session()
+    q = tiny.transform_queries(
+        jnp.asarray(rng.standard_normal(16), jnp.float32))
+    turn = eng.answer(q)
+    assert turn.ids.shape == (3,) and turn.scores.shape == (3,)
+    assert (turn.ids >= 0).all()
+    assert np.isfinite(turn.scores).all()
