@@ -1,0 +1,128 @@
+"""CI regression gate: compare a fresh smoke-bench JSON against the
+committed baseline and fail (non-zero exit) on drift beyond the stated
+tolerances.
+
+Two comparisons, both against baselines committed in the repo:
+
+  * serve:   /tmp/BENCH_serve_smoke.json   vs BENCH_serve.json["smoke"]
+  * kernels: /tmp/BENCH_kernels_smoke.json["kernels_smoke"]
+             vs BENCH_retrieval.json["kernels_smoke"]
+
+Tolerances (CI hosts are noisy and heterogeneous, so quality metrics gate
+hard while wall-clock gates are deliberately loose):
+
+  * hit rates (the recall proxy of the serving smoke): absolute drift
+    <= HIT_RATE_TOL vs baseline — a quantization or cache regression shows
+    up here first.
+  * batched-vs-sequential speedup: >= SPEEDUP_KEEP_FRAC of baseline — the
+    batching win must not evaporate.
+  * batched qps: >= QPS_KEEP_FRAC of baseline — absolute throughput may
+    differ across machines, but an order-of-magnitude collapse is a bug.
+  * kernel rank-overlap metrics: >= the floors recorded in the baseline
+    (RANK_OVERLAP_FLOOR at bench time).
+  * int8 effective scan bandwidth: >= MIN_INT8_BW_X (absolute — this is
+    the ISSUE 4 acceptance floor, machine-independent by construction).
+
+Usage (CI):
+    python benchmarks/check_regression.py \
+        --serve-current /tmp/BENCH_serve_smoke.json \
+        --kernels-current /tmp/BENCH_kernels_smoke.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+HIT_RATE_TOL = 0.15
+SPEEDUP_KEEP_FRAC = 0.3
+QPS_KEEP_FRAC = 0.15
+MIN_INT8_BW_X = 1.8
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_serve(current: dict, baseline: dict, errors: list) -> None:
+    # serve_bench nests smoke records under "smoke" (full-run rows live at
+    # the top level); accept either shape on both sides
+    base = baseline.get("smoke", baseline)
+    cur = current.get("smoke", current)
+    if not base.get("rows") or not cur.get("rows"):
+        errors.append("serve: missing rows in current or baseline record")
+        return
+    cur_row, base_row = cur["rows"][0], base["rows"][0]
+    for key in ("hit_rate_sequential", "hit_rate_batched"):
+        drift = abs(cur_row[key] - base_row[key])
+        if drift > HIT_RATE_TOL:
+            errors.append(
+                f"serve: {key} drifted {drift:.3f} (> {HIT_RATE_TOL}): "
+                f"{base_row[key]:.3f} -> {cur_row[key]:.3f}")
+    floor = base_row["speedup"] * SPEEDUP_KEEP_FRAC
+    if cur_row["speedup"] < floor:
+        errors.append(
+            f"serve: batched speedup {cur_row['speedup']:.2f}x below "
+            f"{SPEEDUP_KEEP_FRAC:.0%} of baseline {base_row['speedup']:.2f}x")
+    floor = base_row["batched_qps"] * QPS_KEEP_FRAC
+    if cur_row["batched_qps"] < floor:
+        errors.append(
+            f"serve: batched qps {cur_row['batched_qps']:.1f} below "
+            f"{QPS_KEEP_FRAC:.0%} of baseline {base_row['batched_qps']:.1f}")
+
+
+def check_kernels(current: dict, baseline: dict, errors: list) -> None:
+    cur = current.get("kernels_smoke", current.get("kernels"))
+    base = baseline.get("kernels_smoke", baseline.get("kernels"))
+    if not cur or not base:
+        errors.append("kernels: missing kernels_smoke record")
+        return
+    cur_m = cur.get("metrics", {})
+    floors = base.get("rank_overlap_floor", {})
+    for key, val in cur_m.items():
+        if "rank_overlap_vs_fp32" in key:
+            dt = key.split("rank_overlap_vs_fp32_")[1].split("_")[0]
+            floor = floors.get(dt)
+            if floor is not None and val < floor:
+                errors.append(
+                    f"kernels: {key} = {val:.3f} below floor {floor}")
+    int8_bw = [v for k, v in cur_m.items()
+               if k.startswith("knn_effective_bw_x_int8")]
+    if not int8_bw:
+        errors.append("kernels: no int8 effective-bandwidth row in current")
+    elif min(int8_bw) < MIN_INT8_BW_X:
+        errors.append(
+            f"kernels: int8 effective scan bandwidth {min(int8_bw):.2f}x "
+            f"below the {MIN_INT8_BW_X}x acceptance floor")
+    # quantized rows must still exist for every dtype the baseline had
+    missing = [k for k in base.get("metrics", {}) if k not in cur_m]
+    if missing:
+        errors.append(f"kernels: metrics disappeared vs baseline: {missing}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--serve-current", default="/tmp/BENCH_serve_smoke.json")
+    ap.add_argument("--serve-baseline", default="BENCH_serve.json")
+    ap.add_argument("--kernels-current",
+                    default="/tmp/BENCH_kernels_smoke.json")
+    ap.add_argument("--kernels-baseline", default="BENCH_retrieval.json")
+    args = ap.parse_args()
+
+    errors: list[str] = []
+    check_serve(_load(args.serve_current), _load(args.serve_baseline), errors)
+    check_kernels(_load(args.kernels_current), _load(args.kernels_baseline),
+                  errors)
+    if errors:
+        for e in errors:
+            print(f"REGRESSION: {e}", file=sys.stderr)
+        return 1
+    print("check_regression: smoke benches within tolerance of committed "
+          "baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,15 +6,14 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.conversation import ConversationalSearcher
 from repro.core.metric_index import MetricIndex
-from repro.data.conversations import TopicWorld, WorldConfig, make_world
+from repro.data.conversations import (TopicWorld, WorldConfig,
+                                      make_world)  # noqa: F401  (re-exported: benchmarks use C.make_world)
 from repro.metrics import ir
 
 # Synthetic CAsT-like scale: the paper's k_c/corpus ratio (1K-10K of 38.6M)

@@ -1,18 +1,30 @@
 """Kernel-path benchmarks: dispatch-tier rows (ref / interpret / compiled)
 for the fused kNN corpus scan and the session-batched cache probe, plus the
-embedding bag.
+embedding bag — across the corpus storage dtypes (fp32 / bf16 / int8,
+``repro.core.quant``).
 
 On a CPU container the Pallas kernels run in interpret mode (orders of
 magnitude slower — functional timing only, plus an equivalence gate); the
 ref (jnp) rows are the CPU production paths.  Compiled rows appear only on
 a real TPU backend.  TPU projections come from the roofline (corpus stream
-bytes / HBM bandwidth) since the scan is bandwidth-bound.
+bytes / HBM bandwidth) since the scan is bandwidth-bound — which is exactly
+why the quantized dtypes matter: the ``knn_scan_bytes_*`` /
+``knn_effective_bw_x_*`` rows report how many bytes one scan streams per
+dtype and the resulting effective-bandwidth multiplier vs fp32 (bytes
+shrink 2x / 4x, so a bandwidth-bound scan serves 2x / 4x the corpus per
+second at the same HBM roofline).
 
 Writes its row set under the ``"kernels"`` key of ``BENCH_retrieval.json``
 (merge-update, so the retrieval rows written by ``retrieval_bench`` are
-preserved).  ``--smoke`` runs tiny shapes and FAILS (non-zero exit) if the
-interpret-mode kernels disagree with the ref tier in ranking — the CI
-regression gate for the kernel path.
+preserved).  ``--smoke`` runs tiny shapes and FAILS (non-zero exit) if
+
+  * the interpret-mode kernels disagree with the ref tier in ranking at
+    any dtype (tiers must agree exactly at a fixed dtype), or
+  * the quantized rankings drift below the documented rank-overlap floors
+    vs the fp32 corpus (``RANK_OVERLAP_FLOOR``), or
+  * the int8 effective-bandwidth multiplier falls below 1.8x
+
+— the CI regression gate for the kernel path.
 """
 
 from __future__ import annotations
@@ -26,8 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quant
 from repro.core.cache import CacheConfig, init_batched_cache, probe_batched
-from repro.core.metric_index import scan_topk
 from repro.kernels import dispatch
 from repro.kernels.embedding_bag.ops import embedding_bag
 from repro.kernels.knn.ops import knn_search
@@ -35,6 +47,15 @@ from repro.launch.roofline import HW
 
 FULL = dict(n=65536, d=768, b=16, k=100, s=64, qmax=64)
 SMOKE = dict(n=2048, d=128, b=4, k=10, s=8, qmax=16)
+
+# Documented rank-equality tolerance of the quantized scan: mean top-k
+# overlap vs the fp32 corpus must not fall below these floors (near-tied
+# scores may legitimately swap order under quantization; the *set* of
+# retrieved documents is the serving contract).
+RANK_OVERLAP_FLOOR = {"fp32": 1.0, "bf16": 0.95, "int8": 0.90}
+
+# Acceptance floor for the int8 bandwidth win (ISSUE 4).
+MIN_INT8_EFFECTIVE_BW_X = 1.8
 
 
 def timed(fn, n: int = 3, warmup: int = 1):
@@ -55,6 +76,23 @@ def _unit(rng, shape):
     return x / np.linalg.norm(x, axis=-1, keepdims=True)
 
 
+def _scan_bytes(n: int, d: int, dtype: str) -> int:
+    """HBM bytes one fused scan streams: corpus payload + int32 ids (+ f32
+    per-document scales when the format carries them)."""
+    per_doc = d * quant.itemsize(dtype) + 4
+    if dtype == "int8":
+        per_doc += 4
+    return n * per_doc
+
+
+def _rank_overlap(ids_a: np.ndarray, ids_b: np.ndarray) -> float:
+    """Mean per-query top-k set overlap in [0, 1]."""
+    k = ids_a.shape[1]
+    return float(np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / k
+        for a, b in zip(ids_a, ids_b)]))
+
+
 def _knn_rows(p, rows, check: bool):
     rng = np.random.default_rng(0)
     docs = jnp.asarray(_unit(rng, (p["n"], p["d"])))
@@ -63,68 +101,90 @@ def _knn_rows(p, rows, check: bool):
     tag = f"{p['n'] // 1024}k"
     k = p["k"]
 
-    t, ref_out = timed(lambda: knn_search(docs, ids, q, k, backend="ref"))
-    rows[f"knn_ref_{tag}"] = t
-    t, _ = timed(lambda: scan_topk(docs, ids, q, k, chunk=min(8192, p["n"]),
-                                     backend="ref"))
-    rows[f"knn_chunked_{tag}"] = t
-    t, int_out = timed(
-        lambda: knn_search(docs, ids, q, k, backend="interpret"),
-        n=1, warmup=1)
-    rows[f"knn_pallas_interpret_{tag}"] = t
-    t, _ = timed(
-        lambda: knn_search(docs, ids, q, k, backend="interpret",
-                           two_stage=True),
-        n=1, warmup=1)
-    rows[f"knn_pallas_interpret_two_stage_{tag}"] = t
-    if dispatch.on_tpu():
-        t, comp_out = timed(
-            lambda: knn_search(docs, ids, q, k, backend="compiled"))
-        rows[f"knn_pallas_compiled_{tag}"] = t
+    fp32_ids = None
+    fp32_bytes = _scan_bytes(p["n"], p["d"], "fp32")
+    for dt in quant.DTYPES:
+        qc = quant.quantize(docs, dt)
+        t, ref_out = timed(lambda: knn_search(
+            docs=qc.data, doc_ids=ids, queries=q, k=k, backend="ref",
+            scale=qc.scale))
+        rows[f"knn_ref_{dt}_{tag}"] = t
+        t, int_out = timed(lambda: knn_search(
+            docs=qc.data, doc_ids=ids, queries=q, k=k, backend="interpret",
+            scale=qc.scale), n=1, warmup=1)
+        rows[f"knn_pallas_interpret_{dt}_{tag}"] = t
+        if dispatch.on_tpu():
+            t, comp_out = timed(lambda: knn_search(
+                docs=qc.data, doc_ids=ids, queries=q, k=k,
+                backend="compiled", scale=qc.scale))
+            rows[f"knn_pallas_compiled_{dt}_{tag}"] = t
+            if check:
+                np.testing.assert_array_equal(np.asarray(comp_out[1]),
+                                              np.asarray(ref_out[1]))
+        scan_bytes = _scan_bytes(p["n"], p["d"], dt)
+        rows[f"knn_scan_bytes_{dt}_{tag}"] = float(scan_bytes)
+        rows[f"knn_effective_bw_x_{dt}_{tag}"] = fp32_bytes / scan_bytes
+        rows[f"knn_tpu_roofline_{dt}_{tag}"] = scan_bytes / HW["hbm_bw"]
+        if dt == "fp32":
+            fp32_ids = np.asarray(ref_out[1])
+        overlap = _rank_overlap(np.asarray(ref_out[1]), fp32_ids)
+        rows[f"knn_rank_overlap_vs_fp32_{dt}_{tag}"] = overlap
         if check:
-            np.testing.assert_array_equal(np.asarray(comp_out[1]),
+            # tiers must agree EXACTLY in ranking at a fixed dtype
+            np.testing.assert_array_equal(np.asarray(int_out[1]),
                                           np.asarray(ref_out[1]))
-    rows[f"knn_tpu_roofline_{tag}"] = p["n"] * p["d"] * 4 / HW["hbm_bw"]
+            np.testing.assert_allclose(np.asarray(int_out[0]),
+                                       np.asarray(ref_out[0]),
+                                       rtol=2e-5, atol=2e-5)
+            floor = RANK_OVERLAP_FLOOR[dt]
+            assert overlap >= floor, (
+                f"{dt} top-{k} overlap vs fp32 = {overlap:.3f} < {floor}")
+    # the A/B two-stage merge keeps parity at the widest and narrowest dtype
+    t, _ = timed(lambda: knn_search(
+        docs=docs, doc_ids=ids, queries=q, k=k, backend="interpret",
+        two_stage=True), n=1, warmup=1)
+    rows[f"knn_pallas_interpret_two_stage_fp32_{tag}"] = t
     if check:
-        np.testing.assert_array_equal(np.asarray(int_out[1]),
-                                      np.asarray(ref_out[1]))
-        np.testing.assert_allclose(np.asarray(int_out[0]),
-                                   np.asarray(ref_out[0]),
-                                   rtol=2e-5, atol=2e-5)
+        assert rows[f"knn_effective_bw_x_int8_{tag}"] >= \
+            MIN_INT8_EFFECTIVE_BW_X, rows[f"knn_effective_bw_x_int8_{tag}"]
 
 
 def _probe_rows(p, rows, check: bool):
     rng = np.random.default_rng(1)
     s, qmax, d = p["s"], p["qmax"], p["d"] + 1
-    cfg = CacheConfig(capacity=8, dim=d, max_queries=qmax)
-    state = init_batched_cache(cfg, s)
-    state = state._replace(
-        q_emb=jnp.asarray(_unit(rng, (s, qmax, d))),
-        q_radius=jnp.asarray(rng.uniform(0.2, 1.2, (s, qmax)).astype(np.float32)),
-        # mixed fills: empty, partial, and ring-wrapped sessions
-        n_queries=jnp.asarray(rng.integers(0, 2 * qmax, (s,)), jnp.int32))
-    psi = jnp.asarray(_unit(rng, (s, d)))
-    tag = f"s{s}"
+    for dt in ("fp32", "int8"):
+        cfg = CacheConfig(capacity=8, dim=d, max_queries=qmax, store_dtype=dt)
+        state = init_batched_cache(cfg, s)
+        rec = quant.quantize(jnp.asarray(_unit(rng, (s, qmax, d))), dt)
+        state = state._replace(
+            q_emb=rec.data,
+            q_scale=(state.q_scale if rec.scale is None else rec.scale),
+            q_radius=jnp.asarray(
+                rng.uniform(0.2, 1.2, (s, qmax)).astype(np.float32)),
+            # mixed fills: empty, partial, and ring-wrapped sessions
+            n_queries=jnp.asarray(rng.integers(0, 2 * qmax, (s,)), jnp.int32))
+        psi = jnp.asarray(_unit(rng, (s, d)))
+        tag = f"{dt}_s{s}"
 
-    t, ref_out = timed(lambda: probe_batched(state, psi, 0.04,
-                                               backend="ref"))
-    rows[f"probe_ref_{tag}"] = t
-    t, int_out = timed(lambda: probe_batched(state, psi, 0.04,
-                                               backend="interpret"),
-                         n=1, warmup=1)
-    rows[f"probe_pallas_interpret_{tag}"] = t
-    if dispatch.on_tpu():
-        t, comp_out = timed(lambda: probe_batched(state, psi, 0.04,
-                                                    backend="compiled"))
-        rows[f"probe_pallas_compiled_{tag}"] = t
+        t, ref_out = timed(lambda: probe_batched(state, psi, 0.04,
+                                                 backend="ref"))
+        rows[f"probe_ref_{tag}"] = t
+        t, int_out = timed(lambda: probe_batched(state, psi, 0.04,
+                                                 backend="interpret"),
+                           n=1, warmup=1)
+        rows[f"probe_pallas_interpret_{tag}"] = t
+        if dispatch.on_tpu():
+            t, comp_out = timed(lambda: probe_batched(state, psi, 0.04,
+                                                      backend="compiled"))
+            rows[f"probe_pallas_compiled_{tag}"] = t
+            if check:
+                np.testing.assert_array_equal(np.asarray(comp_out.nearest_q),
+                                              np.asarray(ref_out.nearest_q))
         if check:
-            np.testing.assert_array_equal(np.asarray(comp_out.nearest_q),
+            np.testing.assert_array_equal(np.asarray(int_out.hit),
+                                          np.asarray(ref_out.hit))
+            np.testing.assert_array_equal(np.asarray(int_out.nearest_q),
                                           np.asarray(ref_out.nearest_q))
-    if check:
-        np.testing.assert_array_equal(np.asarray(int_out.hit),
-                                      np.asarray(ref_out.hit))
-        np.testing.assert_array_equal(np.asarray(int_out.nearest_q),
-                                      np.asarray(ref_out.nearest_q))
 
 
 def run(smoke: bool = False, out_path: str = "BENCH_retrieval.json"):
@@ -142,10 +202,16 @@ def run(smoke: bool = False, out_path: str = "BENCH_retrieval.json"):
     rows["embedding_bag_tpu_roofline"] = (nbag * 26 * 64 * 4) / HW["hbm_bw"]
 
     if out_path:
-        merge_json(out_path, {"kernels": {
+        key = "kernels_smoke" if smoke else "kernels"
+        is_metric = lambda k: ("bytes" in k or "overlap" in k or "bw_x" in k)
+        merge_json(out_path, {key: {
             "backend": dispatch.default_backend(),
+            "dtype_default": quant.default_dtype(),
             "shapes": dict(p), "smoke": smoke,
-            "rows_us": {k: 1e6 * v for k, v in rows.items()},
+            "rank_overlap_floor": dict(RANK_OVERLAP_FLOOR),
+            "rows_us": {k: 1e6 * v for k, v in rows.items()
+                        if not is_metric(k)},
+            "metrics": {k: v for k, v in rows.items() if is_metric(k)},
             "timestamp": time.time(),
         }})
     return rows
@@ -177,9 +243,13 @@ def main():
     args = ap.parse_args()
     rows = run(smoke=args.smoke, out_path=args.out)
     for k, v in rows.items():
-        print(f"{k:>40} {1e3 * v:10.3f} ms")
+        if "bytes" in k or "overlap" in k or "bw_x" in k:
+            print(f"{k:>48} {v:10.3f}")
+        else:
+            print(f"{k:>48} {1e3 * v:10.3f} ms")
     if args.smoke:
-        print("kernel smoke: interpret-mode rankings match ref")
+        print("kernel smoke: per-dtype tiers agree; quantized rank overlap "
+              "above documented floors")
     return rows
 
 

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax.numpy as jnp
@@ -35,7 +36,7 @@ from repro.serve.session import BatchedEngine
 
 
 def make_shards(index: MetricIndex, n_shards: int):
-    docs = np.asarray(index.doc_emb[:index.n_docs])
+    docs = np.asarray(index.dequantized()[:index.n_docs])
     ids = np.arange(index.n_docs)
     bounds = np.linspace(0, index.n_docs, n_shards + 1).astype(int)
     shards = []
@@ -60,11 +61,13 @@ def _streams(world, index, n_sessions: int):
         for s in range(n_sessions)]
 
 
-def bench_sequential(index, streams, *, n_shards, k, k_c, capacity):
+def bench_sequential(index, streams, *, n_shards, k, k_c, capacity,
+                     dtype=None):
     router = ShardedRouter(make_shards(index, n_shards), deadline_s=30)
-    doc = np.asarray(index.doc_emb)
+    doc = np.asarray(index.dequantized())
     engines = [ConversationalEngine(router, doc, dim=index.dim, k=k, k_c=k_c,
-                                    capacity=capacity) for _ in streams]
+                                    capacity=capacity, dtype=dtype)
+               for _ in streams]
     for e in engines:
         e.start_session()
     turns = streams[0].shape[0]
@@ -77,11 +80,12 @@ def bench_sequential(index, streams, *, n_shards, k, k_c, capacity):
     return elapsed, len(streams) * turns, hits
 
 
-def bench_batched(index, streams, *, n_shards, k, k_c, capacity):
+def bench_batched(index, streams, *, n_shards, k, k_c, capacity, dtype=None):
     router = ShardedRouter(make_shards(index, n_shards), deadline_s=30)
-    engine = BatchedEngine(router, np.asarray(index.doc_emb), dim=index.dim,
+    engine = BatchedEngine(router, np.asarray(index.dequantized()),
+                           dim=index.dim,
                            n_sessions=len(streams), k=k, k_c=k_c,
-                           capacity=capacity)
+                           capacity=capacity, dtype=dtype)
     sids = list(range(len(streams)))
     for s in sids:
         engine.start_session(s)
@@ -100,14 +104,14 @@ def bench_batched(index, streams, *, n_shards, k, k_c, capacity):
 
 
 def run(session_counts=(64, 128, 256, 512), *, turns=4, n_shards=4,
-        k=10, k_c=100, repeats=3, world_cfg=None,
+        k=10, k_c=100, repeats=3, world_cfg=None, dtype=None, smoke=False,
         out_path="BENCH_serve.json") -> dict:
     world = make_world(world_cfg or WorldConfig(
         n_topics=8, docs_per_topic=800, n_background=4000, dim=128,
         subspace_dim=8, turns=turns, n_conversations=16, doc_sigma=0.6,
         query_sigma=0.12, drift_sigma=0.16, subtopic_prob=0.35,
         subtopic_sigma=0.75, seed=7))
-    index = MetricIndex(jnp.asarray(world.doc_emb, jnp.float32))
+    index = MetricIndex(jnp.asarray(world.doc_emb, jnp.float32), dtype=dtype)
     capacity = 4 * k_c
     rows = []
     for n_sessions in session_counts:
@@ -118,11 +122,11 @@ def run(session_counts=(64, 128, 256, 512), *, turns=4, n_shards=4,
         for _ in range(repeats):
             t, n_q, hit_seq = bench_sequential(
                 index, streams, n_shards=n_shards, k=k, k_c=k_c,
-                capacity=capacity)
+                capacity=capacity, dtype=dtype)
             t_seq = min(t_seq, t)
             t, _, hit_bat = bench_batched(
                 index, streams, n_shards=n_shards, k=k, k_c=k_c,
-                capacity=capacity)
+                capacity=capacity, dtype=dtype)
             t_bat = min(t_bat, t)
         row = {
             "sessions": n_sessions, "turns": int(streams[0].shape[0]),
@@ -137,17 +141,40 @@ def run(session_counts=(64, 128, 256, 512), *, turns=4, n_shards=4,
               f"  batched {row['batched_qps']:8.1f} q/s"
               f"  speedup {row['speedup']:.1f}x")
     record = {"n_docs": index.n_docs, "dim": world.cfg.dim, "k": k,
-              "k_c": k_c, "n_shards": n_shards, "rows": rows,
-              "timestamp": time.time()}
-    with open(out_path, "w") as f:
-        json.dump(record, f, indent=1)
+              "k_c": k_c, "n_shards": n_shards, "dtype": index.dtype,
+              "rows": rows, "timestamp": time.time()}
+    # merge-write so full runs and smoke runs co-own one file: the smoke
+    # record nests under "smoke" (the committed-baseline schema
+    # benchmarks/check_regression.py reads) and neither overwrites the other
+    merge_json(out_path, {"smoke": record} if smoke else record)
     return record
+
+
+def merge_json(path: str, updates: dict) -> None:
+    """Merge ``updates`` into a JSON object file, preserving other keys
+    (standalone copy of benchmarks.kernel_bench.merge_json: this module
+    must run as a plain script, where sibling imports don't resolve)."""
+    rec = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            rec = {}
+    if not isinstance(rec, dict):
+        rec = {}
+    rec.update(updates)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale run for CI (8 sessions, tiny world)")
+    ap.add_argument("--dtype", default=None,
+                    help="corpus + cache storage format (fp32/bf16/int8; "
+                         "default follows REPRO_CORPUS_DTYPE)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     if args.smoke:
@@ -155,10 +182,10 @@ def main():
                           dim=64, subspace_dim=8, turns=3, n_conversations=8,
                           doc_sigma=0.6, query_sigma=0.12, drift_sigma=0.16,
                           subtopic_prob=0.35, subtopic_sigma=0.75, seed=7)
-        run((8,), turns=3, k_c=50, repeats=1, world_cfg=cfg,
-            out_path=args.out)
+        run((8,), turns=3, k_c=50, repeats=1, world_cfg=cfg, dtype=args.dtype,
+            smoke=True, out_path=args.out)
     else:
-        run(out_path=args.out)
+        run(dtype=args.dtype, out_path=args.out)
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
+from repro.core import quant
 from repro.core.cache import CacheConfig, MetricCache
 from repro.launch.roofline import HW
 
@@ -39,21 +40,22 @@ def run(world=None, index=None, batch: int = 32):
         res = index.search(queries[:1], k_c)
         for u in range(4):  # a few updates, like a real conversation
             cache.insert(queries[u], res.distances[0, -1],
-                         index.doc_emb[res.ids[0]], res.ids[0])
+                         index.dequantized()[res.ids[0]], res.ids[0])
         state = cache.state
         fn = jax.jit(jax.vmap(lambda q: cache_query_scores(state, q)))
         t, _ = C.timed(fn, queries)
         rows[("cache_hit", k_c)] = t / batch
 
     # TPU roofline-derived scan time: corpus bytes / HBM bw per chip
-    corpus_bytes = index.n_docs * index.dim * 4
+    # (storage-dtype aware: a bf16/int8 corpus streams 2x/4x fewer bytes)
+    corpus_bytes = index.n_docs * index.dim * quant.itemsize(index.dtype)
     rows[("tpu_scan_roofline_1chip", 0)] = corpus_bytes / HW["hbm_bw"]
     rows[("tpu_scan_roofline_256chip", 0)] = corpus_bytes / 256 / HW["hbm_bw"]
     return rows
 
 
 def cache_query_scores(state, psi):
-    scores = state.doc_emb @ psi
+    scores = (state.doc_emb.astype(jnp.float32) @ psi) * state.doc_scale
     scores = jnp.where(state.doc_ids >= 0, scores, -jnp.inf)
     top, _ = jax.lax.top_k(scores, 10)
     return top

@@ -19,7 +19,7 @@ from repro.serve.session import BatchedEngine, SessionManager
 
 
 def make_shards(index, n_shards, straggler=None):
-    docs = np.asarray(index.doc_emb[:index.n_docs])
+    docs = np.asarray(index.dequantized()[:index.n_docs])
     ids = np.arange(index.n_docs)
     bounds = np.linspace(0, index.n_docs, n_shards + 1).astype(int)
     shards = []
@@ -48,7 +48,7 @@ def main():
 
     router = ShardedRouter(make_shards(index, 8, straggler=3),
                            deadline_s=0.5, hedge_after_s=0.1)
-    engine = ConversationalEngine(router, np.asarray(index.doc_emb),
+    engine = ConversationalEngine(router, np.asarray(index.dequantized()),
                                   dim=index.dim, k=10, k_c=200)
 
     for ci, conv in enumerate(world.conversations):
@@ -68,7 +68,7 @@ def main():
     n_sessions = len(world.conversations)
     batched = BatchedEngine(
         ShardedRouter(make_shards(index, 8), deadline_s=5.0),
-        np.asarray(index.doc_emb), dim=index.dim,
+        np.asarray(index.dequantized()), dim=index.dim,
         n_sessions=n_sessions, k=10, k_c=200)
     mgr = SessionManager(batched, window_s=0.005, max_batch=n_sessions)
     streams = [np.asarray(index.transform_queries(

@@ -7,7 +7,6 @@ Algorithm 1, and prints per-turn hit/miss + coverage.
 """
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.conversation import ConversationalSearcher
 from repro.core.metric_index import MetricIndex

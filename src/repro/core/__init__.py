@@ -4,6 +4,7 @@ from repro.core.embedding import (distance_from_scores, pairwise_distances,
                                   pairwise_scores, transform_documents,
                                   transform_queries)
 from repro.core.metric_index import MetricIndex, SearchResult, chunked_nn, exact_nn
+from repro.core.quant import DTYPES, QuantizedCorpus, dequantize, quantize
 
 __all__ = [
     "CacheConfig", "CacheState", "MetricCache", "init_cache",
@@ -11,4 +12,5 @@ __all__ = [
     "distance_from_scores", "pairwise_distances", "pairwise_scores",
     "transform_documents", "transform_queries",
     "MetricIndex", "SearchResult", "chunked_nn", "exact_nn",
+    "DTYPES", "QuantizedCorpus", "dequantize", "quantize",
 ]

@@ -6,15 +6,28 @@ query encoder on-device.  A thin host wrapper (``MetricCache``) provides the
 stateful convenience API used by the conversational client.
 
 State layout (all pre-allocated; ``-1`` ids / ``-inf`` radii mark empty slots):
-  doc_emb   (capacity, dim)   cached transformed document embeddings
+  doc_emb   (capacity, dim)   cached transformed document embeddings, stored
+                              in ``cfg.store_dtype`` (fp32 / bf16 / int8 —
+                              ``repro.core.quant`` formats)
   doc_ids   (capacity,)       global document ids, -1 = empty
   doc_stamp (capacity,)       last-use step (for the beyond-paper LRU policy)
   q_emb     (max_queries, dim) embeddings of queries answered by the back-end
+                              (same storage format as doc_emb)
   q_radius  (max_queries,)    r_a — distance of the k_c-th doc retrieved
   n_docs, step                scalars
   n_queries                   total queries ever recorded (monotone); the
                               query records live in a ring, so the number of
                               *valid* records is min(n_queries, max_queries)
+  doc_scale (capacity,)       f32 per-document score multipliers (all ones
+                              unless store_dtype == "int8")
+  q_scale   (max_queries,)    f32 per-record score multipliers, ditto
+
+Quantized storage rides the same dequantization rule as the corpus scan
+(``quant.scale_scores``): probe / query / insert cast the payload to f32,
+run the arithmetic in f32, and apply the per-row scale score-side — so at
+store_dtype "fp32" the scales are exactly 1.0 and every op is bit-identical
+to the unquantized cache, while bf16 / int8 caches hold 2x / 4x the
+documents per byte of client memory (paper RQ1.C).
 
 Paper-faithful behaviour: no eviction (overflowing inserts are an error in
 strict mode / dropped otherwise); the LowQuality test of Eq. 3/4 decides
@@ -39,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import embedding as emb
+from repro.core import quant
 from repro.kernels import dispatch as kdispatch
 
 __all__ = ["CacheState", "CacheConfig", "init_cache", "probe", "query",
@@ -56,6 +70,8 @@ class CacheState(NamedTuple):
     n_docs: jax.Array
     n_queries: jax.Array
     step: jax.Array
+    doc_scale: jax.Array
+    q_scale: jax.Array
 
 
 class CacheConfig(NamedTuple):
@@ -66,19 +82,33 @@ class CacheConfig(NamedTuple):
     dedup: bool = True
     eviction: str = "none"     # "none" (paper) | "lru" | "ball" (beyond-paper)
     dtype: object = jnp.float32
+    store_dtype: str = "fp32"  # quant.DTYPES embedding storage format
 
 
 def init_cache(cfg: CacheConfig) -> CacheState:
+    store = quant.storage_dtype(cfg.store_dtype)
     return CacheState(
-        doc_emb=jnp.zeros((cfg.capacity, cfg.dim), cfg.dtype),
+        doc_emb=jnp.zeros((cfg.capacity, cfg.dim), store),
         doc_ids=jnp.full((cfg.capacity,), -1, jnp.int32),
         doc_stamp=jnp.zeros((cfg.capacity,), jnp.int32),
-        q_emb=jnp.zeros((cfg.max_queries, cfg.dim), cfg.dtype),
+        q_emb=jnp.zeros((cfg.max_queries, cfg.dim), store),
         q_radius=jnp.full((cfg.max_queries,), -jnp.inf, cfg.dtype),
         n_docs=jnp.zeros((), jnp.int32),
         n_queries=jnp.zeros((), jnp.int32),
         step=jnp.zeros((), jnp.int32),
+        doc_scale=jnp.ones((cfg.capacity,), jnp.float32),
+        q_scale=jnp.ones((cfg.max_queries,), jnp.float32),
     )
+
+
+def _store_rows(x: jax.Array, store_dtype: str):
+    """Quantize rows into the cache storage format; scales always an array
+    (ones when the format carries none), so CacheState leaves are uniform
+    across dtypes."""
+    qc = quant.quantize(x, store_dtype)
+    if qc.scale is None:
+        return qc.data, jnp.ones(x.shape[:-1], jnp.float32)
+    return qc.data, qc.scale
 
 
 class ProbeResult(NamedTuple):
@@ -94,7 +124,9 @@ def probe(state: CacheState, psi: jax.Array, epsilon: jax.Array | float) -> Prob
     Returns hit=False when the cache holds no queries (compulsory miss).
     """
     valid = jnp.arange(state.q_emb.shape[0]) < state.n_queries
-    dist = emb.distance_from_scores(state.q_emb @ psi)           # (max_queries,)
+    scores = quant.scale_scores(
+        state.q_emb.astype(jnp.float32) @ psi, state.q_scale)
+    dist = emb.distance_from_scores(scores)                      # (max_queries,)
     r_hat = jnp.where(valid, state.q_radius - dist, -jnp.inf)
     best = jnp.argmax(r_hat)
     best_r = r_hat[best]
@@ -110,7 +142,8 @@ def query(state: CacheState, psi: jax.Array, k: int):
     -inf) sentinel slots; callers must drop those rows before ranking-metric
     or result use (``serve.engine`` does).
     """
-    scores = state.doc_emb @ psi                                  # (capacity,)
+    scores = quant.scale_scores(
+        state.doc_emb.astype(jnp.float32) @ psi, state.doc_scale)  # (capacity,)
     scores = jnp.where(state.doc_ids >= 0, scores, -jnp.inf)
     top_s, slots = jax.lax.top_k(scores, k)
     ids = state.doc_ids[slots]
@@ -189,7 +222,8 @@ def insert(state: CacheState, cfg: CacheConfig, psi: jax.Array, radius: jax.Arra
             key = state.doc_stamp.astype(state.q_radius.dtype)
         else:
             # Beyond-paper: overflow evicts docs farthest from the query.
-            key = -emb.distance_from_scores(state.doc_emb @ psi)
+            key = -emb.distance_from_scores(quant.scale_scores(
+                state.doc_emb.astype(jnp.float32) @ psi, state.doc_scale))
         pos, dropped = _evicting_positions(state, cfg.capacity, keep, key,
                                            evictable)
         new_n = jnp.minimum(state.n_docs + keep.sum(), cfg.capacity)
@@ -200,7 +234,11 @@ def insert(state: CacheState, cfg: CacheConfig, psi: jax.Array, radius: jax.Arra
         dropped = jnp.logical_and(keep, ~fits).sum().astype(jnp.int32)
         new_n = jnp.minimum(state.n_docs + keep.sum(), cfg.capacity)
 
-    doc_emb = state.doc_emb.at[pos].set(new_emb, mode="drop")
+    # embeddings enter the cache in the storage format: quantize the batch
+    # (identity at fp32) and scatter payload + per-row scale together
+    emb_q, emb_scale = _store_rows(new_emb, cfg.store_dtype)
+    doc_emb = state.doc_emb.at[pos].set(emb_q, mode="drop")
+    doc_scale = state.doc_scale.at[pos].set(emb_scale, mode="drop")
     doc_ids = state.doc_ids.at[pos].set(new_ids, mode="drop")
     doc_stamp = state.doc_stamp.at[pos].set(state.step, mode="drop")
 
@@ -208,8 +246,11 @@ def insert(state: CacheState, cfg: CacheConfig, psi: jax.Array, radius: jax.Arra
     # full cache overwrites the *oldest* record, not the most recent one
     rec = jnp.asarray(record, bool)
     qslot = jnp.mod(state.n_queries, state.q_emb.shape[0])
+    psi_q, psi_scale = _store_rows(psi, cfg.store_dtype)
     q_emb = state.q_emb.at[qslot].set(
-        jnp.where(rec, psi, state.q_emb[qslot]))
+        jnp.where(rec, psi_q, state.q_emb[qslot]))
+    q_scale = state.q_scale.at[qslot].set(
+        jnp.where(rec, psi_scale, state.q_scale[qslot]))
     q_radius = state.q_radius.at[qslot].set(
         jnp.where(rec, radius, state.q_radius[qslot]))
 
@@ -219,6 +260,7 @@ def insert(state: CacheState, cfg: CacheConfig, psi: jax.Array, radius: jax.Arra
         n_docs=new_n.astype(jnp.int32),
         n_queries=(state.n_queries + rec.astype(jnp.int32)),
         step=state.step + 1,
+        doc_scale=doc_scale, q_scale=q_scale,
     )
     return new_state, dropped
 
@@ -260,6 +302,7 @@ class MetricCache:
             st = self.state
             hit, r_hat, idx = cache_probe(
                 st.q_emb, psi, st.q_radius, st.n_queries, eps,
+                q_scale=st.q_scale,
                 interpret=(None if be == "ref"
                            else kdispatch.interpret_flag(be)))
             return ProbeResult(hit, r_hat, idx)
@@ -275,10 +318,12 @@ class MetricCache:
         self.total_dropped += int(dropped)
 
     def memory_bytes(self) -> int:
-        """Worst-case occupancy (paper RQ1.C): embeddings dominate."""
+        """Worst-case occupancy (paper RQ1.C): embeddings dominate — a
+        bf16 / int8 ``store_dtype`` cuts the dominant term 2x / 4x."""
         s = self.state
         return sum(int(x.size) * x.dtype.itemsize for x in
-                   (s.doc_emb, s.doc_ids, s.doc_stamp, s.q_emb, s.q_radius))
+                   (s.doc_emb, s.doc_ids, s.doc_stamp, s.q_emb, s.q_radius,
+                    s.doc_scale, s.q_scale))
 
 
 # --------------------------------------------------------------------------
@@ -324,6 +369,7 @@ def probe_batched(state: CacheState, psi: jax.Array,
     from repro.kernels.cache_probe.ops import cache_probe_batched
     hit, r_hat, idx = cache_probe_batched(
         state.q_emb, psi, state.q_radius, state.n_queries, epsilon,
+        q_scale=state.q_scale,
         interpret=kdispatch.interpret_flag(be))
     return ProbeResult(hit, r_hat, idx)
 
@@ -417,4 +463,5 @@ class BatchedMetricCache:
     def memory_bytes(self) -> int:
         s = self.state
         return sum(int(x.size) * x.dtype.itemsize for x in
-                   (s.doc_emb, s.doc_ids, s.doc_stamp, s.q_emb, s.q_radius))
+                   (s.doc_emb, s.doc_ids, s.doc_stamp, s.q_emb, s.q_radius,
+                    s.doc_scale, s.q_scale))

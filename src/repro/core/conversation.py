@@ -58,9 +58,12 @@ class ConversationalSearcher:
 
     def __post_init__(self):
         cap = self.cache_capacity or 16 * self.k_c
+        # the client cache stores embeddings in the index's dtype policy, so
+        # a quantized deployment shrinks client memory by the same factor
         cfg = CacheConfig(capacity=cap, dim=self.index.dim,
                           max_queries=self.max_queries, epsilon=self.epsilon,
-                          dedup=self.dedup, eviction=self.eviction)
+                          dedup=self.dedup, eviction=self.eviction,
+                          store_dtype=self.index.dtype)
         self.cache = MetricCache(cfg)
 
     # -- conversation lifecycle -------------------------------------------
@@ -87,7 +90,9 @@ class ConversationalSearcher:
         if low_quality:
             backend: SearchResult = self.index.search(psi[None], self.k_c)
             radius = backend.distances[0, -1]          # r_a: k_c-th NN distance
-            doc_emb = self.index.doc_emb[self._slots_for(backend.ids[0])]
+            # f32 view, not the raw payload: a bf16/int8 index stores a
+            # quantized doc_emb whose magnitude lives in doc_scale
+            doc_emb = self.index.dequantized()[self._slots_for(backend.ids[0])]
             self.cache.insert(psi, radius, doc_emb, backend.ids[0])
 
         scores, dists, ids, _ = self.cache.query(psi, self.k)

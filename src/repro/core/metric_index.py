@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import embedding as emb
+from repro.core import quant
 from repro.kernels import dispatch as kdispatch
 
 __all__ = ["SearchResult", "exact_nn", "chunked_nn", "masked_chunked_nn",
@@ -52,28 +53,37 @@ def exact_nn(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int) ->
 
 
 def streaming_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
-                   k: int, chunk: int, masked: bool = False):
+                   k: int, chunk: int, masked: bool = False,
+                   scale: jax.Array | None = None):
     """Raw streaming top-k scan shared by ``chunked_nn``, the padded-corpus
     index path, and ``dist.retrieval``'s per-shard search.
 
     Scans corpus chunks with a running (scores, ids) carry; peak live memory
     is O(q*chunk + q*k).  ``n`` must be a multiple of ``chunk``.  When
     ``masked`` (static), rows with sentinel id < 0 score -inf, so padded
-    corpora never win top-k.  Returns (scores (q, k), ids (q, k)).
+    corpora never win top-k.  ``docs`` may be a quantized payload (bf16 /
+    int8) with ``scale`` its (n,) f32 per-document score multiplier —
+    dequantization is chunk-local (payload cast to f32, f32 dot, score-side
+    scale), the same rule the Pallas tiers apply per tile, so peak memory
+    stays O(q*chunk) and tiers agree.  Returns (scores (q, k), ids (q, k)).
     """
     n = docs.shape[0]
     assert n % chunk == 0, f"corpus size {n} not divisible by chunk {chunk}"
     docs_c = docs.reshape(n // chunk, chunk, docs.shape[1])
     ids_c = doc_ids.reshape(n // chunk, chunk)
+    scale_c = (None if scale is None else
+               scale.astype(jnp.float32).reshape(n // chunk, chunk))
     q = queries.shape[0]
+    queries = queries.astype(jnp.float32)
 
     init = (jnp.full((q, k), -jnp.inf, queries.dtype),
             jnp.full((q, k), -1, jnp.int32))
 
     def step(carry, chunk_data):
         best_s, best_i = carry
-        cd, ci = chunk_data
-        scores = queries @ cd.T                                  # (q, chunk)
+        cd, ci, cs = chunk_data
+        scores = queries @ cd.astype(jnp.float32).T              # (q, chunk)
+        scores = quant.scale_scores(scores, cs)
         if masked:
             scores = jnp.where(ci[None, :] < 0, -jnp.inf, scores)
         cand_s = jnp.concatenate([best_s, scores], axis=1)
@@ -82,7 +92,13 @@ def streaming_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
         top_i = jnp.take_along_axis(cand_i, top_pos, axis=1)
         return (top_s, top_i), None
 
-    (best_s, best_i), _ = jax.lax.scan(step, init, (docs_c, ids_c))
+    xs = (docs_c, ids_c, scale_c)
+    if scale_c is None:
+        xs = (docs_c, ids_c)
+        step_fn = lambda c, x: step(c, (x[0], x[1], None))
+    else:
+        step_fn = step
+    (best_s, best_i), _ = jax.lax.scan(step_fn, init, xs)
     return best_s, best_i
 
 
@@ -103,27 +119,32 @@ def masked_chunked_nn(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
 
 def scan_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
               *, chunk: int = 4096, backend: str | None = None,
-              tile_n: int | None = None):
+              tile_n: int | None = None, scale: jax.Array | None = None):
     """The one corpus-scan contract (see module docstring).
 
     docs (N, D) with N a ``chunk`` multiple on the ref tier (the kernel
-    tiers pad internally); doc_ids (N,) int32, -1 on sentinel rows;
-    queries (B, D).  Returns raw (scores (B, k), ids (B, k)) — descending
-    scores, sentinel id -1 wherever the score is -inf — identical in
-    ranking across tiers.  Trace-safe: usable inside jit and ``shard_map``
-    bodies (``backend`` must then be a concrete tier, resolved outside).
+    tiers pad internally) — fp32, or a quantized payload (bf16 / int8,
+    ``repro.core.quant``) with ``scale`` its (N,) f32 per-document score
+    multiplier; doc_ids (N,) int32, -1 on sentinel rows; queries (B, D)
+    f32.  Returns raw (scores (B, k), ids (B, k)) — descending scores,
+    sentinel id -1 wherever the score is -inf — identical in ranking
+    across tiers at a fixed dtype (rank equality vs the fp32 corpus is
+    tolerance-bound; see tests/test_kernel_equivalence.py).  Trace-safe:
+    usable inside jit and ``shard_map`` bodies (``backend`` must then be a
+    concrete tier, resolved outside).
     """
     be = kdispatch.resolve(backend)
     if be == "ref":
-        return _streaming_topk_masked(docs, doc_ids, queries, k=k,
+        return _streaming_topk_masked(docs, doc_ids, queries, scale, k=k,
                                       chunk=chunk)
     from repro.kernels.knn import ops as knn_ops
     return knn_ops.knn_search(docs, doc_ids, queries, k, tile_n=tile_n,
-                              backend=be)
+                              backend=be, scale=scale)
 
 
 _streaming_topk_masked = jax.jit(
-    functools.partial(streaming_topk, masked=True),
+    lambda docs, doc_ids, queries, scale, *, k, chunk: streaming_topk(
+        docs, doc_ids, queries, k, chunk, masked=True, scale=scale),
     static_argnames=("k", "chunk"))
 
 
@@ -138,11 +159,18 @@ class MetricIndex:
     ``kernels.dispatch.default_backend()`` — the compiled Pallas kernel on
     TPU, the jnp streaming scan elsewhere; ``True`` pins the kernel
     (interpret mode off-TPU); ``False`` pins the jnp scan.
+
+    ``dtype`` selects the corpus storage format (``repro.core.quant``):
+    ``None`` follows ``quant.default_dtype()`` (the ``REPRO_CORPUS_DTYPE``
+    policy, fp32 when unset); "bf16" / "int8" store the corpus quantized —
+    2x / 4x more documents per HBM byte through the bandwidth-bound scan —
+    and every tier dequantizes with the shared score-side-scale rule, so
+    rankings stay tier-identical at the chosen dtype.
     """
 
     def __init__(self, doc_emb, doc_ids=None, *, transformed: bool = False,
                  chunk: int = 4096, use_kernel: bool | None = None,
-                 sharded: bool = False, mesh=None):
+                 sharded: bool = False, mesh=None, dtype: str | None = None):
         doc_emb = jnp.asarray(doc_emb)
         if doc_ids is None:
             doc_ids = jnp.arange(doc_emb.shape[0], dtype=jnp.int32)
@@ -163,7 +191,10 @@ class MetricIndex:
             emb_t = jnp.concatenate([emb_t, jnp.zeros((pad, self.dim), emb_t.dtype)])
             doc_ids = jnp.concatenate([doc_ids, jnp.full((pad,), -1, jnp.int32)])
         self._pad = pad
-        self.doc_emb = emb_t
+        self.dtype = quant.resolve_dtype(dtype)
+        qc = quant.quantize(emb_t, self.dtype)
+        self.doc_emb = qc.data
+        self.doc_scale = qc.scale
         self.doc_ids = doc_ids
         self.use_kernel = use_kernel
         if use_kernel is None:
@@ -179,9 +210,10 @@ class MetricIndex:
             # every search hits the shard_map fast path (no per-query pad
             # or host->mesh re-layout).
             from repro.dist import retrieval as dist_retrieval
-            (self.doc_emb, self.doc_ids, self.mesh,
+            (self.doc_emb, self.doc_ids, self.doc_scale, self.mesh,
              self._shard_chunk) = dist_retrieval.shard_corpus(
-                self.doc_emb, self.doc_ids, mesh=mesh, chunk=self.chunk)
+                self.doc_emb, self.doc_ids, scale=self.doc_scale, mesh=mesh,
+                chunk=self.chunk)
 
     def transform_queries(self, psi: jax.Array) -> jax.Array:
         return emb.transform_queries(psi)
@@ -198,9 +230,23 @@ class MetricIndex:
             return dist_retrieval.sharded_nn(self.doc_emb, self.doc_ids,
                                              queries, k, mesh=self.mesh,
                                              chunk=self._shard_chunk,
-                                             backend=self.backend)
+                                             backend=self.backend,
+                                             scale=self.doc_scale)
         return _as_result(*scan_topk(self.doc_emb, self.doc_ids, queries, k,
-                                     chunk=self.chunk, backend=self.backend))
+                                     chunk=self.chunk, backend=self.backend,
+                                     scale=self.doc_scale))
+
+    def dequantized(self) -> jax.Array:
+        """f32 view of the (padded) transformed corpus — the exact values
+        every scan tier scores against.  Host-side tooling (benchmark shard
+        construction, engine doc-embedding lookups) should use this rather
+        than ``doc_emb``, whose dtype follows the storage policy.  The view
+        is memoized: the corpus is immutable after construction."""
+        if getattr(self, "_dequant", None) is None:
+            self._dequant = quant.dequantize(
+                quant.QuantizedCorpus(self.doc_emb, self.doc_scale,
+                                      self.dtype))
+        return self._dequant
 
     def __hash__(self):  # allow use as a static jit argument
         return id(self)

@@ -1,0 +1,141 @@
+"""Quantized corpus storage for the bandwidth-bound scan contract.
+
+The fused kNN scan streams the whole corpus through VMEM once per wave, so
+on TPU it is HBM-bandwidth bound (see ``kernels.knn``): at fp32 a 768(+1)-d
+STAR corpus costs ~3 KB of HBM traffic per document per scan.  Storing the
+corpus in bf16 or int8 cuts that traffic 2x / 4x — the scan's effective
+bandwidth rises by the same factor because the kernel dequantizes tiles in
+VMEM (registers), never in HBM.
+
+Formats (``DTYPES``):
+
+  * ``fp32`` — identity; the oracle representation.
+  * ``bf16`` — elementwise downcast; no scale array.
+  * ``int8`` — symmetric per-document quantization with an fp32 scale per
+    row, *unit-norm-preserving*: the scale is chosen as
+    ``||x|| / ||q_int||`` (not the usual ``amax/127``) so the dequantized
+    row has exactly the norm of the original.  Transformed embeddings
+    (Eq. 1) live on the unit sphere, and the whole metric machinery
+    (``distance_from_scores``, hyperball containment, the LowQuality test)
+    assumes unit vectors — preserving the norm keeps score -> distance
+    conversions consistent to fp32 rounding.
+
+Dequantization rule shared by EVERY scan tier (this is what makes the three
+dispatch tiers bit-identical at a fixed dtype):
+
+    scores = (q_f32 @ data.astype(f32).T) * scale        # score-side scale
+
+i.e. the integer (or bf16) payload is cast to f32, the dot runs in f32, and
+the per-document scale multiplies the *score*.  Rank equality vs the fp32
+corpus is tolerance-bound, not exact (documented floors live in
+``tests/test_kernel_equivalence.py`` and the README table).
+
+``REPRO_CORPUS_DTYPE`` pins the default for a whole process (the CI kernel
+gate runs the matrix {fp32, bf16, int8} x {ref, interpret} this way);
+components with a ``dtype=None`` policy argument (``MetricIndex``,
+``DeviceShard``, the serving engines' cache storage) resolve through
+``default_dtype()``.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DTYPES", "QuantizedCorpus", "default_dtype", "resolve_dtype",
+           "storage_dtype", "itemsize", "quantize", "dequantize",
+           "scale_scores"]
+
+DTYPES = ("fp32", "bf16", "int8")
+
+_STORAGE = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+
+
+class QuantizedCorpus(NamedTuple):
+    """A corpus in one of the ``DTYPES`` formats.
+
+    data:  (n, d) payload in ``storage_dtype(dtype)``.
+    scale: (n,) f32 per-document score multipliers, or None (fp32 / bf16).
+    dtype: the format name (static; not a jax type).
+    """
+
+    data: jax.Array
+    scale: Optional[jax.Array]
+    dtype: str
+
+
+def default_dtype() -> str:
+    """Process-wide corpus dtype policy (``REPRO_CORPUS_DTYPE``, else fp32)."""
+    env = os.environ.get("REPRO_CORPUS_DTYPE", "").strip().lower()
+    if not env:
+        return "fp32"
+    if env not in DTYPES:
+        raise ValueError(
+            f"REPRO_CORPUS_DTYPE={env!r}: expected one of {DTYPES}")
+    return env
+
+
+def resolve_dtype(dtype: Optional[str]) -> str:
+    """Validate ``dtype``; None resolves to the process default."""
+    if dtype is None:
+        return default_dtype()
+    if dtype not in DTYPES:
+        raise ValueError(f"dtype {dtype!r}: expected one of {DTYPES}")
+    return dtype
+
+
+def storage_dtype(dtype: str):
+    """The jnp element type backing a format."""
+    return _STORAGE[resolve_dtype(dtype)]
+
+
+def itemsize(dtype: str) -> int:
+    """Bytes per element streamed from HBM for a format's payload."""
+    return jnp.dtype(storage_dtype(dtype)).itemsize
+
+
+def quantize(x: jax.Array, dtype: Optional[str] = None) -> QuantizedCorpus:
+    """Quantize (n, d) f32 rows into a ``QuantizedCorpus``.
+
+    Pure jnp — safe inside jit/vmap (``dtype`` must then be static).
+    int8 rows quantize symmetrically per document; the fp32 scale is
+    renormalized so the dequantized row keeps the original row's norm
+    exactly (see module docstring).  All-zero rows (sentinel padding)
+    quantize to zero payload with scale 1.
+    """
+    dtype = resolve_dtype(dtype)
+    x = jnp.asarray(x)
+    if dtype == "fp32":
+        return QuantizedCorpus(x.astype(jnp.float32), None, dtype)
+    if dtype == "bf16":
+        return QuantizedCorpus(x.astype(jnp.bfloat16), None, dtype)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    step = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / step), -127, 127).astype(jnp.int8)
+    qnorm = jnp.linalg.norm(q.astype(jnp.float32), axis=-1)
+    xnorm = jnp.linalg.norm(x.astype(jnp.float32), axis=-1)
+    scale = jnp.where(qnorm > 0, xnorm / jnp.maximum(qnorm, 1e-30), 1.0)
+    return QuantizedCorpus(q, scale.astype(jnp.float32), dtype)
+
+
+def dequantize(qc: QuantizedCorpus) -> jax.Array:
+    """f32 view of the payload (the value every scan tier scores against)."""
+    x = qc.data.astype(jnp.float32)
+    if qc.scale is None:
+        return x
+    return x * qc.scale[..., None]
+
+
+def scale_scores(scores: jax.Array, scale: Optional[jax.Array]) -> jax.Array:
+    """Apply the score-side per-document scale: (..., n) * (n,) -> (..., n).
+
+    The shared dequantization rule of the scan contract: every tier scores
+    the raw payload in f32 and multiplies the score by the document scale,
+    so tiers agree bitwise at a fixed dtype.  No-op when scale is None.
+    """
+    if scale is None:
+        return scores
+    return scores * scale

@@ -20,11 +20,9 @@ paper's evaluation design.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["WorldConfig", "Conversation", "TopicWorld", "make_world"]

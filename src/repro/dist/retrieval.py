@@ -31,6 +31,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import quant
 from repro.core.metric_index import SearchResult, _as_result, scan_topk
 from repro.dist.api import active_mesh
 from repro.kernels import dispatch as kdispatch
@@ -94,7 +95,8 @@ def _slice_layout(n: int, n_dev: int, chunk: int):
     return per, chunk_eff
 
 
-def _pad_corpus(docs: jax.Array, doc_ids: jax.Array, rows: int):
+def _pad_corpus(docs: jax.Array, doc_ids: jax.Array, rows: int,
+                scale: Optional[jax.Array] = None):
     """Sentinel-pad (id -1, masked to -inf) to exactly ``rows`` rows."""
     pad = rows - docs.shape[0]
     if pad:
@@ -102,44 +104,52 @@ def _pad_corpus(docs: jax.Array, doc_ids: jax.Array, rows: int):
             [docs, jnp.zeros((pad, docs.shape[1]), docs.dtype)])
         doc_ids = jnp.concatenate(
             [doc_ids, jnp.full((pad,), -1, jnp.int32)])
-    return docs, doc_ids
+        if scale is not None:
+            scale = jnp.concatenate(
+                [scale, jnp.ones((pad,), scale.dtype)])
+    return docs, doc_ids, scale
 
 
-def shard_corpus(docs, doc_ids, *, mesh: Optional[Mesh] = None,
+def shard_corpus(docs, doc_ids, *, scale: Optional[jax.Array] = None,
+                 mesh: Optional[Mesh] = None,
                  axes: Optional[Sequence[str]] = None, chunk: int = 4096):
     """Pad a corpus to equal per-device slices and commit it to the mesh.
 
-    Returns (docs, doc_ids, mesh, chunk_eff) with the rows already laid out
-    P(axes) across devices, so repeated ``sharded_nn`` calls (a serving
-    index) pay no per-query re-pad or host->mesh re-layout.
+    ``docs`` may be a quantized payload (bf16 / int8) with ``scale`` its
+    per-document f32 score multiplier, which shards row-aligned with it.
+    Returns (docs, doc_ids, scale, mesh, chunk_eff) with the rows already
+    laid out P(axes) across devices, so repeated ``sharded_nn`` calls (a
+    serving index) pay no per-query re-pad or host->mesh re-layout.
     """
     mesh, axes, n_dev = _resolve(mesh, axes)
     docs = jnp.asarray(docs)
     doc_ids = jnp.asarray(doc_ids, jnp.int32)
     per, chunk_eff = _slice_layout(docs.shape[0], n_dev, chunk)
-    docs, doc_ids = _pad_corpus(docs, doc_ids, per * n_dev)
+    docs, doc_ids, scale = _pad_corpus(docs, doc_ids, per * n_dev, scale)
     entry = axes if len(axes) > 1 else axes[0]
     docs = jax.device_put(docs, NamedSharding(mesh, P(entry, None)))
     doc_ids = jax.device_put(doc_ids, NamedSharding(mesh, P(entry)))
-    return docs, doc_ids, mesh, chunk_eff
+    if scale is not None:
+        scale = jax.device_put(scale, NamedSharding(mesh, P(entry)))
+    return docs, doc_ids, scale, mesh, chunk_eff
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...], k: int, chunk: int,
-                       backend: str):
-    """jit(shard_map) factory, cached per (mesh, axes, k, chunk, backend).
+                       backend: str, quantized: bool):
+    """jit(shard_map) factory, cached per (mesh, axes, k, chunk, backend,
+    quantized).
 
     Per device: the shared ``scan_topk`` contract over the local corpus
-    slice (jnp streaming scan or the fused Pallas kernel, per ``backend``),
-    then an all-gather of the (q, k) partials over the corpus axes and a
-    local merge — every device ends with the identical global top-k
-    (replicated out).
+    slice (jnp streaming scan or the fused Pallas kernel, per ``backend``;
+    a quantized slice carries its per-document scale shard-aligned), then
+    an all-gather of the (q, k) partials over the corpus axes and a local
+    merge — every device ends with the identical global top-k (replicated
+    out).
     """
     axis_entry = axes if len(axes) > 1 else axes[0]
 
-    def local(docs, ids, queries):
-        part_s, part_i = scan_topk(docs, ids, queries, k, chunk=chunk,
-                                   backend=backend)
+    def merge(part_s, part_i):
         # shard order == row order (contiguous row sharding), so the
         # concatenated candidate list preserves global id order and the
         # stable top_k below breaks ties exactly like a global top_k.
@@ -148,8 +158,19 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...], k: int, chunk: int,
         top_s, pos = jax.lax.top_k(all_s, k)
         return top_s, jnp.take_along_axis(all_i, pos, axis=1)
 
-    fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(axis_entry, None), P(axis_entry), P(None, None)),
+    if quantized:
+        def local(docs, ids, scale, queries):
+            return merge(*scan_topk(docs, ids, queries, k, chunk=chunk,
+                                    backend=backend, scale=scale))
+        in_specs = (P(axis_entry, None), P(axis_entry), P(axis_entry),
+                    P(None, None))
+    else:
+        def local(docs, ids, queries):
+            return merge(*scan_topk(docs, ids, queries, k, chunk=chunk,
+                                    backend=backend))
+        in_specs = (P(axis_entry, None), P(axis_entry), P(None, None))
+
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs,
                    out_specs=(P(None, None), P(None, None)),
                    check_rep=False)
     return jax.jit(fn)
@@ -157,7 +178,8 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...], k: int, chunk: int,
 
 def sharded_nn(docs, doc_ids, queries, k: int, *, mesh: Optional[Mesh] = None,
                axes: Optional[Sequence[str]] = None, chunk: int = 4096,
-               backend: Optional[str] = None) -> SearchResult:
+               backend: Optional[str] = None,
+               scale: Optional[jax.Array] = None) -> SearchResult:
     """Exact k-NN with the corpus sharded over ``mesh`` (all its axes by
     default; the active ``sharding_rules`` mesh, else one flat axis over
     every local device, when ``mesh`` is None).
@@ -166,8 +188,11 @@ def sharded_nn(docs, doc_ids, queries, k: int, *, mesh: Optional[Mesh] = None,
     device gets an equal, chunk-divisible slice — a no-op when the corpus
     was pre-laid-out with ``shard_corpus`` (the serving-index fast path).
     ``backend`` picks the per-shard scan tier (``kernels.dispatch``; the
-    default is compiled-kernel-on-TPU / jnp elsewhere).  Rankings are
-    bit-identical to ``exact_nn`` on the unpadded corpus.
+    default is compiled-kernel-on-TPU / jnp elsewhere).  ``docs`` may be a
+    quantized payload (bf16 / int8) with ``scale`` its (n,) f32
+    per-document score multiplier, sharded row-aligned with the corpus.
+    Rankings are bit-identical to ``exact_nn`` on the unpadded corpus at
+    fp32 (tolerance-bound rank equality at quantized dtypes).
     """
     mesh, axes, n_dev = _resolve(mesh, axes)
     docs = jnp.asarray(docs)
@@ -178,11 +203,14 @@ def sharded_nn(docs, doc_ids, queries, k: int, *, mesh: Optional[Mesh] = None,
 
     n = docs.shape[0]
     per, chunk_eff = _slice_layout(n, n_dev, chunk)
-    docs, doc_ids = _pad_corpus(docs, doc_ids, per * n_dev)
+    docs, doc_ids, scale = _pad_corpus(docs, doc_ids, per * n_dev, scale)
 
     fn = _sharded_search_fn(mesh, axes, int(min(k, n)), chunk_eff,
-                            kdispatch.resolve(backend))
-    scores, ids = fn(docs, doc_ids, queries)
+                            kdispatch.resolve(backend), scale is not None)
+    if scale is not None:
+        scores, ids = fn(docs, doc_ids, scale, queries)
+    else:
+        scores, ids = fn(docs, doc_ids, queries)
     return _as_result(scores, ids)
 
 
@@ -201,35 +229,44 @@ class DeviceShard:
     ``serve.router.ShardedRouter`` fronts, so hedging, deadlines, and
     degraded merges apply unchanged.  Concurrent router threads run their
     shards on distinct devices in parallel.  The scan is the shared
-    ``scan_topk`` contract (``backend`` pins a ``kernels.dispatch`` tier).
+    ``scan_topk`` contract (``backend`` pins a ``kernels.dispatch`` tier;
+    ``dtype`` the corpus storage format — None follows the
+    ``REPRO_CORPUS_DTYPE`` policy, and the slice is quantized once at
+    construction).
     """
 
     def __init__(self, docs, doc_ids, device=None, chunk: int = 4096,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, dtype: Optional[str] = None):
         docs = jnp.asarray(docs)
         doc_ids = jnp.asarray(doc_ids, jnp.int32)
         n = docs.shape[0]
         self.chunk = int(min(chunk, max(8, n)))
-        docs, doc_ids = _pad_corpus(docs, doc_ids, n + (-n) % self.chunk)
+        self.dtype = quant.resolve_dtype(dtype)
+        qc = quant.quantize(docs, self.dtype)
+        docs, doc_ids, scale = _pad_corpus(qc.data, doc_ids,
+                                           n + (-n) % self.chunk, qc.scale)
         self.device = device
         self.backend = kdispatch.resolve(backend)
         self.n_docs = n
         self.docs = jax.device_put(docs, device)
         self.doc_ids = jax.device_put(doc_ids, device)
+        self.scale = (None if scale is None
+                      else jax.device_put(scale, device))
 
     def __call__(self, queries, k: int) -> ShardTopK:
-        q = jnp.asarray(queries, self.docs.dtype)
+        q = jnp.asarray(queries, jnp.float32)
         if q.ndim == 1:
             q = q[None]
         if self.device is not None:
             q = jax.device_put(q, self.device)
         scores, ids = scan_topk(self.docs, self.doc_ids, q, int(k),
-                                chunk=self.chunk, backend=self.backend)
+                                chunk=self.chunk, backend=self.backend,
+                                scale=self.scale)
         return ShardTopK(np.asarray(scores), np.asarray(ids))
 
 
 def make_device_shards(docs, doc_ids=None, *, devices=None,
-                       chunk: int = 4096) -> list:
+                       chunk: int = 4096, dtype: Optional[str] = None) -> list:
     """Split a corpus into one ``DeviceShard`` per device (equal, padded
     slices so every shard shares a single jit trace)."""
     docs = jnp.asarray(docs)
@@ -245,5 +282,5 @@ def make_device_shards(docs, doc_ids=None, *, devices=None,
         if lo >= n:
             break
         shards.append(DeviceShard(docs[lo:hi], doc_ids[lo:hi], device=dev,
-                                  chunk=min(chunk, per)))
+                                  chunk=min(chunk, per), dtype=dtype))
     return shards

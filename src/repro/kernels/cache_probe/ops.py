@@ -5,8 +5,10 @@ fuses a whole serving wave — S sessions' LowQuality tests — into one
 Pallas launch over the stacked cache state.  Both apply the ring-buffer
 validity mask (a slot is live iff its index < n_queries; n_queries counts
 *total* records, so a wrapped ring keeps every slot live) by folding -inf
-into the radius operand, and both return nearest_q = -1 for a cache that
-holds no query records.
+into the radius operand, both accept quantized record storage (the
+``q_scale`` per-record score multipliers of ``repro.core.quant``; padded
+slots get scale 1), and both return nearest_q = -1 for a cache that holds
+no query records.
 """
 
 from __future__ import annotations
@@ -26,9 +28,12 @@ SUBLANE = 8
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def cache_probe(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
                 n_queries: jax.Array, epsilon,
+                q_scale: jax.Array | None = None,
                 interpret: bool | None = None):
-    """Fused LowQuality test. q_emb (Qmax, D); psi (D,); radius (Qmax,);
-    n_queries scalar. Returns (hit, best_r_hat, best_idx)."""
+    """Fused LowQuality test. q_emb (Qmax, D) record payload (any storage
+    dtype); psi (D,) f32; radius (Qmax,); n_queries scalar; q_scale (Qmax,)
+    f32 per-record score multipliers (None = unquantized). Returns (hit,
+    best_r_hat, best_idx)."""
     if interpret is None:
         interpret = dispatch.interpret_flag(dispatch.resolve(None, kernel=True))
     qmax, d = q_emb.shape
@@ -36,10 +41,14 @@ def cache_probe(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
     qpad = (-qmax) % SUBLANE
     q_emb_p = jnp.pad(q_emb, ((0, qpad), (0, dpad)))
     psi_p = jnp.pad(psi[None], ((0, SUBLANE - 1), (0, dpad)))
+    if q_scale is None:
+        q_scale = jnp.ones((qmax,), jnp.float32)
+    scale_p = jnp.pad(q_scale.astype(jnp.float32), (0, qpad),
+                      constant_values=1.0)
     valid = jnp.arange(qmax + qpad) < n_queries
     radius_m = jnp.where(valid, jnp.pad(radius, (0, qpad),
                                         constant_values=-jnp.inf), -jnp.inf)
-    r_hat = probe_rhat(q_emb_p, psi_p, radius_m[:, None],
+    r_hat = probe_rhat(q_emb_p, psi_p, radius_m[:, None], scale_p[:, None],
                        interpret=interpret)[:, 0]
     r_hat = jnp.where(valid, r_hat, -jnp.inf)
     best = jnp.argmax(r_hat)
@@ -50,14 +59,16 @@ def cache_probe(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def cache_probe_batched(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
                         n_queries: jax.Array, epsilon,
+                        q_scale: jax.Array | None = None,
                         interpret: bool | None = None):
     """One fused LowQuality test per session, one kernel launch total.
 
-    q_emb (S, Qmax, D) stacked record embeddings; psi (S, D) the wave's
-    queries; radius (S, Qmax); n_queries (S,) total-record counters (ring
-    semantics: valid slots are those with index < n_queries).  Returns
-    (hit (S,) bool, best_r_hat (S,) f32, best_idx (S,) int32 with -1 for
-    empty caches).
+    q_emb (S, Qmax, D) stacked record payload (any storage dtype); psi
+    (S, D) f32 — the wave's queries; radius (S, Qmax); n_queries (S,)
+    total-record counters (ring semantics: valid slots are those with
+    index < n_queries); q_scale (S, Qmax) f32 per-record score multipliers
+    (None = unquantized).  Returns (hit (S,) bool, best_r_hat (S,) f32,
+    best_idx (S,) int32 with -1 for empty caches).
     """
     if interpret is None:
         interpret = dispatch.interpret_flag(dispatch.resolve(None, kernel=True))
@@ -68,6 +79,10 @@ def cache_probe_batched(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
     psi_p = jnp.broadcast_to(
         jnp.pad(psi, ((0, 0), (0, dpad)))[:, None, :],
         (s, SUBLANE, d + dpad))
+    if q_scale is None:
+        q_scale = jnp.ones((s, qmax), jnp.float32)
+    scale_p = jnp.pad(q_scale.astype(jnp.float32), ((0, 0), (0, qpad)),
+                      constant_values=1.0)
     # ring-aware validity: n_queries is the monotone total, so a wrapped
     # ring (n_queries >= Qmax) keeps every slot live
     valid = jnp.arange(qmax + qpad)[None, :] < n_queries[:, None]   # (S, Qp)
@@ -76,6 +91,7 @@ def cache_probe_batched(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
         jnp.pad(radius, ((0, 0), (0, qpad)), constant_values=-jnp.inf),
         -jnp.inf)
     r_hat = probe_rhat_batched(q_emb_p, psi_p, radius_m[..., None],
+                               scale_p[..., None],
                                interpret=interpret)[..., 0]         # (S, Qp)
     r_hat = jnp.where(valid, r_hat, -jnp.inf)
     best = jnp.argmax(r_hat, axis=1)

@@ -20,7 +20,10 @@ interpret, never silently to ref.
 
 The ``REPRO_KERNEL_BACKEND`` environment variable pins the default for a
 whole process (e.g. ``REPRO_KERNEL_BACKEND=interpret`` to smoke the kernel
-path in a CPU CI job without touching call sites).
+path in a CPU CI job without touching call sites).  Its sibling policy,
+``REPRO_CORPUS_DTYPE`` (``repro.core.quant``), picks the corpus/cache
+storage format the scan contract streams; CI runs the kernel gate across
+the full backend x dtype matrix.
 """
 
 from __future__ import annotations

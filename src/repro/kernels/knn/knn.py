@@ -28,7 +28,11 @@ Two merge strategies:
 Arithmetic intensity of the scan is ~2*B flops per corpus byte, so for
 serving batches (B <= 256 at fp32) the kernel is HBM-bandwidth bound; the
 design goal is to stream at full bandwidth, which the single-pass structure
-achieves.
+achieves.  Quantized corpora (``repro.core.quant``: bf16 payloads, or int8
+payloads with an fp32 per-document scale) stream 2x / 4x more documents per
+HBM byte: tiles are dequantized *in VMEM* — payload cast to f32, scores
+accumulated in f32, the per-document scale applied score-side — so the
+only thing that shrinks is the HBM traffic.
 """
 
 from __future__ import annotations
@@ -43,16 +47,25 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = float("-inf")
 
 
-def _masked_scores(q, docs, ids):
-    """(B, TILE_N) MXU scores with sentinel rows (id < 0) masked to -inf."""
+def _masked_scores(q, docs, ids, scale):
+    """(B, TILE_N) scores with sentinel rows (id < 0) masked to -inf.
+
+    ``docs`` may be fp32 / bf16 / int8: the payload is cast to f32 before
+    the dot (dequantization happens here, in VMEM) and ``scale`` — the
+    (1, TILE_N) per-document f32 score multiplier, all-ones for
+    unquantized corpora — is applied to the scores, matching the shared
+    ``quant.scale_scores`` rule of the ref tier bit for bit.
+    """
     scores = jax.lax.dot_general(
-        q, docs, (((1,), (1,)), ((), ())),
+        q.astype(jnp.float32), docs.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)            # (B, TILE_N)
+    scores = scores * scale
     return jnp.where(ids < 0, NEG_INF, scores)
 
 
-def _fused_kernel(q_ref, docs_ref, ids_ref, out_vals_ref, out_idx_ref,
-                  carry_v, carry_i, *, k: int):
+def _fused_kernel(q_ref, docs_ref, ids_ref, scale_ref, out_vals_ref,
+                  out_idx_ref, carry_v, carry_i, *, k: int):
     """One grid step: merge one corpus tile into the VMEM top-k carry."""
     tile = pl.program_id(0)
 
@@ -62,10 +75,10 @@ def _fused_kernel(q_ref, docs_ref, ids_ref, out_vals_ref, out_idx_ref,
         carry_i[...] = jnp.full(carry_i.shape, -1, jnp.int32)
 
     q = q_ref[...]                                     # (B, D)
-    docs = docs_ref[...]                               # (TILE_N, D)
+    docs = docs_ref[...]                               # (TILE_N, D) any dtype
     ids = ids_ref[...]                                 # (1, TILE_N) int32
-    scores = _masked_scores(q, docs, ids)              # (B, TILE_N)
-    b = scores.shape[0]
+    scale = scale_ref[...]                             # (1, TILE_N) f32
+    scores = _masked_scores(q, docs, ids, scale)       # (B, TILE_N)
 
     # candidate pool = running carry ++ this tile; carry columns come first,
     # so equal scores resolve to the earliest corpus position — the same
@@ -96,18 +109,24 @@ def _fused_kernel(q_ref, docs_ref, ids_ref, out_vals_ref, out_idx_ref,
 
 @functools.partial(jax.jit, static_argnames=("k", "tile_n", "interpret"))
 def knn_fused_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
-                   k: int, tile_n: int = 1024, interpret: bool = False):
+                   k: int, tile_n: int = 1024, interpret: bool = False,
+                   scale: jax.Array | None = None):
     """Single-launch exact top-k with the cross-tile merge on chip.
 
-    docs: (N, D) padded to a tile_n multiple and lane-aligned D; doc_ids:
-    (N,) int32 with -1 on padded/sentinel rows; queries: (B, D).  Returns
-    (scores (B, k) f32 descending, ids (B, k) int32, -1 at -inf positions).
+    docs: (N, D) payload (fp32 / bf16 / int8) padded to a tile_n multiple
+    and lane-aligned D; doc_ids: (N,) int32 with -1 on padded/sentinel
+    rows; queries: (B, D); scale: (N,) f32 per-document score multipliers
+    (None for an unquantized corpus).  Returns (scores (B, k) f32
+    descending, ids (B, k) int32, -1 at -inf positions).
     """
     n, d = docs.shape
     b = queries.shape[0]
     assert n % tile_n == 0
     tiles = n // tile_n
     ids_2d = doc_ids.reshape(tiles, tile_n)
+    if scale is None:
+        scale = jnp.ones((n,), jnp.float32)
+    scale_2d = scale.astype(jnp.float32).reshape(tiles, tile_n)
     kernel = functools.partial(_fused_kernel, k=k)
     return pl.pallas_call(
         kernel,
@@ -116,6 +135,7 @@ def knn_fused_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
             pl.BlockSpec((b, d), lambda i: (0, 0)),        # queries: resident
             pl.BlockSpec((tile_n, d), lambda i: (i, 0)),   # corpus tile stream
             pl.BlockSpec((1, tile_n), lambda i: (i, 0)),   # tile ids
+            pl.BlockSpec((1, tile_n), lambda i: (i, 0)),   # tile doc scales
         ],
         out_specs=[
             pl.BlockSpec((b, k), lambda i: (0, 0)),
@@ -130,19 +150,20 @@ def knn_fused_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
             pltpu.VMEM((b, k), jnp.int32),                 # running top-k ids
         ],
         interpret=interpret,
-    )(queries, docs, ids_2d)
+    )(queries, docs, ids_2d, scale_2d)
 
 
-def _knn_kernel(q_ref, docs_ref, ids_ref, out_vals_ref, out_idx_ref, *,
-                k: int, tile_n: int):
+def _knn_kernel(q_ref, docs_ref, ids_ref, scale_ref, out_vals_ref,
+                out_idx_ref, *, k: int, tile_n: int):
     """One grid step: score one corpus tile against all queries; emit top-k."""
     tile = pl.program_id(0)
     q = q_ref[...]                      # (B, D)
-    docs = docs_ref[...]                # (TILE_N, D)
+    docs = docs_ref[...]                # (TILE_N, D) any dtype
     ids = ids_ref[...]                  # (1, TILE_N) int32
+    scale = scale_ref[...]              # (1, TILE_N) f32
     # same data-driven validity as the fused kernel: sentinel rows (id < 0)
     # can never win a per-tile extraction, wherever they sit in the corpus
-    scores = _masked_scores(q, docs, ids)             # (B, TILE_N)
+    scores = _masked_scores(q, docs, ids, scale)      # (B, TILE_N)
     base = tile * tile_n
 
     def body(j, s):
@@ -159,19 +180,24 @@ def _knn_kernel(q_ref, docs_ref, ids_ref, out_vals_ref, out_idx_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("k", "tile_n", "interpret"))
 def knn_tile_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
-                  k: int, tile_n: int = 1024, interpret: bool = False):
-    """Per-tile top-k candidates (two-stage scheme). docs: (N, D) padded to a
-    tile_n multiple and lane-aligned D; doc_ids: (N,) int32 with -1 on
-    sentinel/padded rows (masked to -inf, same contract as the fused
-    kernel); queries: (B, D). Returns (tiles, B, k) vals + idx; idx are
-    *positions* in the padded corpus (a fully-masked extraction can emit
-    any position at a -inf value — the wrapper must sentinel those on
-    merge)."""
+                  k: int, tile_n: int = 1024, interpret: bool = False,
+                  scale: jax.Array | None = None):
+    """Per-tile top-k candidates (two-stage scheme). docs: (N, D) payload
+    (fp32 / bf16 / int8) padded to a tile_n multiple and lane-aligned D;
+    doc_ids: (N,) int32 with -1 on sentinel/padded rows (masked to -inf,
+    same contract as the fused kernel); queries: (B, D); scale: (N,) f32
+    per-document score multipliers or None. Returns (tiles, B, k) vals +
+    idx; idx are *positions* in the padded corpus (a fully-masked
+    extraction can emit any position at a -inf value — the wrapper must
+    sentinel those on merge)."""
     n, d = docs.shape
     b = queries.shape[0]
     assert n % tile_n == 0 and k <= tile_n
     tiles = n // tile_n
     ids_2d = doc_ids.reshape(tiles, tile_n)
+    if scale is None:
+        scale = jnp.ones((n,), jnp.float32)
+    scale_2d = scale.astype(jnp.float32).reshape(tiles, tile_n)
     kernel = functools.partial(_knn_kernel, k=k, tile_n=tile_n)
     return pl.pallas_call(
         kernel,
@@ -180,6 +206,7 @@ def knn_tile_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
             pl.BlockSpec((b, d), lambda i: (0, 0)),        # queries: resident
             pl.BlockSpec((tile_n, d), lambda i: (i, 0)),   # corpus tile stream
             pl.BlockSpec((1, tile_n), lambda i: (i, 0)),   # tile ids
+            pl.BlockSpec((1, tile_n), lambda i: (i, 0)),   # tile doc scales
         ],
         out_specs=[
             pl.BlockSpec((1, b, k), lambda i: (i, 0, 0)),
@@ -190,4 +217,4 @@ def knn_tile_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
             jax.ShapeDtypeStruct((tiles, b, k), jnp.int32),
         ],
         interpret=interpret,
-    )(queries, docs, ids_2d)
+    )(queries, docs, ids_2d, scale_2d)

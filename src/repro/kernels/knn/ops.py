@@ -1,11 +1,15 @@
 """jit'd public wrapper for the fused kNN Pallas kernels.
 
 Handles backend dispatch (``repro.kernels.dispatch`` tiers: ref / interpret
-/ compiled), padding (corpus rows to the tile multiple with sentinel id -1,
-feature dim to the lane multiple, batch to the sublane multiple — all
-score-preserving), the ``tile_n``/``k_eff`` autotuner, and sentinel-id
-hygiene: any -inf candidate (k > n_valid, fully-masked tiles) reports id -1
-— never a padded-row position clipped onto a real document.
+/ compiled), quantized corpora (``repro.core.quant``: bf16 / int8 payloads
+with an optional per-document f32 ``scale`` applied score-side, identically
+in every tier), padding (corpus rows to the tile multiple with sentinel id
+-1, feature dim to the lane multiple, batch to the sublane multiple — all
+score-preserving), the width-aware ``tile_n``/``k_eff`` autotuner (the VMEM
+budget is element-size dependent: an int8 tile holds 4x the documents of an
+fp32 tile), and sentinel-id hygiene: any -inf candidate (k > n_valid,
+fully-masked tiles) reports id -1 — never a padded-row position clipped
+onto a real document.
 """
 
 from __future__ import annotations
@@ -32,14 +36,18 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
 
 
 @functools.lru_cache(maxsize=None)
-def autotune_knn(n: int, d: int, b: int, k: int) -> tuple[int, int]:
+def autotune_knn(n: int, d: int, b: int, k: int,
+                 itemsize: int = 4) -> tuple[int, int]:
     """Pick (tile_n, k_eff) for a corpus of shape (n, d) and batch (b, k).
 
     tile_n: largest power of two (<= 4096, >= the sublane multiple, no
     larger than the padded corpus) whose VMEM working set — the streamed
-    tile, resident queries, and the merge candidate pool — fits a ~6 MB
-    budget (half of VMEM, leaving room for double buffering).  k_eff is the
-    per-tile candidate count of the two-stage scheme (min(k, tile_n)).
+    tile at ``itemsize`` bytes/element (4 fp32, 2 bf16, 1 int8), resident
+    f32 queries, and the f32 merge candidate pool — fits a ~6 MB budget
+    (half of VMEM, leaving room for double buffering).  Narrower corpus
+    elements buy bigger tiles: the streamed-tile term dominates at serving
+    shapes, so tile_n roughly doubles at bf16 and again at int8.  k_eff is
+    the per-tile candidate count of the two-stage scheme (min(k, tile_n)).
     """
     dp = d + (-d) % LANE
     bp = b + (-b) % SUBLANE
@@ -48,16 +56,22 @@ def autotune_knn(n: int, d: int, b: int, k: int) -> tuple[int, int]:
     budget = 6 * 2 ** 20
 
     def working_set(t: int) -> int:
-        return 4 * (t * dp + bp * dp + 3 * bp * (k + t))
+        return itemsize * t * dp + 4 * (bp * dp + 3 * bp * (k + t))
 
     while tile > SUBLANE and working_set(tile) > budget:
         tile //= 2
     return tile, min(k, tile)
 
 
-def _ref_search(docs, doc_ids, queries, k):
-    """Oracle tier: one masked (B, N) score matrix + stable top-k."""
+def _ref_search(docs, doc_ids, queries, k, scale=None):
+    """Oracle tier: one masked (B, N) score matrix + stable top-k.
+
+    Shares the scan contract's dequantization rule: payload cast to f32,
+    f32 dot, per-document ``scale`` applied to the *scores*.
+    """
     scores = queries.astype(jnp.float32) @ docs.astype(jnp.float32).T
+    if scale is not None:
+        scores = scores * scale.astype(jnp.float32)[None, :]
     scores = jnp.where(doc_ids[None, :] < 0, NEG_INF, scores)
     ids = doc_ids
     if k > scores.shape[1]:
@@ -73,29 +87,34 @@ def _ref_search(docs, doc_ids, queries, k):
     "k", "tile_n", "interpret", "backend", "two_stage"))
 def knn_search(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
                tile_n: int | None = None, interpret: bool | None = None,
-               backend: str | None = None, two_stage: bool = False):
+               backend: str | None = None, two_stage: bool = False,
+               scale: jax.Array | None = None):
     """Top-k MIPS over the corpus. Returns (scores (B, k), ids (B, k)).
 
-    docs: (N, D) unit-norm transformed embeddings; doc_ids: (N,) int32 with
-    -1 marking sentinel/padded rows (use arange for positional); queries:
-    (B, D).  Sentinel rows never win top-k; -inf result positions carry id
-    -1.  ``backend``: a ``repro.kernels.dispatch`` tier (default: compiled
-    on TPU, interpret elsewhere — an explicit kernel call never silently
-    degrades to the jnp path; pass backend="ref" for the oracle).
+    docs: (N, D) transformed embeddings — fp32, or a quantized payload
+    (bf16 / int8 from ``repro.core.quant.quantize``) with ``scale`` its
+    (N,) f32 per-document score multiplier; doc_ids: (N,) int32 with -1
+    marking sentinel/padded rows (use arange for positional); queries:
+    (B, D) f32.  Sentinel rows never win top-k; -inf result positions
+    carry id -1.  ``backend``: a ``repro.kernels.dispatch`` tier (default:
+    compiled on TPU, interpret elsewhere — an explicit kernel call never
+    silently degrades to the jnp path; pass backend="ref" for the oracle).
     ``interpret`` is the legacy spelling of backend="interpret".
     ``two_stage`` opts out of the on-chip cross-tile merge (A/B baseline);
-    both merge paths share the id-driven validity masking.
+    both merge paths share the id-driven validity masking and the
+    score-side scale rule.
     """
     if backend is None and interpret is not None:
         backend = "interpret" if interpret else "compiled"
     be = dispatch.resolve(backend, kernel=True)
     if be == "ref":
-        return _ref_search(docs, doc_ids, queries, k)
+        return _ref_search(docs, doc_ids, queries, k, scale=scale)
 
     n, d = docs.shape
     b = queries.shape[0]
+    itemsize = jnp.dtype(docs.dtype).itemsize
     if tile_n is None:
-        tile_n, k_eff = autotune_knn(n, d, b, k)
+        tile_n, k_eff = autotune_knn(n, d, b, k, itemsize)
     else:
         tile_n = min(tile_n, max(SUBLANE, 1 << max(n - 1, 1).bit_length()))
         k_eff = min(k, tile_n)
@@ -103,15 +122,17 @@ def knn_search(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
     docs_p = _pad_to(_pad_to(docs, 1, LANE), 0, tile_n)
     ids_p = _pad_to(doc_ids.astype(jnp.int32), 0, tile_n, value=-1)
     q_p = _pad_to(_pad_to(queries, 1, LANE), 0, SUBLANE)
+    scale_p = (None if scale is None else
+               _pad_to(scale.astype(jnp.float32), 0, tile_n, value=1.0))
     interp = dispatch.interpret_flag(be)
 
     if not two_stage:
         vals, idx = knn_fused_topk(docs_p, ids_p, q_p, k, tile_n=tile_n,
-                                   interpret=interp)
+                                   interpret=interp, scale=scale_p)
         return vals[:b], idx[:b]
 
     vals, idx = knn_tile_topk(docs_p, ids_p, q_p, k_eff, tile_n=tile_n,
-                              interpret=interp)
+                              interpret=interp, scale=scale_p)
     tiles = vals.shape[0]
     assert tiles * k_eff >= k, (
         f"two-stage candidate pool {tiles}x{k_eff} < k={k}; "

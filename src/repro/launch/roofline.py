@@ -13,7 +13,6 @@ for reduce-scatter the scattered output understates by ~(n-1)/n — noted).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Optional
 
@@ -56,7 +55,6 @@ def _shape_bytes(shape_str: str) -> int:
 def collective_bytes(hlo_text: str) -> dict:
     """Per-collective-kind byte totals (per device) from optimized HLO."""
     out = {k: 0 for k in _COLLECTIVES}
-    seen_start = set()
     for m in _OP_RE.finditer(hlo_text):
         shape_str, kind = m.group(1), m.group(2)
         line = m.group(0)

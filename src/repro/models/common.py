@@ -9,7 +9,6 @@ in behind the same signature).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quant
 from repro.core.cache import CacheConfig, MetricCache
 from repro.core.embedding import distance_from_scores, transform_queries
 from repro.serve.router import ShardedRouter
@@ -76,13 +77,18 @@ class ConversationalEngine:
     def __init__(self, router: ShardedRouter, doc_embeddings: np.ndarray,
                  *, dim: int, k: int = 10, k_c: int = 1000,
                  epsilon: float = 0.04, capacity: Optional[int] = None,
-                 encoder: Optional[Callable] = None):
+                 encoder: Optional[Callable] = None,
+                 dtype: Optional[str] = None):
         self.router = router
         self.doc_embeddings = doc_embeddings   # transformed, host-side lookup
         self.k, self.k_c, self.epsilon = k, k_c, epsilon
         self.encoder = encoder
+        # dtype: the cache's embedding storage format (quant.DTYPES; None
+        # follows the REPRO_CORPUS_DTYPE policy) — client memory shrinks
+        # 2x / 4x at bf16 / int8 (paper RQ1.C)
         self.cache = MetricCache(CacheConfig(
-            capacity=capacity or 16 * k_c, dim=dim, epsilon=epsilon))
+            capacity=capacity or 16 * k_c, dim=dim, epsilon=epsilon,
+            store_dtype=quant.resolve_dtype(dtype)))
         self.turns: list[EngineTurn] = []
 
     def start_session(self):

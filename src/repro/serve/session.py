@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quant
 from repro.core.cache import (BatchedMetricCache, CacheConfig, insert_batched,
                               probe_batched, query_batched)
 from repro.core.embedding import distance_from_scores
@@ -50,14 +51,20 @@ class BatchedEngine:
     def __init__(self, router: ShardedRouter, doc_embeddings: np.ndarray,
                  *, dim: int, n_sessions: int, k: int = 10, k_c: int = 1000,
                  epsilon: float = 0.04, capacity: Optional[int] = None,
-                 encoder: Optional[Callable] = None):
+                 encoder: Optional[Callable] = None,
+                 dtype: Optional[str] = None):
         self.router = router
         self.doc_embeddings = doc_embeddings
         self.n_sessions = n_sessions
         self.k, self.k_c, self.epsilon = k, k_c, epsilon
         self.encoder = encoder
+        # dtype: stacked-cache storage format (quant.DTYPES; None follows
+        # the REPRO_CORPUS_DTYPE policy).  S sessions' caches share one
+        # device allocation, so a bf16 / int8 store cuts the resident
+        # serving state 2x / 4x.
         self.cache = BatchedMetricCache(CacheConfig(
-            capacity=capacity or 16 * k_c, dim=dim, epsilon=epsilon),
+            capacity=capacity or 16 * k_c, dim=dim, epsilon=epsilon,
+            store_dtype=quant.resolve_dtype(dtype)),
             n_sessions)
         self.turns: list[list[EngineTurn]] = [[] for _ in range(n_sessions)]
 

@@ -8,7 +8,7 @@ accumulator; remat policy comes from the model config.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ from repro.models import recsys as rs
 from repro.models import transformer as tf
 from repro.train.optimizer import adamw, adafactor
 from repro.train.step import make_lm_train_step, make_train_step
-from repro.models import common as cm
 
 jax.config.update("jax_platform_name", "cpu")
 

@@ -130,4 +130,4 @@ def test_gather_scatter_roundtrip_leaves_others_alone():
     for name, a, b in zip(C.CacheState._fields, before, after):
         np.testing.assert_array_equal(a[1], b[1], err_msg=name)
         np.testing.assert_array_equal(a[3], b[3], err_msg=name)
-    assert after[-1][0] == before[-1][0] + 1       # step leaf
+    assert after.step[0] == before.step[0] + 1     # step leaf

@@ -6,9 +6,9 @@ import numpy as np
 import pytest
 
 from repro.core import embedding as emb
-from repro.core.cache import CacheConfig, MetricCache, init_cache, insert, probe, query
+from repro.core.cache import CacheConfig, MetricCache, init_cache, probe
 from repro.core.conversation import ConversationalSearcher
-from repro.core.metric_index import MetricIndex, chunked_nn, exact_nn
+from repro.core.metric_index import MetricIndex, exact_nn
 
 jax.config.update("jax_platform_name", "cpu")
 

@@ -14,12 +14,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import quant
 from repro.core.cache import (CacheConfig, MetricCache, init_batched_cache,
                               probe_batched)
 from repro.core.metric_index import MetricIndex, exact_nn, scan_topk
 from repro.kernels.knn.ops import autotune_knn, knn_search
 
 jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.kernels  # fast CI kernel gate: pytest -m kernels
 
 
 def _unit(rng, shape):
@@ -220,3 +223,180 @@ def test_knn_sentinel_rows_never_win_over_negative_scores(two_stage):
     assert np.isfinite(s).all()
     _assert_same((s, i), knn_search(jnp.asarray(docs), jnp.asarray(ids),
                                     jnp.asarray(q), 8, backend="ref"))
+
+
+# ---------------------------------------------- quantized corpus (ISSUE 4)
+# Rank-equality contract of the quantized scan:
+#   * at a FIXED dtype, every tier (ref / interpret) returns identical ids —
+#     the tiers share one dequantization rule (payload -> f32, score-side
+#     scale), so quantization error cancels across tiers;
+#   * vs the fp32 corpus, rank equality is tolerance-bound: top-k *score*
+#     agreement within the dtype's quantization error (bf16 ~4e-3, int8
+#     ~2e-2 on unit vectors) and set-overlap floors enforced in
+#     benchmarks/kernel_bench.py (RANK_OVERLAP_FLOOR: bf16 0.95, int8 0.90).
+SCORE_TOL = {"fp32": 0.0, "bf16": 6e-3, "int8": 2e-2}
+
+
+@pytest.mark.parametrize("dt", quant.DTYPES)
+def test_quantized_tiers_agree_on_near_tied_scores(dt):
+    """Adversarial near-ties: clusters of almost-identical documents whose
+    fp32 scores differ by less than the quantization step.  Order within a
+    cluster may legally differ vs fp32 — but the tiers must agree with
+    EACH OTHER exactly, and the top-k score multiset must match fp32 to the
+    dtype tolerance."""
+    rng = np.random.default_rng(21)
+    base = _unit(rng, (8, 64))
+    # 8 clusters x 8 members, members perturbed by ~1e-4 (below int8 step)
+    docs = np.repeat(base, 8, axis=0) + 1e-4 * _unit(rng, (64, 64))
+    docs = docs / np.linalg.norm(docs, axis=1, keepdims=True)
+    ids = jnp.arange(64, dtype=jnp.int32)
+    q = jnp.asarray(_unit(rng, (3, 64)))
+    qc = quant.quantize(jnp.asarray(docs), dt)
+
+    ref = knn_search(qc.data, ids, q, 16, backend="ref", scale=qc.scale)
+    ker = knn_search(qc.data, ids, q, 16, backend="interpret", scale=qc.scale)
+    _assert_same(ker, ref)
+    fp = knn_search(jnp.asarray(docs), ids, q, 16, backend="ref")
+    np.testing.assert_allclose(np.asarray(ref[0]), np.asarray(fp[0]),
+                               atol=SCORE_TOL[dt] + 1e-6, rtol=0)
+
+
+@pytest.mark.parametrize("dt", ["bf16", "int8"])
+def test_quantized_sentinel_rows_never_win(dt):
+    """Interior sentinel-padded rows (id -1, zero payload) among real docs
+    with negative scores: the id-driven masking must hold at every dtype —
+    a zero int8 payload scores 0.0, which would outrank the real docs."""
+    rng = np.random.default_rng(22)
+    q = _unit(rng, (2, 16))
+    real = _unit(rng, (8, 16))
+    real[:4] = -_unit(rng, (2, 16)).mean(0)
+    real = real / np.linalg.norm(real, axis=1, keepdims=True)
+    docs = np.concatenate([real[:4], np.zeros((8, 16), np.float32), real[4:]])
+    ids = np.concatenate(
+        [np.arange(4), np.full(8, -1), np.arange(4, 8)]).astype(np.int32)
+    qc = quant.quantize(jnp.asarray(docs), dt)
+    for backend in ("ref", "interpret"):
+        s, i = knn_search(qc.data, jnp.asarray(ids), jnp.asarray(q), 8,
+                          tile_n=8, backend=backend, scale=qc.scale)
+        s, i = np.asarray(s), np.asarray(i)
+        assert (i >= 0).all(), f"{dt}/{backend}: sentinel leaked: {i}"
+        assert np.isfinite(s).all()
+
+
+@pytest.mark.parametrize("dt", ["bf16", "int8"])
+@pytest.mark.parametrize("n,k", [(5, 12), (1, 3)])
+def test_quantized_k_exceeds_n_valid_emits_sentinels(dt, n, k):
+    """k > n_valid at quantized dtypes: -inf positions must carry id -1 in
+    both tiers (the sentinel-id hygiene of the fp32 path, unchanged)."""
+    docs, ids, q = _corpus(23 + n, n, 33, 2)
+    qc = quant.quantize(docs, dt)
+    for backend in ("ref", "interpret"):
+        s, i = knn_search(qc.data, ids, q, k, backend=backend,
+                          scale=qc.scale)
+        s, i = np.asarray(s), np.asarray(i)
+        assert np.isneginf(s[:, n:]).all(), f"{dt}/{backend}"
+        np.testing.assert_array_equal(i[:, n:], -1)
+        assert (i[:, :n] >= 0).all()
+
+
+@pytest.mark.parametrize("dt", quant.DTYPES)
+def test_quantized_scan_topk_tiers_agree_on_shard_slice(dt):
+    """The scan contract on a sentinel-padded shard-style slice, per dtype:
+    ref (chunked streaming dequant) vs interpret (VMEM tile dequant)."""
+    rng = np.random.default_rng(24)
+    real, pad = 96, 32
+    docs = np.concatenate(
+        [_unit(rng, (real, 24)), np.zeros((pad, 24), np.float32)])
+    ids = np.concatenate([np.arange(real), np.full(pad, -1)]).astype(np.int32)
+    q = jnp.asarray(_unit(rng, (4, 24)))
+    qc = quant.quantize(jnp.asarray(docs), dt)
+    ref = scan_topk(qc.data, jnp.asarray(ids), q, 10, chunk=32,
+                    backend="ref", scale=qc.scale)
+    ker = scan_topk(qc.data, jnp.asarray(ids), q, 10, chunk=32,
+                    backend="interpret", scale=qc.scale)
+    _assert_same(ker, ref)
+    assert (np.asarray(ker[1]) >= 0).all()
+
+
+@pytest.mark.parametrize("dt", ["bf16", "int8"])
+def test_quantized_ring_wrapped_cache_probe_matches_ref(dt):
+    """A quantized-storage cache driven past max_queries (ring wrap): the
+    kernel probe must agree with the jnp ref probe on the SAME quantized
+    records — storage error is shared, tier disagreement is a bug."""
+    from repro.kernels.cache_probe.ops import cache_probe
+    rng = np.random.default_rng(25)
+    cfg = CacheConfig(capacity=256, dim=17, max_queries=4, store_dtype=dt)
+    cache = MetricCache(cfg)
+    for _ in range(7):                      # 7 inserts > max_queries=4
+        psi = jnp.asarray(_unit(rng, (17,)))
+        emb = jnp.asarray(_unit(rng, (3, 17)))
+        ids = jnp.asarray(rng.integers(0, 100, 3), jnp.int32)
+        cache.insert(psi, rng.uniform(0.3, 1.0), emb, ids)
+    assert cache.total_queries == 7 and cache.n_queries == 4
+    psi = jnp.asarray(_unit(rng, (17,)))
+    ref = cache.probe(psi, use_kernel=False)
+    st = cache.state
+    hit, r_hat, idx = cache_probe(st.q_emb, psi, st.q_radius, st.n_queries,
+                                  cfg.epsilon, q_scale=st.q_scale,
+                                  interpret=True)
+    assert bool(hit) == bool(ref.hit)
+    assert int(idx) == int(ref.nearest_q)
+    np.testing.assert_allclose(float(r_hat), float(ref.r_hat),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dt", ["bf16", "int8"])
+def test_quantized_batched_probe_kernel_matches_vmap_ref(dt):
+    """Ring-wrapped quantized record storage through the BATCHED probe:
+    one fused launch over the stacked state vs vmap(probe), per dtype."""
+    s, qmax, d = 6, 8, 64
+    rng = np.random.default_rng(26)
+    cfg = CacheConfig(capacity=8, dim=d, max_queries=qmax, store_dtype=dt)
+    state = init_batched_cache(cfg, s)
+    rec = quant.quantize(jnp.asarray(_unit(rng, (s, qmax, d))), dt)
+    state = state._replace(
+        q_emb=rec.data,
+        q_scale=(state.q_scale if rec.scale is None else rec.scale),
+        q_radius=jnp.asarray(
+            rng.uniform(0.2, 1.2, (s, qmax)).astype(np.float32)),
+        n_queries=jnp.asarray([0, 1, qmax // 2, qmax, qmax + 3, 5 * qmax],
+                              jnp.int32))
+    psi = jnp.asarray(_unit(rng, (s, d)))
+    ref = probe_batched(state, psi, 0.04, backend="ref")
+    ker = probe_batched(state, psi, 0.04, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(ref.hit), np.asarray(ker.hit))
+    np.testing.assert_array_equal(np.asarray(ref.nearest_q),
+                                  np.asarray(ker.nearest_q))
+    live = np.asarray(state.n_queries) > 0
+    np.testing.assert_allclose(np.asarray(ref.r_hat)[live],
+                               np.asarray(ker.r_hat)[live],
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dt", ["bf16", "int8"])
+def test_quantized_sharded_nn_matches_single_device(dt):
+    """The quantized scan composes with shard_map: per-shard scales ride
+    the corpus row sharding and the merged top-k equals the single-device
+    quantized answer."""
+    from repro.dist.retrieval import sharded_nn
+    rng = np.random.default_rng(27)
+    docs = jnp.asarray(_unit(rng, (1000, 32)))
+    ids = jnp.arange(1000, dtype=jnp.int32)
+    q = jnp.asarray(_unit(rng, (3, 32)))
+    qc = quant.quantize(docs, dt)
+    single = knn_search(qc.data, ids, q, 25, backend="ref", scale=qc.scale)
+    res = sharded_nn(qc.data, ids, q, 25, chunk=64, backend="interpret",
+                     scale=qc.scale)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(single[1]))
+    np.testing.assert_allclose(np.asarray(res.scores),
+                               np.asarray(single[0]), rtol=1e-5, atol=1e-5)
+
+
+def test_autotune_widens_tiles_for_narrow_dtypes():
+    """The VMEM budget is element-width aware: at serving shapes the tile
+    roughly doubles fp32 -> bf16 and again bf16 -> int8."""
+    t32, _ = autotune_knn(1 << 20, 768, 16, 100, 4)
+    t16, _ = autotune_knn(1 << 20, 768, 16, 100, 2)
+    t8, _ = autotune_knn(1 << 20, 768, 16, 100, 1)
+    assert t32 < t16 <= t8
+    assert t16 >= 2 * t32

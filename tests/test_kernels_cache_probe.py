@@ -10,6 +10,8 @@ from repro.kernels.cache_probe.ref import probe_ref
 
 jax.config.update("jax_platform_name", "cpu")
 
+pytestmark = pytest.mark.kernels  # fast CI kernel gate: pytest -m kernels
+
 
 def _case(seed, qmax, d, n):
     rng = np.random.default_rng(seed)
@@ -48,7 +50,7 @@ def test_probe_agrees_with_core_cache():
         qq = idx.transform_queries(jnp.asarray(
             rng.standard_normal(64), jnp.float32))
         res = idx.search(qq[None], 50)
-        cache.insert(qq, res.distances[0, -1], idx.doc_emb[res.ids[0]],
+        cache.insert(qq, res.distances[0, -1], idx.dequantized()[res.ids[0]],
                      res.ids[0])
     psi = idx.transform_queries(jnp.asarray(rng.standard_normal(64),
                                             jnp.float32))

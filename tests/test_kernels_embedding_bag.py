@@ -10,6 +10,8 @@ from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
 jax.config.update("jax_platform_name", "cpu")
 
+pytestmark = pytest.mark.kernels  # fast CI kernel gate: pytest -m kernels
+
 
 def _rand_case(seed, v, d, b, l, pad_frac=0.2, dtype=np.float32):
     rng = np.random.default_rng(seed)

@@ -15,6 +15,8 @@ from repro.kernels.knn.ref import knn_ref
 
 jax.config.update("jax_platform_name", "cpu")
 
+pytestmark = pytest.mark.kernels  # fast CI kernel gate: pytest -m kernels
+
 
 def _check(docs, queries, k, tile_n=256):
     ids = jnp.arange(docs.shape[0], dtype=jnp.int32)

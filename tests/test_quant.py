@@ -1,0 +1,152 @@
+"""Quantized corpus storage (repro.core.quant): round-trip properties and
+the storage-dtype policy plumbing through cache / index / engines."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.cache import CacheConfig, MetricCache
+from repro.core.metric_index import MetricIndex
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.kernels  # fast CI kernel gate: pytest -m kernels
+
+
+def _unit(rng, shape):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def test_int8_roundtrip_preserves_unit_norm_exactly():
+    """The int8 scale is renormalized so dequantized rows keep the original
+    norm to f32 rounding — the invariant the Eq. 1 metric machinery needs."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(_unit(rng, (257, 65)))
+    qc = quant.quantize(x, "int8")
+    assert qc.data.dtype == jnp.int8 and qc.scale.shape == (257,)
+    norms = np.linalg.norm(np.asarray(quant.dequantize(qc)), axis=1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-5)
+    # cosine error of the payload direction stays small
+    cos = np.sum(np.asarray(quant.dequantize(qc)) * np.asarray(x), axis=1)
+    assert cos.min() > 0.9999
+
+
+def test_bf16_roundtrip_and_fp32_identity():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(_unit(rng, (64, 33)))
+    qb = quant.quantize(x, "bf16")
+    assert qb.data.dtype == jnp.bfloat16 and qb.scale is None
+    np.testing.assert_allclose(np.asarray(quant.dequantize(qb)),
+                               np.asarray(x), atol=4e-3)
+    qf = quant.quantize(x, "fp32")
+    assert qf.scale is None
+    np.testing.assert_array_equal(np.asarray(qf.data), np.asarray(x))
+
+
+def test_zero_rows_quantize_to_neutral_sentinels():
+    """All-zero (sentinel-pad) rows must round-trip to zero with scale 1 —
+    no NaN/inf from the norm renormalization."""
+    x = jnp.zeros((4, 16), jnp.float32)
+    qc = quant.quantize(x, "int8")
+    np.testing.assert_array_equal(np.asarray(qc.data), 0)
+    np.testing.assert_array_equal(np.asarray(qc.scale), 1.0)
+    assert np.isfinite(np.asarray(quant.dequantize(qc))).all()
+
+
+def test_dtype_policy_env_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_CORPUS_DTYPE", raising=False)
+    assert quant.default_dtype() == "fp32"
+    assert quant.resolve_dtype(None) == "fp32"
+    monkeypatch.setenv("REPRO_CORPUS_DTYPE", "int8")
+    assert quant.default_dtype() == "int8"
+    assert quant.resolve_dtype(None) == "int8"
+    assert quant.resolve_dtype("bf16") == "bf16"  # explicit beats env
+    monkeypatch.setenv("REPRO_CORPUS_DTYPE", "fp64")
+    with pytest.raises(ValueError):
+        quant.default_dtype()
+    with pytest.raises(ValueError):
+        quant.resolve_dtype("float32")
+
+
+def test_metric_index_storage_follows_dtype():
+    rng = np.random.default_rng(2)
+    raw = jnp.asarray(rng.standard_normal((100, 24)).astype(np.float32))
+    idx8 = MetricIndex(raw, dtype="int8", use_kernel=False)
+    assert idx8.doc_emb.dtype == jnp.int8 and idx8.doc_scale is not None
+    idx32 = MetricIndex(raw, dtype="fp32", use_kernel=False)
+    assert idx32.doc_emb.dtype == jnp.float32 and idx32.doc_scale is None
+    # dequantized() hands back f32 for host-side lookups at any dtype
+    assert idx8.dequantized().dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(idx8.dequantized()),
+                               np.asarray(idx32.dequantized()), atol=2e-2)
+
+
+@pytest.mark.parametrize("dt,factor", [("bf16", 2), ("int8", 4)])
+def test_cache_memory_shrinks_with_store_dtype(dt, factor):
+    base = MetricCache(CacheConfig(capacity=1024, dim=256, max_queries=16))
+    small = MetricCache(CacheConfig(capacity=1024, dim=256, max_queries=16,
+                                    store_dtype=dt))
+    # embeddings dominate at this shape; allow slack for ids/stamps/scales
+    assert base.memory_bytes() > 0.8 * factor * small.memory_bytes()
+
+
+def test_fp32_store_dtype_is_bit_identical_to_seed_layout():
+    """store_dtype='fp32' must be a true no-op: same probe/query results
+    bit for bit (scales are exactly 1.0)."""
+    rng = np.random.default_rng(3)
+    cfgs = [CacheConfig(capacity=32, dim=17, max_queries=4, store_dtype="fp32")]
+    caches = [MetricCache(c) for c in cfgs]
+    cache = caches[0]
+    for _ in range(5):
+        psi = jnp.asarray(_unit(rng, (17,)))
+        emb = jnp.asarray(_unit(rng, (3, 17)))
+        ids = jnp.asarray(rng.integers(0, 50, 3), jnp.int32)
+        cache.insert(psi, float(rng.uniform(0.3, 1.0)), emb, ids)
+    st = cache.state
+    np.testing.assert_array_equal(np.asarray(st.doc_scale), 1.0)
+    np.testing.assert_array_equal(np.asarray(st.q_scale), 1.0)
+    assert st.doc_emb.dtype == jnp.float32
+
+
+def test_engine_dtype_param_reaches_cache_storage():
+    from repro.serve.session import BatchedEngine
+
+    class _NullRouter:
+        def search(self, q, k):
+            raise TimeoutError("not used")
+
+    doc = np.zeros((10, 8), np.float32)
+    eng = BatchedEngine(_NullRouter(), doc, dim=8, n_sessions=2, k_c=4,
+                        dtype="int8")
+    assert eng.cache.state.doc_emb.dtype == jnp.int8
+    if "REPRO_CORPUS_DTYPE" not in os.environ:
+        eng_default = BatchedEngine(_NullRouter(), doc, dim=8, n_sessions=2,
+                                    k_c=4)
+        assert eng_default.cache.state.doc_emb.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("dt", ["bf16", "int8"])
+def test_conversational_searcher_over_quantized_index(dt):
+    """Regression: Algorithm 1 used to insert the raw quantized index
+    payload (int8 integers in [-127, 127]) into the cache instead of the
+    dequantized f32 view, so cached rankings were garbage.  A miss turn's
+    top-k answered FROM THE CACHE must equal the index's own top-k."""
+    from repro.core.conversation import ConversationalSearcher
+    rng = np.random.default_rng(5)
+    raw = jnp.asarray(rng.standard_normal((400, 32)).astype(np.float32))
+    idx = MetricIndex(raw, dtype=dt, use_kernel=False)
+    searcher = ConversationalSearcher(idx, k=10, k_c=50, epsilon=0.04)
+    assert searcher.cache.cfg.store_dtype == dt
+    searcher.start_conversation()
+    psi = idx.transform_queries(
+        jnp.asarray(rng.standard_normal(32).astype(np.float32)))
+    rec = searcher.answer(psi)
+    assert not rec.hit                       # compulsory first miss
+    direct = idx.search(psi[None], 10)
+    np.testing.assert_array_equal(np.asarray(rec.ids).reshape(-1),
+                                  np.asarray(direct.ids).reshape(-1))

@@ -180,6 +180,7 @@ def test_engine_radius_guarded_on_short_merge(world, index):
 
 
 # ------------------------------------------- BatchedEngine == sequential
+@pytest.mark.slow
 def test_batched_engine_bit_identical_to_sequential_loop(world, index):
     S, T, k, k_c = 6, 5, 10, 120
     doc = np.asarray(index.doc_emb)
@@ -215,6 +216,7 @@ def test_batched_engine_bit_identical_to_sequential_loop(world, index):
         assert seq[s].hit_rate() == bat.hit_rate(s)
 
 
+@pytest.mark.slow
 def test_batched_engine_partial_waves_match_sequential(world, index):
     """Waves smaller than n_sessions are padded to bucket sizes; the real
     rows must still reproduce the sequential engines exactly."""
@@ -290,6 +292,7 @@ def test_batched_engine_rejects_duplicate_sessions_in_wave(world, index):
 
 
 # ----------------------------------------------------------- SessionManager
+@pytest.mark.slow
 def test_session_manager_waves_match_sequential(world, index):
     S, T, k, k_c = 4, 4, 8, 100
     doc = np.asarray(index.doc_emb)

@@ -32,6 +32,7 @@ def index(world):
 
 
 # ------------------------------------------------------- Algorithm 1 e2e
+@pytest.mark.slow
 def test_dynamic_cache_end_to_end(world, index):
     from repro.core.conversation import ConversationalSearcher
     s = ConversationalSearcher(index=index, k=10, k_c=150, epsilon=0.04,
@@ -178,6 +179,7 @@ def test_degraded_turn_does_not_poison_cache(world, index):
     assert degraded_eng.cache.n_docs > 0
 
 
+@pytest.mark.slow
 def test_concurrent_sessions_through_session_manager(world, index):
     """Concurrent multi-session scenario: S interleaved sessions submitted
     through SessionManager waves must reproduce S independent sequential
@@ -262,6 +264,7 @@ def test_checkpoint_detects_corruption(tmp_path):
         restore_tree(tree, str(tmp_path))
 
 
+@pytest.mark.slow
 def test_checkpoint_manager_async_and_resume(tmp_path):
     from repro.checkpoint.manager import CheckpointManager
     mgr = CheckpointManager(str(tmp_path), interval=2, keep=2)
@@ -276,6 +279,7 @@ def test_checkpoint_manager_async_and_resume(tmp_path):
                                   np.full((8,), 4.0))
 
 
+@pytest.mark.slow
 def test_train_restart_resumes_identically(tmp_path):
     """Fault-tolerance property: kill after step k, restore, continue — the
     loss trajectory matches an uninterrupted run (stateless data pipeline +
