@@ -96,6 +96,19 @@ def check_kernels(current: dict, baseline: dict, errors: list) -> None:
         errors.append(
             f"kernels: int8 effective scan bandwidth {min(int8_bw):.2f}x "
             f"below the {MIN_INT8_BW_X}x acceptance floor")
+    # the pipelined scan must match-or-beat every per-dtype effective
+    # bandwidth the baseline recorded (byte-count derived: a drop means
+    # the scan streams more HBM bytes per document than it used to)
+    for key, val in base.get("metrics", {}).items():
+        if key.startswith("knn_effective_bw_x_") and key in cur_m:
+            if cur_m[key] < val - 1e-9:
+                errors.append(
+                    f"kernels: {key} regressed {val:.3f} -> "
+                    f"{cur_m[key]:.3f}")
+    # the achieved-fraction-of-roofline columns are the pipelined-scan
+    # wiring's fingerprint — their absence means the bench lost them
+    if not any("roofline_frac" in k for k in cur_m):
+        errors.append("kernels: no roofline-fraction rows in current")
     # quantized rows must still exist for every dtype the baseline had
     missing = [k for k in base.get("metrics", {}) if k not in cur_m]
     if missing:

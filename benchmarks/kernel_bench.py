@@ -1,7 +1,8 @@
 """Kernel-path benchmarks: dispatch-tier rows (ref / interpret / compiled)
-for the fused kNN corpus scan and the session-batched cache probe, plus the
-embedding bag — across the corpus storage dtypes (fp32 / bf16 / int8,
-``repro.core.quant``).
+for the pipelined fused kNN corpus scan and the session-batched cache
+probe, plus the embedding bag — across the corpus storage dtypes (fp32 /
+bf16 / int8, ``repro.core.quant``) and the native int8-MXU-dot tier
+(``int8_dot``, int8 corpora only).
 
 On a CPU container the Pallas kernels run in interpret mode (orders of
 magnitude slower — functional timing only, plus an equivalence gate); the
@@ -12,17 +13,26 @@ why the quantized dtypes matter: the ``knn_scan_bytes_*`` /
 ``knn_effective_bw_x_*`` rows report how many bytes one scan streams per
 dtype and the resulting effective-bandwidth multiplier vs fp32 (bytes
 shrink 2x / 4x, so a bandwidth-bound scan serves 2x / 4x the corpus per
-second at the same HBM roofline).
+second at the same HBM roofline), and the ``knn_roofline_frac_*`` rows
+report the achieved fraction of that roofline per (tier, dtype) —
+~meaningless on CPU hosts, the success metric for the double-buffered DMA
+pipeline on real TPU hardware (a compiled fused scan that overlaps its
+HBM copies with compute should approach 1.0).
 
 Writes its row set under the ``"kernels"`` key of ``BENCH_retrieval.json``
 (merge-update, so the retrieval rows written by ``retrieval_bench`` are
 preserved).  ``--smoke`` runs tiny shapes and FAILS (non-zero exit) if
 
   * the interpret-mode kernels disagree with the ref tier in ranking at
-    any dtype (tiers must agree exactly at a fixed dtype), or
+    any dtype or under the int8-MXU dot (tiers must agree exactly at a
+    fixed dtype + scoring rule), or
   * the quantized rankings drift below the documented rank-overlap floors
-    vs the fp32 corpus (``RANK_OVERLAP_FLOOR``), or
-  * the int8 effective-bandwidth multiplier falls below 1.8x
+    vs the fp32 corpus (``RANK_OVERLAP_FLOOR`` — the int8-MXU tier gates
+    at the established int8 floor), or
+  * the int8 effective-bandwidth multiplier falls below 1.8x, or
+  * any per-dtype effective-bandwidth multiplier regresses vs the
+    committed ``BENCH_retrieval.json`` baseline (the pipelined scan must
+    stream no more bytes than the scan it replaced)
 
 — the CI regression gate for the kernel path.
 """
@@ -51,8 +61,11 @@ SMOKE = dict(n=2048, d=128, b=4, k=10, s=8, qmax=16)
 # Documented rank-equality tolerance of the quantized scan: mean top-k
 # overlap vs the fp32 corpus must not fall below these floors (near-tied
 # scores may legitimately swap order under quantization; the *set* of
-# retrieved documents is the serving contract).
-RANK_OVERLAP_FLOOR = {"fp32": 1.0, "bf16": 0.95, "int8": 0.90}
+# retrieved documents is the serving contract).  The native int8-MXU-dot
+# tier ("int8dot": queries quantized too, int32-accumulated dot) gates at
+# the established int8 floor.
+RANK_OVERLAP_FLOOR = {"fp32": 1.0, "bf16": 0.95, "int8": 0.90,
+                      "int8dot": 0.90}
 
 # Acceptance floor for the int8 bandwidth win (ISSUE 4).
 MIN_INT8_EFFECTIVE_BW_X = 1.8
@@ -93,6 +106,33 @@ def _rank_overlap(ids_a: np.ndarray, ids_b: np.ndarray) -> float:
         for a, b in zip(ids_a, ids_b)]))
 
 
+def _tier_rows(rows, label, tag, roofline_s, make_call, check):
+    """Time one scoring config across the dispatch tiers; returns the ref
+    output.  Emits per-tier wall-clock AND achieved-fraction-of-roofline
+    (roofline_s / measured — the pipelined-scan success metric on TPU)."""
+    t, ref_out = timed(make_call("ref"))
+    rows[f"knn_ref_{label}_{tag}"] = t
+    rows[f"knn_roofline_frac_ref_{label}_{tag}"] = roofline_s / t
+    t, int_out = timed(make_call("interpret"), n=1, warmup=1)
+    rows[f"knn_pallas_interpret_{label}_{tag}"] = t
+    rows[f"knn_roofline_frac_interpret_{label}_{tag}"] = roofline_s / t
+    if dispatch.on_tpu():
+        t, comp_out = timed(make_call("compiled"))
+        rows[f"knn_pallas_compiled_{label}_{tag}"] = t
+        rows[f"knn_roofline_frac_compiled_{label}_{tag}"] = roofline_s / t
+        if check:
+            np.testing.assert_array_equal(np.asarray(comp_out[1]),
+                                          np.asarray(ref_out[1]))
+    if check:
+        # tiers must agree EXACTLY in ranking at a fixed dtype + rule
+        np.testing.assert_array_equal(np.asarray(int_out[1]),
+                                      np.asarray(ref_out[1]))
+        np.testing.assert_allclose(np.asarray(int_out[0]),
+                                   np.asarray(ref_out[0]),
+                                   rtol=2e-5, atol=2e-5)
+    return ref_out
+
+
 def _knn_rows(p, rows, check: bool):
     rng = np.random.default_rng(0)
     docs = jnp.asarray(_unit(rng, (p["n"], p["d"])))
@@ -103,46 +143,37 @@ def _knn_rows(p, rows, check: bool):
 
     fp32_ids = None
     fp32_bytes = _scan_bytes(p["n"], p["d"], "fp32")
-    for dt in quant.DTYPES:
-        qc = quant.quantize(docs, dt)
-        t, ref_out = timed(lambda: knn_search(
-            docs=qc.data, doc_ids=ids, queries=q, k=k, backend="ref",
-            scale=qc.scale))
-        rows[f"knn_ref_{dt}_{tag}"] = t
-        t, int_out = timed(lambda: knn_search(
-            docs=qc.data, doc_ids=ids, queries=q, k=k, backend="interpret",
-            scale=qc.scale), n=1, warmup=1)
-        rows[f"knn_pallas_interpret_{dt}_{tag}"] = t
-        if dispatch.on_tpu():
-            t, comp_out = timed(lambda: knn_search(
-                docs=qc.data, doc_ids=ids, queries=q, k=k,
-                backend="compiled", scale=qc.scale))
-            rows[f"knn_pallas_compiled_{dt}_{tag}"] = t
-            if check:
-                np.testing.assert_array_equal(np.asarray(comp_out[1]),
-                                              np.asarray(ref_out[1]))
+    quantized = {dt: quant.quantize(docs, dt) for dt in quant.DTYPES}
+    # the int8-MXU-dot tier rides the int8 payload with a second scoring
+    # rule — report it as its own pseudo-dtype row set ("int8dot")
+    configs = [(dt, dt, False) for dt in quant.DTYPES]
+    configs.append(("int8dot", "int8", True))
+    for label, dt, i8dot in configs:
+        qc = quantized[dt]
+
+        def make_call(backend, qc=qc, i8dot=i8dot):
+            return lambda: knn_search(
+                docs=qc.data, doc_ids=ids, queries=q, k=k, backend=backend,
+                scale=qc.scale, int8_dot=i8dot)
+
         scan_bytes = _scan_bytes(p["n"], p["d"], dt)
-        rows[f"knn_scan_bytes_{dt}_{tag}"] = float(scan_bytes)
-        rows[f"knn_effective_bw_x_{dt}_{tag}"] = fp32_bytes / scan_bytes
-        rows[f"knn_tpu_roofline_{dt}_{tag}"] = scan_bytes / HW["hbm_bw"]
-        if dt == "fp32":
+        roofline_s = scan_bytes / HW["hbm_bw"]
+        ref_out = _tier_rows(rows, label, tag, roofline_s, make_call, check)
+        rows[f"knn_scan_bytes_{label}_{tag}"] = float(scan_bytes)
+        rows[f"knn_effective_bw_x_{label}_{tag}"] = fp32_bytes / scan_bytes
+        rows[f"knn_tpu_roofline_{label}_{tag}"] = roofline_s
+        if label == "fp32":
             fp32_ids = np.asarray(ref_out[1])
         overlap = _rank_overlap(np.asarray(ref_out[1]), fp32_ids)
-        rows[f"knn_rank_overlap_vs_fp32_{dt}_{tag}"] = overlap
+        rows[f"knn_rank_overlap_vs_fp32_{label}_{tag}"] = overlap
         if check:
-            # tiers must agree EXACTLY in ranking at a fixed dtype
-            np.testing.assert_array_equal(np.asarray(int_out[1]),
-                                          np.asarray(ref_out[1]))
-            np.testing.assert_allclose(np.asarray(int_out[0]),
-                                       np.asarray(ref_out[0]),
-                                       rtol=2e-5, atol=2e-5)
-            floor = RANK_OVERLAP_FLOOR[dt]
+            floor = RANK_OVERLAP_FLOOR[label]
             assert overlap >= floor, (
-                f"{dt} top-{k} overlap vs fp32 = {overlap:.3f} < {floor}")
+                f"{label} top-{k} overlap vs fp32 = {overlap:.3f} < {floor}")
     # the A/B two-stage merge keeps parity at the widest and narrowest dtype
     t, _ = timed(lambda: knn_search(
         docs=docs, doc_ids=ids, queries=q, k=k, backend="interpret",
-        two_stage=True), n=1, warmup=1)
+        two_stage=True, int8_dot=False), n=1, warmup=1)
     rows[f"knn_pallas_interpret_two_stage_fp32_{tag}"] = t
     if check:
         assert rows[f"knn_effective_bw_x_int8_{tag}"] >= \
@@ -187,11 +218,36 @@ def _probe_rows(p, rows, check: bool):
                                           np.asarray(ref_out.nearest_q))
 
 
-def run(smoke: bool = False, out_path: str = "BENCH_retrieval.json"):
+def _assert_no_bw_regression(rows: dict, baseline_path: str) -> None:
+    """The pipelined fused scan must not regress effective bandwidth: every
+    per-dtype ``knn_effective_bw_x_*`` row of the committed baseline must
+    still exist and be matched or beaten (the multiplier is byte-count
+    derived, so a regression means the scan started streaming MORE bytes
+    per document than the scan it replaced)."""
+    if not os.path.exists(baseline_path):
+        return
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f).get("kernels_smoke", {}).get("metrics", {})
+    except (json.JSONDecodeError, OSError):
+        return
+    for key, val in base.items():
+        if not key.startswith("knn_effective_bw_x_"):
+            continue
+        assert key in rows, f"effective-bandwidth row disappeared: {key}"
+        assert rows[key] >= val - 1e-9, (
+            f"{key} regressed vs committed baseline: "
+            f"{val:.3f} -> {rows[key]:.3f}")
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_retrieval.json",
+        baseline_path: str = "BENCH_retrieval.json"):
     p = SMOKE if smoke else FULL
     rows: dict[str, float] = {}
     _knn_rows(p, rows, check=smoke)
     _probe_rows(p, rows, check=smoke)
+    if smoke:
+        _assert_no_bw_regression(rows, baseline_path)
 
     rng = np.random.default_rng(0)
     nbag = 4096 if not smoke else 256
@@ -203,7 +259,8 @@ def run(smoke: bool = False, out_path: str = "BENCH_retrieval.json"):
 
     if out_path:
         key = "kernels_smoke" if smoke else "kernels"
-        is_metric = lambda k: ("bytes" in k or "overlap" in k or "bw_x" in k)
+        is_metric = lambda k: ("bytes" in k or "overlap" in k
+                               or "bw_x" in k or "frac" in k)
         merge_json(out_path, {key: {
             "backend": dispatch.default_backend(),
             "dtype_default": quant.default_dtype(),
@@ -240,16 +297,20 @@ def main():
                     help="tiny shapes + ref/kernel equivalence gate")
     ap.add_argument("--out", default="BENCH_retrieval.json",
                     help="JSON path to merge the kernels row set into")
+    ap.add_argument("--baseline", default="BENCH_retrieval.json",
+                    help="committed baseline the smoke bandwidth gate "
+                         "compares against")
     args = ap.parse_args()
-    rows = run(smoke=args.smoke, out_path=args.out)
+    rows = run(smoke=args.smoke, out_path=args.out,
+               baseline_path=args.baseline)
     for k, v in rows.items():
-        if "bytes" in k or "overlap" in k or "bw_x" in k:
-            print(f"{k:>48} {v:10.3f}")
+        if "bytes" in k or "overlap" in k or "bw_x" in k or "frac" in k:
+            print(f"{k:>52} {v:12.3g}")
         else:
-            print(f"{k:>48} {1e3 * v:10.3f} ms")
+            print(f"{k:>52} {1e3 * v:10.3f} ms")
     if args.smoke:
-        print("kernel smoke: per-dtype tiers agree; quantized rank overlap "
-              "above documented floors")
+        print("kernel smoke: per-dtype tiers (incl. int8-MXU dot) agree; "
+              "rank overlap and effective bandwidth above committed floors")
     return rows
 
 

@@ -35,12 +35,15 @@ hits.  Beyond-paper extensions (flagged, off by default): LRU eviction and
 distance-based ("ball") eviction so unbounded conversations stay bounded.
 
 Batched multi-session serving: every op also ships in a session-batched
-variant (``probe_batched`` / ``query_batched`` / ``insert_batched``) over a
-``CacheState`` whose leaves carry a leading session axis
-(``init_batched_cache``).  The batched ops are ``vmap``s of the scalar ops —
-per session they compute exactly the same result — plus per-session ``do``
-/ ``record`` masks so a wave of concurrent turns with mixed hits and misses
-updates only the sessions that actually missed.
+variant (``probe_batched`` / ``query_batched`` / ``insert_batched`` / the
+fused ``insert_query_batched``) over a ``CacheState`` whose leaves carry a
+leading session axis (``init_batched_cache``).  The ref tier of each is a
+``vmap`` of the scalar op — per session it computes exactly the same
+result — while the kernel tiers run the whole wave as ONE fused Pallas
+launch (``kernels.cache_probe`` / ``kernels.cache_wave``), bit-identical
+per session to the vmap path; per-session ``do`` / ``record`` masks make a
+wave of concurrent turns with mixed hits and misses update only the
+sessions that actually missed.
 """
 
 from __future__ import annotations
@@ -58,7 +61,7 @@ from repro.kernels import dispatch as kdispatch
 __all__ = ["CacheState", "CacheConfig", "init_cache", "probe", "query",
            "insert", "MetricCache", "init_batched_cache", "reset_sessions",
            "probe_batched", "query_batched", "insert_batched",
-           "BatchedMetricCache"]
+           "insert_query_batched", "BatchedMetricCache"]
 
 
 class CacheState(NamedTuple):
@@ -190,20 +193,15 @@ def _evicting_positions(state: CacheState, capacity: int, keep: jax.Array,
     return pos, dropped
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def insert(state: CacheState, cfg: CacheConfig, psi: jax.Array, radius: jax.Array,
-           new_emb: jax.Array, new_ids: jax.Array,
-           record: jax.Array | bool = True) -> tuple[CacheState, jax.Array]:
-    """Insert the k_c back-end results for a missed query ``psi``.
+def _insert_positions(state: CacheState, cfg: CacheConfig, psi: jax.Array,
+                      new_ids: jax.Array):
+    """Write positions for one insert batch: (keep, pos, dropped, new_n).
 
-    Records (psi, r_a) for future LowQuality probes — unless ``record`` is
-    False (degraded back-end answers carry an inflated r_a that would poison
-    the cache with false coverage claims; the docs are still worth keeping).
-    Then appends the new document embeddings (deduplicated by id when
-    cfg.dedup; ids < 0 are sentinel padding and never inserted).  Returns
-    (new_state, n_dropped) where n_dropped counts docs that did not fit
-    (always 0 under the paper's sizing assumption; eviction policies only
-    drop when a single batch exceeds the whole capacity).
+    THE position logic of the scalar ``insert`` — dedup, append, and the
+    eviction policies — factored out so the kernel-tier batched scatter
+    (``kernels.cache_wave``) reuses it verbatim and stays bit-identical to
+    the scalar path by construction.  ``pos[j] == cfg.capacity`` marks a
+    dropped (or non-kept) document.
     """
     kc = new_ids.shape[0]
     keep = _dedup_mask(new_ids, state.doc_ids) if cfg.dedup else jnp.ones((kc,), bool)
@@ -226,13 +224,31 @@ def insert(state: CacheState, cfg: CacheConfig, psi: jax.Array, radius: jax.Arra
                 state.doc_emb.astype(jnp.float32) @ psi, state.doc_scale))
         pos, dropped = _evicting_positions(state, cfg.capacity, keep, key,
                                            evictable)
-        new_n = jnp.minimum(state.n_docs + keep.sum(), cfg.capacity)
     else:  # paper-faithful: append, drop overflow (and report it)
         append_pos = state.n_docs + jnp.cumsum(keep) - 1
         fits = append_pos < cfg.capacity
         pos = jnp.where(jnp.logical_and(keep, fits), append_pos, cfg.capacity)
         dropped = jnp.logical_and(keep, ~fits).sum().astype(jnp.int32)
-        new_n = jnp.minimum(state.n_docs + keep.sum(), cfg.capacity)
+    new_n = jnp.minimum(state.n_docs + keep.sum(), cfg.capacity)
+    return keep, pos, dropped, new_n
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def insert(state: CacheState, cfg: CacheConfig, psi: jax.Array, radius: jax.Array,
+           new_emb: jax.Array, new_ids: jax.Array,
+           record: jax.Array | bool = True) -> tuple[CacheState, jax.Array]:
+    """Insert the k_c back-end results for a missed query ``psi``.
+
+    Records (psi, r_a) for future LowQuality probes — unless ``record`` is
+    False (degraded back-end answers carry an inflated r_a that would poison
+    the cache with false coverage claims; the docs are still worth keeping).
+    Then appends the new document embeddings (deduplicated by id when
+    cfg.dedup; ids < 0 are sentinel padding and never inserted).  Returns
+    (new_state, n_dropped) where n_dropped counts docs that did not fit
+    (always 0 under the paper's sizing assumption; eviction policies only
+    drop when a single batch exceeds the whole capacity).
+    """
+    _keep, pos, dropped, new_n = _insert_positions(state, cfg, psi, new_ids)
 
     # embeddings enter the cache in the storage format: quantize the batch
     # (identity at fp32) and scatter payload + per-row scale together
@@ -328,10 +344,16 @@ class MetricCache:
 
 # --------------------------------------------------------------------------
 # Session-batched variants: one stacked CacheState for S concurrent sessions.
-# Each op is a vmap of the scalar op, so per session the arithmetic — matmuls,
-# argsorts, scatters — is the same program and the results match the scalar
-# path exactly.  ``do``/``record`` masks make a mixed hit/miss wave update
-# only the sessions that missed (hit sessions keep their state bitwise).
+# The ref tier of each op is a vmap of the scalar op, so per session the
+# arithmetic — matmuls, argsorts, scatters — is the same program and the
+# results match the scalar path exactly.  The kernel tiers run each op as
+# ONE fused Pallas launch over the stacked state (``kernels.cache_probe``
+# for the probe, ``kernels.cache_wave`` for query/insert — and the fused
+# ``insert_query_batched`` collapses the wave tail into a single launch),
+# reusing the scalar ops' jnp position/ring logic so they stay
+# bit-identical per session.  ``do``/``record`` masks make a mixed
+# hit/miss wave update only the sessions that missed (hit sessions keep
+# their state bitwise, LRU stamps included).
 # --------------------------------------------------------------------------
 
 def init_batched_cache(cfg: CacheConfig, n_sessions: int) -> CacheState:
@@ -374,28 +396,51 @@ def probe_batched(state: CacheState, psi: jax.Array,
     return ProbeResult(hit, r_hat, idx)
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def query_batched(state: CacheState, psi: jax.Array, k: int):
-    """vmap of ``query``: per-session top-k over (S,)-stacked caches."""
-    return jax.vmap(query, in_axes=(0, 0, None))(state, psi, k)
+@functools.partial(jax.jit, static_argnames=("k", "backend"))
+def query_batched(state: CacheState, psi: jax.Array, k: int,
+                  backend: str | None = None):
+    """Per-session top-k over (S,)-stacked caches.
 
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def insert_batched(state: CacheState, cfg: CacheConfig, psi: jax.Array,
-                   radius: jax.Array, new_emb: jax.Array, new_ids: jax.Array,
-                   do: jax.Array | None = None,
-                   record: jax.Array | None = None):
-    """vmap of ``insert`` with per-session gating.
-
-    psi (S, dim), radius (S,), new_emb (S, kc, dim), new_ids (S, kc).
-    ``do`` masks which sessions insert at all (hit sessions pass False and
-    keep their state unchanged); ``record`` masks the (psi, r_a) query
-    record per session (False for degraded back-end answers).
+    The ref tier is a vmap of the scalar ``query``; the kernel tiers run
+    the whole wave as ONE fused Pallas launch (``kernels.cache_wave``) —
+    scores, ids, *and* slot ordering (stable top-k, empty slots ascending)
+    match the ref tier, and the LRU-stamp touch / step bump applied here
+    are the scalar op's exact jnp updates.
     """
+    be = kdispatch.resolve(backend)
+    if be == "ref":
+        return jax.vmap(query, in_axes=(0, 0, None))(state, psi, k)
+    from repro.kernels.cache_wave import ops as wave_ops
+    vals, ids, slots = wave_ops.wave_query_topk(
+        state.doc_emb, state.doc_ids, state.doc_scale, psi, k,
+        interpret=kdispatch.interpret_flag(be))
+    new_state = _apply_query_touch(state, ids, slots)
+    return (vals, emb.distance_from_scores(vals), ids, slots), new_state
+
+
+def _apply_query_touch(state: CacheState, ids: jax.Array,
+                       slots: jax.Array) -> CacheState:
+    """The scalar ``query``'s state update after a kernel-tier wave top-k:
+    refresh the LRU stamps of the returned REAL docs (empty-slot answers
+    route to the capacity drop-sentinel) at the current step, then bump
+    the step — shared by ``query_batched`` and ``insert_query_batched`` so
+    the touch invariant lives in one place."""
+    capacity = state.doc_stamp.shape[1]
+    touch = jnp.where(ids >= 0, slots, capacity)
+    new_stamp = jax.vmap(
+        lambda st, tch, sv: st.at[tch].set(sv, mode="drop"))(
+            state.doc_stamp, touch, state.step)
+    return state._replace(doc_stamp=new_stamp, step=state.step + 1)
+
+
+def _gated_batch(new_ids, do, record):
     n = new_ids.shape[0]
     do = jnp.ones((n,), bool) if do is None else jnp.asarray(do, bool)
     record = do if record is None else jnp.asarray(record, bool)
+    return do, record
 
+
+def _insert_batched_ref(state, cfg, psi, radius, new_emb, new_ids, do, record):
     def _one(s, p, r, e, i, d, rec):
         new_s, dropped = insert(s, cfg, p, r, e, i, rec)
         merged = jax.tree_util.tree_map(
@@ -403,6 +448,108 @@ def insert_batched(state: CacheState, cfg: CacheConfig, psi: jax.Array,
         return merged, jnp.where(d, dropped, 0)
 
     return jax.vmap(_one)(state, psi, radius, new_emb, new_ids, do, record)
+
+
+def _insert_batched_kernel(state, cfg, psi, radius, new_emb, new_ids, do,
+                           record, interpret, query_psi=None, k=None):
+    """Kernel-tier batched insert (optionally fused with the wave query).
+
+    Positions/ring slots come from the scalar ops' exact jnp logic
+    (``_insert_positions``, vmapped), gated per session by ``do`` — a
+    masked session's positions all point at the drop sentinel, so its
+    payload, ids, and LRU stamps pass through the scatter bit-identically.
+    The kernel does the heavy part: one pass over the stacked cache
+    payload, scattering the k_c batch and (when ``query_psi`` is given)
+    scoring the freshly blended tiles for the post-insert top-k.
+    """
+    from repro.kernels.cache_wave import ops as wave_ops
+    _keep, pos, dropped, new_n = jax.vmap(
+        lambda s, p, i: _insert_positions(s, cfg, p, i))(state, psi, new_ids)
+    pos = jnp.where(do[:, None], pos, cfg.capacity)
+    dropped = jnp.where(do, dropped, 0)
+    rec_g = jnp.logical_and(do, record)
+    emb_q, emb_scale = _store_rows(new_emb, cfg.store_dtype)
+    psi_q, psi_scale = _store_rows(psi, cfg.store_dtype)
+    qslot = jnp.mod(state.n_queries, state.q_emb.shape[1])
+    args = (state.doc_emb, state.doc_ids, state.doc_stamp, state.doc_scale,
+            state.q_emb, state.q_radius, state.q_scale,
+            emb_q, emb_scale, new_ids, pos, psi_q, psi_scale,
+            jnp.asarray(radius, jnp.float32), rec_g, qslot, state.step)
+    if query_psi is None:
+        outs, q_out = wave_ops.wave_insert_scatter(
+            *args, interpret=interpret), None
+    else:
+        outs, q_out = wave_ops.wave_insert_query(
+            *args, psi=query_psi, k=k, interpret=interpret)
+    demb, dids, dstamp, dscale, qemb, qrad, qsc = outs
+    new_state = CacheState(
+        doc_emb=demb, doc_ids=dids, doc_stamp=dstamp,
+        q_emb=qemb, q_radius=qrad.astype(state.q_radius.dtype),
+        n_docs=jnp.where(do, new_n, state.n_docs).astype(jnp.int32),
+        n_queries=state.n_queries + rec_g.astype(jnp.int32),
+        step=jnp.where(do, state.step + 1, state.step),
+        doc_scale=dscale, q_scale=qsc,
+    )
+    return new_state, dropped.astype(jnp.int32), q_out
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+def insert_batched(state: CacheState, cfg: CacheConfig, psi: jax.Array,
+                   radius: jax.Array, new_emb: jax.Array, new_ids: jax.Array,
+                   do: jax.Array | None = None,
+                   record: jax.Array | None = None,
+                   backend: str | None = None):
+    """Session-batched ``insert`` with per-session gating.
+
+    psi (S, dim), radius (S,), new_emb (S, kc, dim), new_ids (S, kc).
+    ``do`` masks which sessions insert at all (hit sessions pass False and
+    keep their state unchanged — LRU stamps included); ``record`` masks the
+    (psi, r_a) query record per session (False for degraded back-end
+    answers).  The ref tier is a vmap of the scalar ``insert``; the kernel
+    tiers run the whole wave's scatter as ONE fused Pallas launch,
+    bit-identical per session to the scalar path.
+    """
+    do, record = _gated_batch(new_ids, do, record)
+    be = kdispatch.resolve(backend)
+    if be == "ref":
+        return _insert_batched_ref(state, cfg, psi, radius, new_emb,
+                                   new_ids, do, record)
+    new_state, dropped, _ = _insert_batched_kernel(
+        state, cfg, psi, radius, new_emb, new_ids, do, record,
+        kdispatch.interpret_flag(be))
+    return new_state, dropped
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k", "backend"))
+def insert_query_batched(state: CacheState, cfg: CacheConfig, psi: jax.Array,
+                         radius: jax.Array, new_emb: jax.Array,
+                         new_ids: jax.Array, k: int,
+                         do: jax.Array | None = None,
+                         record: jax.Array | None = None,
+                         backend: str | None = None):
+    """The serving wave's tail: gated batched insert + post-insert top-k
+    query, semantically ``insert_batched`` followed by ``query_batched``.
+
+    On the kernel tiers the pair is ONE fused Pallas launch — the query
+    scan scores each cache tile as the insert scatter blends it, so a
+    whole ``BatchedEngine`` wave is exactly three launches (probe ->
+    miss-search -> insert+query).  Returns
+    ``((scores, dists, ids, slots), new_state, dropped)``.
+    """
+    do, record = _gated_batch(new_ids, do, record)
+    be = kdispatch.resolve(backend)
+    if be == "ref":
+        new_state, dropped = _insert_batched_ref(
+            state, cfg, psi, radius, new_emb, new_ids, do, record)
+        out, new_state = query_batched(new_state, psi, k, backend="ref")
+        return out, new_state, dropped
+    new_state, dropped, (vals, ids, slots) = _insert_batched_kernel(
+        state, cfg, psi, radius, new_emb, new_ids, do, record,
+        kdispatch.interpret_flag(be), query_psi=psi, k=k)
+    # the scalar query's LRU touch, applied at the post-insert step value
+    new_state = _apply_query_touch(new_state, ids, slots)
+    return ((vals, emb.distance_from_scores(vals), ids, slots),
+            new_state, dropped)
 
 
 class BatchedMetricCache:
@@ -451,13 +598,15 @@ class BatchedMetricCache:
         eps = self.cfg.epsilon if epsilon is None else epsilon
         return probe_batched(self.state, psi, eps, backend=backend)
 
-    def query(self, psi, k: int):
-        out, self.state = query_batched(self.state, psi, k)
+    def query(self, psi, k: int, backend=None):
+        out, self.state = query_batched(self.state, psi, k, backend=backend)
         return out
 
-    def insert(self, psi, radius, new_emb, new_ids, do=None, record=None):
+    def insert(self, psi, radius, new_emb, new_ids, do=None, record=None,
+               backend=None):
         self.state, dropped = insert_batched(
-            self.state, self.cfg, psi, radius, new_emb, new_ids, do, record)
+            self.state, self.cfg, psi, radius, new_emb, new_ids, do, record,
+            backend=backend)
         self.total_dropped += int(dropped.sum())
 
     def memory_bytes(self) -> int:

@@ -54,7 +54,7 @@ def exact_nn(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int) ->
 
 def streaming_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
                    k: int, chunk: int, masked: bool = False,
-                   scale: jax.Array | None = None):
+                   scale: jax.Array | None = None, int8_dot: bool = False):
     """Raw streaming top-k scan shared by ``chunked_nn``, the padded-corpus
     index path, and ``dist.retrieval``'s per-shard search.
 
@@ -65,16 +65,25 @@ def streaming_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
     int8) with ``scale`` its (n,) f32 per-document score multiplier —
     dequantization is chunk-local (payload cast to f32, f32 dot, score-side
     scale), the same rule the Pallas tiers apply per tile, so peak memory
-    stays O(q*chunk) and tiers agree.  Returns (scores (q, k), ids (q, k)).
+    stays O(q*chunk) and tiers agree.  ``int8_dot`` (int8 payloads only)
+    switches to the native-narrow scoring rule of the kernel tiers: the
+    queries quantize per-row to int8 once, each chunk's dot runs int8 x
+    int8 with int32 accumulation, and both fp32 scales apply score-side in
+    the kernels' association order — the ref tier of the int8-MXU path.
+    Returns (scores (q, k), ids (q, k)).
     """
     n = docs.shape[0]
     assert n % chunk == 0, f"corpus size {n} not divisible by chunk {chunk}"
+    int8_dot = bool(int8_dot) and docs.dtype == jnp.int8
     docs_c = docs.reshape(n // chunk, chunk, docs.shape[1])
     ids_c = doc_ids.reshape(n // chunk, chunk)
     scale_c = (None if scale is None else
                scale.astype(jnp.float32).reshape(n // chunk, chunk))
     q = queries.shape[0]
     queries = queries.astype(jnp.float32)
+    if int8_dot:
+        qq = quant.quantize(queries, "int8")
+        q_payload, q_scale_col = qq.data, qq.scale[:, None]
 
     init = (jnp.full((q, k), -jnp.inf, queries.dtype),
             jnp.full((q, k), -1, jnp.int32))
@@ -82,7 +91,13 @@ def streaming_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
     def step(carry, chunk_data):
         best_s, best_i = carry
         cd, ci, cs = chunk_data
-        scores = queries @ cd.astype(jnp.float32).T              # (q, chunk)
+        if int8_dot:
+            acc = jax.lax.dot_general(
+                q_payload, cd, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32)                # (q, chunk)
+            scores = acc.astype(jnp.float32) * q_scale_col
+        else:
+            scores = queries @ cd.astype(jnp.float32).T          # (q, chunk)
         scores = quant.scale_scores(scores, cs)
         if masked:
             scores = jnp.where(ci[None, :] < 0, -jnp.inf, scores)
@@ -119,7 +134,8 @@ def masked_chunked_nn(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array,
 
 def scan_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
               *, chunk: int = 4096, backend: str | None = None,
-              tile_n: int | None = None, scale: jax.Array | None = None):
+              tile_n: int | None = None, scale: jax.Array | None = None,
+              int8_dot: bool | None = None):
     """The one corpus-scan contract (see module docstring).
 
     docs (N, D) with N a ``chunk`` multiple on the ref tier (the kernel
@@ -129,23 +145,28 @@ def scan_topk(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
     f32.  Returns raw (scores (B, k), ids (B, k)) — descending scores,
     sentinel id -1 wherever the score is -inf — identical in ranking
     across tiers at a fixed dtype (rank equality vs the fp32 corpus is
-    tolerance-bound; see tests/test_kernel_equivalence.py).  Trace-safe:
-    usable inside jit and ``shard_map`` bodies (``backend`` must then be a
-    concrete tier, resolved outside).
+    tolerance-bound; see tests/test_kernel_equivalence.py).  ``int8_dot``
+    (None = the ``REPRO_INT8_DOT`` policy; int8 corpora only) switches
+    every tier to the native int8-MXU scoring rule — tiers still agree
+    with each other exactly, rankings vs fp32 are gated at the int8 floor.
+    Trace-safe: usable inside jit and ``shard_map`` bodies (``backend``
+    must then be a concrete tier, resolved outside).
     """
     be = kdispatch.resolve(backend)
+    use_i8 = quant.resolve_int8_dot(int8_dot, docs.dtype)
     if be == "ref":
         return _streaming_topk_masked(docs, doc_ids, queries, scale, k=k,
-                                      chunk=chunk)
+                                      chunk=chunk, int8_dot=use_i8)
     from repro.kernels.knn import ops as knn_ops
     return knn_ops.knn_search(docs, doc_ids, queries, k, tile_n=tile_n,
-                              backend=be, scale=scale)
+                              backend=be, scale=scale, int8_dot=use_i8)
 
 
 _streaming_topk_masked = jax.jit(
-    lambda docs, doc_ids, queries, scale, *, k, chunk: streaming_topk(
-        docs, doc_ids, queries, k, chunk, masked=True, scale=scale),
-    static_argnames=("k", "chunk"))
+    lambda docs, doc_ids, queries, scale, *, k, chunk, int8_dot: (
+        streaming_topk(docs, doc_ids, queries, k, chunk, masked=True,
+                       scale=scale, int8_dot=int8_dot)),
+    static_argnames=("k", "chunk", "int8_dot"))
 
 
 class MetricIndex:
@@ -170,7 +191,8 @@ class MetricIndex:
 
     def __init__(self, doc_emb, doc_ids=None, *, transformed: bool = False,
                  chunk: int = 4096, use_kernel: bool | None = None,
-                 sharded: bool = False, mesh=None, dtype: str | None = None):
+                 sharded: bool = False, mesh=None, dtype: str | None = None,
+                 int8_dot: bool | None = None):
         doc_emb = jnp.asarray(doc_emb)
         if doc_ids is None:
             doc_ids = jnp.arange(doc_emb.shape[0], dtype=jnp.int32)
@@ -196,6 +218,9 @@ class MetricIndex:
         self.doc_emb = qc.data
         self.doc_scale = qc.scale
         self.doc_ids = doc_ids
+        # int8-MXU-dot policy pinned at construction (None follows
+        # REPRO_INT8_DOT) so every search over this index scores one way
+        self.int8_dot = quant.resolve_int8_dot(int8_dot, self.doc_emb.dtype)
         self.use_kernel = use_kernel
         if use_kernel is None:
             self.backend = kdispatch.default_backend()
@@ -231,10 +256,12 @@ class MetricIndex:
                                              queries, k, mesh=self.mesh,
                                              chunk=self._shard_chunk,
                                              backend=self.backend,
-                                             scale=self.doc_scale)
+                                             scale=self.doc_scale,
+                                             int8_dot=self.int8_dot)
         return _as_result(*scan_topk(self.doc_emb, self.doc_ids, queries, k,
                                      chunk=self.chunk, backend=self.backend,
-                                     scale=self.doc_scale))
+                                     scale=self.doc_scale,
+                                     int8_dot=self.int8_dot))
 
     def dequantized(self) -> jax.Array:
         """f32 view of the (padded) transformed corpus — the exact values

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 
 __all__ = ["DTYPES", "QuantizedCorpus", "default_dtype", "resolve_dtype",
            "storage_dtype", "itemsize", "quantize", "dequantize",
-           "scale_scores"]
+           "scale_scores", "int8_dot_default", "resolve_int8_dot"]
 
 DTYPES = ("fp32", "bf16", "int8")
 
@@ -85,6 +85,30 @@ def resolve_dtype(dtype: Optional[str]) -> str:
     if dtype not in DTYPES:
         raise ValueError(f"dtype {dtype!r}: expected one of {DTYPES}")
     return dtype
+
+
+def int8_dot_default() -> bool:
+    """Process-wide policy for the native int8 MXU dot (``REPRO_INT8_DOT``).
+
+    When enabled *and* the corpus payload is int8, the scan quantizes the
+    queries per-row to int8 and runs the dot int8 x int8 with int32
+    accumulation — the MXU's native narrow mode — applying both fp32
+    scales score-side.  Off (the default) the scan keeps the
+    dequantize-first rule, which is the exact-parity tier vs fp32 at a
+    fixed dtype.  The int8-dot tier trades a little extra rank drift
+    (gated at the established int8 floor, >= 0.90 overlap) for compute
+    headroom on top of the 4x bandwidth win.
+    """
+    env = os.environ.get("REPRO_INT8_DOT", "").strip().lower()
+    return env in ("1", "true", "yes", "on")
+
+
+def resolve_int8_dot(flag: Optional[bool], payload_dtype) -> bool:
+    """Concrete int8-dot decision for a scan: the explicit ``flag`` (env
+    policy when None), active only for an int8 payload — the flag is
+    ignored, never an error, on wider corpora."""
+    use = int8_dot_default() if flag is None else bool(flag)
+    return use and jnp.dtype(payload_dtype) == jnp.int8
 
 
 def storage_dtype(dtype: str):

@@ -136,9 +136,9 @@ def shard_corpus(docs, doc_ids, *, scale: Optional[jax.Array] = None,
 
 @functools.lru_cache(maxsize=None)
 def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...], k: int, chunk: int,
-                       backend: str, quantized: bool):
+                       backend: str, quantized: bool, int8_dot: bool):
     """jit(shard_map) factory, cached per (mesh, axes, k, chunk, backend,
-    quantized).
+    quantized, int8_dot).
 
     Per device: the shared ``scan_topk`` contract over the local corpus
     slice (jnp streaming scan or the fused Pallas kernel, per ``backend``;
@@ -161,13 +161,14 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...], k: int, chunk: int,
     if quantized:
         def local(docs, ids, scale, queries):
             return merge(*scan_topk(docs, ids, queries, k, chunk=chunk,
-                                    backend=backend, scale=scale))
+                                    backend=backend, scale=scale,
+                                    int8_dot=int8_dot))
         in_specs = (P(axis_entry, None), P(axis_entry), P(axis_entry),
                     P(None, None))
     else:
         def local(docs, ids, queries):
             return merge(*scan_topk(docs, ids, queries, k, chunk=chunk,
-                                    backend=backend))
+                                    backend=backend, int8_dot=int8_dot))
         in_specs = (P(axis_entry, None), P(axis_entry), P(None, None))
 
     fn = shard_map(local, mesh=mesh, in_specs=in_specs,
@@ -179,7 +180,8 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...], k: int, chunk: int,
 def sharded_nn(docs, doc_ids, queries, k: int, *, mesh: Optional[Mesh] = None,
                axes: Optional[Sequence[str]] = None, chunk: int = 4096,
                backend: Optional[str] = None,
-               scale: Optional[jax.Array] = None) -> SearchResult:
+               scale: Optional[jax.Array] = None,
+               int8_dot: Optional[bool] = None) -> SearchResult:
     """Exact k-NN with the corpus sharded over ``mesh`` (all its axes by
     default; the active ``sharding_rules`` mesh, else one flat axis over
     every local device, when ``mesh`` is None).
@@ -190,9 +192,12 @@ def sharded_nn(docs, doc_ids, queries, k: int, *, mesh: Optional[Mesh] = None,
     ``backend`` picks the per-shard scan tier (``kernels.dispatch``; the
     default is compiled-kernel-on-TPU / jnp elsewhere).  ``docs`` may be a
     quantized payload (bf16 / int8) with ``scale`` its (n,) f32
-    per-document score multiplier, sharded row-aligned with the corpus.
-    Rankings are bit-identical to ``exact_nn`` on the unpadded corpus at
-    fp32 (tolerance-bound rank equality at quantized dtypes).
+    per-document score multiplier, sharded row-aligned with the corpus;
+    ``int8_dot`` (None = the ``REPRO_INT8_DOT`` policy) switches int8
+    shards to the native int8-MXU scoring rule, resolved here so every
+    shard of one search scores identically.  Rankings are bit-identical to
+    ``exact_nn`` on the unpadded corpus at fp32 (tolerance-bound rank
+    equality at quantized dtypes).
     """
     mesh, axes, n_dev = _resolve(mesh, axes)
     docs = jnp.asarray(docs)
@@ -206,7 +211,8 @@ def sharded_nn(docs, doc_ids, queries, k: int, *, mesh: Optional[Mesh] = None,
     docs, doc_ids, scale = _pad_corpus(docs, doc_ids, per * n_dev, scale)
 
     fn = _sharded_search_fn(mesh, axes, int(min(k, n)), chunk_eff,
-                            kdispatch.resolve(backend), scale is not None)
+                            kdispatch.resolve(backend), scale is not None,
+                            quant.resolve_int8_dot(int8_dot, docs.dtype))
     if scale is not None:
         scores, ids = fn(docs, doc_ids, scale, queries)
     else:
@@ -247,11 +253,17 @@ class DeviceShard:
                                            n + (-n) % self.chunk, qc.scale)
         self.device = device
         self.backend = kdispatch.resolve(backend)
+        # the int8-MXU-dot policy is resolved once per shard, so a shard's
+        # scoring rule never flips mid-deployment under an env change
+        self.int8_dot = quant.resolve_int8_dot(None, self.docs_dtype())
         self.n_docs = n
         self.docs = jax.device_put(docs, device)
         self.doc_ids = jax.device_put(doc_ids, device)
         self.scale = (None if scale is None
                       else jax.device_put(scale, device))
+
+    def docs_dtype(self):
+        return quant.storage_dtype(self.dtype)
 
     def __call__(self, queries, k: int) -> ShardTopK:
         q = jnp.asarray(queries, jnp.float32)
@@ -261,7 +273,7 @@ class DeviceShard:
             q = jax.device_put(q, self.device)
         scores, ids = scan_topk(self.docs, self.doc_ids, q, int(k),
                                 chunk=self.chunk, backend=self.backend,
-                                scale=self.scale)
+                                scale=self.scale, int8_dot=self.int8_dot)
         return ShardTopK(np.asarray(scores), np.asarray(ids))
 
 

@@ -1,0 +1,10 @@
+"""Fused per-wave cache-op kernels (batched insert scatter + top-k query).
+
+``ops`` holds the public single-launch entry points; ``cache_wave`` the raw
+Pallas kernel builder.  ``core.cache`` dispatches ``query_batched`` /
+``insert_batched`` / ``insert_query_batched`` here off the ref tier.
+"""
+
+from repro.kernels.cache_wave.ops import (wave_insert_query,  # noqa: F401
+                                          wave_insert_scatter,
+                                          wave_query_topk)

@@ -1,0 +1,201 @@
+"""Fused per-wave cache-op Pallas kernels: batched insert scatter + top-k.
+
+The last two per-wave ops of a ``BatchedEngine`` turn — the k_c-document
+insert into each missed session's cache and the top-k query over every
+session's cached docs — used to be vmaps of the scalar jnp ops.  Here they
+are ONE Pallas launch over the stacked ``CacheState``:
+
+  grid = (sessions, capacity tiles); for each session the kernel streams
+  the cache payload through VMEM once, and per tile
+
+    1. **insert blend** (when inserting): a one-hot scatter computed on the
+       MXU — ``hit[j, c] = (pos[j] == c)`` over the tile's column range,
+       new rows land via ``one_hotᵀ @ new_emb`` and everything else passes
+       through — writing the post-insert payload/ids/stamps/scales tile.
+       Write positions are *precomputed* by ``core.cache`` with the exact
+       jnp position logic of the scalar ``insert`` (dedup, append,
+       LRU/ball eviction), so the kernel is a pure scatter and supports
+       every eviction policy; a session whose ``do`` mask is False gets
+       all-dropped positions and passes through bit-identically (its LRU
+       stamps are untouched by construction).  The (psi, r_a) query-record
+       ring update — payload row, radius, scale at the ring slot — happens
+       on the first tile, gated by the per-session ``record`` flag.
+    2. **query scan** (when querying): the freshly blended tile is scored
+       against the session's psi (f32 dot + score-side scale, the shared
+       quant rule) and merged into a (1, k) VMEM carry — the same
+       on-chip cross-tile merge as the fused kNN scan, so the whole
+       per-session top-k costs one pass over the cache payload that the
+       insert already paid for.
+
+Empty/sentinel slots must surface in the *same order* the ref tier's
+stable ``lax.top_k`` yields (ascending slot index after all finite
+scores), so the merge uses finite sentinels instead of -inf: empty slots
+carry ``BIG_NEG``, the carry initializes to ``INIT`` (< BIG_NEG, so real
+empty slots outrank unfilled carry entries), and extracted candidates are
+knocked to ``KNOCK`` (< INIT).  argmax's first-match tie-break then walks
+empty slots in ascending order across tiles — exactly the ref order — and
+the wrapper maps keys <= BIG_NEG back to (-inf, id -1) on emit.
+
+Real scores are inner products of unit-norm embeddings times ~1.0 scales;
+anything below -1e37 is physically impossible, so the sentinel bands are
+unreachable by data.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+BIG_NEG = -1.0e38    # empty/sentinel slot key (extracted after all finite)
+INIT = -2.0e38       # carry initialization (never outranks an empty slot)
+KNOCK = -3.0e38      # already-extracted candidate
+
+
+def make_wave_kernel(*, tile_c: int, tiles: int, kc: int, k: int,
+                     with_insert: bool, with_query: bool):
+    """Build the fused wave kernel body for a static mode/shape set.
+
+    The ref operand list depends on the static flags; see
+    ``repro.kernels.cache_wave.ops`` for the exact ordering (inputs,
+    then outputs, then scratch).
+    """
+
+    def kernel(*refs):
+        it = iter(refs)
+        ints_ref = next(it)                       # SMEM (1, 8) int32
+        demb_ref = next(it)                       # (1, TILE_C, D) payload
+        dids_ref = next(it)                       # (1, TILE_C) int32
+        dscale_ref = next(it)                     # (1, TILE_C) f32
+        if with_insert:
+            dstamp_ref = next(it)                 # (1, TILE_C) int32
+            floats_ref = next(it)                 # SMEM (1, 8) f32
+            emb_ref = next(it)                    # (1, KC, D) payload
+            escale_ref = next(it)                 # (1, 1, KC) f32
+            nids_ref = next(it)                   # (1, 1, KC) int32
+            pos_ref = next(it)                    # (1, 1, KC) int32
+            psis_ref = next(it)                   # (1, 8, D) payload, row 0
+            qemb_ref = next(it)                   # (1, QMAX, D) payload
+            qrad_ref = next(it)                   # (1, QMAX) radius dtype
+            qsc_ref = next(it)                    # (1, QMAX) f32
+        if with_query:
+            psi_ref = next(it)                    # (1, 8, D) f32, row 0 live
+        if with_insert:
+            o_demb = next(it)
+            o_dids = next(it)
+            o_dstamp = next(it)
+            o_dscale = next(it)
+            o_qemb = next(it)
+            o_qrad = next(it)
+            o_qsc = next(it)
+        if with_query:
+            o_vals = next(it)                     # (1, k) f32
+            o_ids = next(it)                      # (1, k) int32
+            o_slots = next(it)                    # (1, k) int32
+            carry_v = next(it)                    # VMEM (1, k) f32
+            carry_i = next(it)                    # VMEM (1, k) int32
+            carry_s = next(it)                    # VMEM (1, k) int32
+
+        t = pl.program_id(1)
+        old_emb = demb_ref[0]                     # (TILE_C, D) payload
+        old_ids = dids_ref[...]                   # (1, TILE_C)
+        old_scale = dscale_ref[...]               # (1, TILE_C)
+
+        if with_insert:
+            rec = ints_ref[0, 1]
+            qslot = ints_ref[0, 2]
+            step_ins = ints_ref[0, 3]
+            base = t * tile_c
+            pos_c = pos_ref[0].reshape(kc, 1)     # (KC, 1)
+            col = base + jax.lax.broadcasted_iota(jnp.int32, (kc, tile_c), 1)
+            hit = pos_c == col                    # (KC, TILE_C) one-hot-ish
+            written = hit.any(axis=0, keepdims=True)          # (1, TILE_C)
+            # MXU scatter: exactly one hit per written column (positions are
+            # unique among kept docs), so the f32 matmul reproduces the row
+            # values exactly — including int8/bf16 payloads, whose values
+            # round-trip f32 without loss.
+            scat = jax.lax.dot_general(
+                hit.astype(jnp.float32), emb_ref[0].astype(jnp.float32),
+                (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)           # (TILE_C, D)
+            blended = jnp.where(written.reshape(tile_c, 1), scat,
+                                old_emb.astype(jnp.float32))
+            ids_c = nids_ref[0].reshape(kc, 1)
+            scat_ids = jnp.sum(
+                jnp.where(hit, jnp.broadcast_to(ids_c, hit.shape), 0),
+                axis=0, keepdims=True).astype(jnp.int32)
+            ids_bl = jnp.where(written, scat_ids, old_ids)
+            sc_c = escale_ref[0].reshape(kc, 1)
+            scat_sc = jnp.sum(
+                jnp.where(hit, jnp.broadcast_to(sc_c, hit.shape), 0.0),
+                axis=0, keepdims=True)
+            scale_bl = jnp.where(written, scat_sc, old_scale)
+            o_demb[0] = blended.astype(o_demb.dtype)
+            o_dids[...] = ids_bl
+            o_dscale[...] = scale_bl
+            o_dstamp[...] = jnp.where(written, step_ins, dstamp_ref[...])
+
+            @pl.when(t == 0)
+            def _ring():                          # (psi, r_a) record ring
+                o_qemb[0] = qemb_ref[0]
+                o_qrad[...] = qrad_ref[...]
+                o_qsc[...] = qsc_ref[...]
+
+                @pl.when(rec == 1)
+                def _write_slot():
+                    o_qemb[0, pl.ds(qslot, 1), :] = psis_ref[0, :1, :]
+                    o_qrad[0, pl.ds(qslot, 1)] = jnp.full(
+                        (1,), floats_ref[0, 0], o_qrad.dtype)
+                    o_qsc[0, pl.ds(qslot, 1)] = jnp.full(
+                        (1,), floats_ref[0, 1], jnp.float32)
+        else:
+            blended = old_emb.astype(jnp.float32)
+            ids_bl = old_ids
+            scale_bl = old_scale
+
+        if with_query:
+            @pl.when(t == 0)
+            def _init():
+                carry_v[...] = jnp.full(carry_v.shape, INIT, jnp.float32)
+                carry_i[...] = jnp.full(carry_i.shape, -1, jnp.int32)
+                carry_s[...] = jnp.full(carry_s.shape, -1, jnp.int32)
+
+            psi_row = psi_ref[0, :1, :]                        # (1, D)
+            scores = jax.lax.dot_general(
+                psi_row, blended, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)            # (1, TILE_C)
+            scores = scores * scale_bl
+            key = jnp.where(ids_bl < 0, BIG_NEG, scores)
+            slot_row = (t * tile_c
+                        + jax.lax.broadcasted_iota(jnp.int32, key.shape, 1))
+
+            cand_v = jnp.concatenate([carry_v[...], key], axis=1)
+            cand_i = jnp.concatenate([carry_i[...], ids_bl], axis=1)
+            cand_s = jnp.concatenate([carry_s[...], slot_row], axis=1)
+            col2 = jax.lax.broadcasted_iota(jnp.int32, cand_v.shape, 1)
+
+            def extract(j, s):
+                m = jnp.max(s, axis=1)
+                a = jnp.argmax(s, axis=1).astype(jnp.int32)
+                hitc = col2 == a[:, None]
+                pid = jnp.sum(jnp.where(hitc, cand_i, 0),
+                              axis=1).astype(jnp.int32)
+                pslot = jnp.sum(jnp.where(hitc, cand_s, 0),
+                                axis=1).astype(jnp.int32)
+                carry_v[:, pl.dslice(j, 1)] = m[:, None]
+                carry_i[:, pl.dslice(j, 1)] = pid[:, None]
+                carry_s[:, pl.dslice(j, 1)] = pslot[:, None]
+                return jnp.where(hitc, KNOCK, s)
+
+            jax.lax.fori_loop(0, k, extract, cand_v)
+
+            @pl.when(t == tiles - 1)
+            def _emit():
+                v = carry_v[...]
+                live = v > BIG_NEG
+                o_vals[...] = jnp.where(live, v, NEG_INF)
+                o_ids[...] = jnp.where(live, carry_i[...], -1)
+                o_slots[...] = carry_s[...]
+
+    return kernel

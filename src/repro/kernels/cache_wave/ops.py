@@ -1,0 +1,266 @@
+"""Public wrappers for the fused wave kernels: padding + launch assembly.
+
+Three entry points, all ONE ``pallas_call`` each (the launch-count contract
+of the kernel-tier serving wave: probe -> miss-search -> insert+query is
+exactly three launches):
+
+  * ``wave_insert_query``   — the serving path: batched insert scatter
+                              fused with the post-insert top-k query.
+  * ``wave_query_topk``     — query-only (a wave with no misses).
+  * ``wave_insert_scatter`` — insert-only (the ``insert_batched`` kernel
+                              tier when no query follows).
+
+The wrappers take plain stacked arrays (``core.cache`` orchestrates state
+assembly and precomputes write positions/ring slots with the scalar ops'
+exact jnp logic); they handle lane/sublane padding — feature dim to the
+lane multiple, cache capacity to a power-of-two tile, the k_c batch and
+query-record axes to the sublane multiple — and remap dropped write
+positions past the *padded* capacity so a dropped document can never land
+in a padded column and leak into the query scan.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.cache_wave.cache_wave import make_wave_kernel
+
+LANE = 128
+SUBLANE = 8
+
+
+def _pad_axis(x, axis, mult, value=0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def wave_tile(capacity: int) -> int:
+    """Capacity tile: one power of two <= 512 (whole cache when smaller)."""
+    pow2 = max(SUBLANE, 1 << max(capacity - 1, 1).bit_length())
+    return min(512, pow2)
+
+
+def _common_specs(tile_c, dp):
+    """(ints SMEM, doc payload, doc ids, doc scale) input specs."""
+    return [
+        pl.BlockSpec((1, 8), lambda i, t: (i, 0), memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, tile_c, dp), lambda i, t: (i, t, 0)),
+        pl.BlockSpec((1, tile_c), lambda i, t: (i, t)),
+        pl.BlockSpec((1, tile_c), lambda i, t: (i, t)),
+    ]
+
+
+def _launch(*, s, capacity, dp, kc, qmax, k, tile_c, store_dtype,
+            radius_dtype, with_insert, with_query, interpret, operands):
+    tiles = capacity // tile_c
+    in_specs = _common_specs(tile_c, dp)
+    out_specs, out_shape, scratch = [], [], []
+    if with_insert:
+        in_specs += [
+            pl.BlockSpec((1, tile_c), lambda i, t: (i, t)),        # stamps
+            pl.BlockSpec((1, 8), lambda i, t: (i, 0),
+                         memory_space=pltpu.SMEM),                 # floats
+            pl.BlockSpec((1, kc, dp), lambda i, t: (i, 0, 0)),     # new emb
+            pl.BlockSpec((1, 1, kc), lambda i, t: (i, 0, 0)),      # emb scale
+            pl.BlockSpec((1, 1, kc), lambda i, t: (i, 0, 0)),      # new ids
+            pl.BlockSpec((1, 1, kc), lambda i, t: (i, 0, 0)),      # positions
+            pl.BlockSpec((1, 8, dp), lambda i, t: (i, 0, 0)),      # psi store
+            pl.BlockSpec((1, qmax, dp), lambda i, t: (i, 0, 0)),   # q_emb
+            pl.BlockSpec((1, qmax), lambda i, t: (i, 0)),          # q_radius
+            pl.BlockSpec((1, qmax), lambda i, t: (i, 0)),          # q_scale
+        ]
+        out_specs += [
+            pl.BlockSpec((1, tile_c, dp), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, tile_c), lambda i, t: (i, t)),
+            pl.BlockSpec((1, tile_c), lambda i, t: (i, t)),
+            pl.BlockSpec((1, tile_c), lambda i, t: (i, t)),
+            pl.BlockSpec((1, qmax, dp), lambda i, t: (i, 0, 0)),
+            pl.BlockSpec((1, qmax), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, qmax), lambda i, t: (i, 0)),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((s, capacity, dp), store_dtype),
+            jax.ShapeDtypeStruct((s, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((s, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((s, capacity), jnp.float32),
+            jax.ShapeDtypeStruct((s, qmax, dp), store_dtype),
+            jax.ShapeDtypeStruct((s, qmax), radius_dtype),
+            jax.ShapeDtypeStruct((s, qmax), jnp.float32),
+        ]
+    if with_query:
+        in_specs += [
+            pl.BlockSpec((1, 8, dp), lambda i, t: (i, 0, 0)),      # psi f32
+        ]
+        out_specs += [
+            pl.BlockSpec((1, k), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, t: (i, 0)),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((s, k), jnp.float32),
+            jax.ShapeDtypeStruct((s, k), jnp.int32),
+            jax.ShapeDtypeStruct((s, k), jnp.int32),
+        ]
+        scratch += [
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.int32),
+            pltpu.VMEM((1, k), jnp.int32),
+        ]
+    kernel = make_wave_kernel(tile_c=tile_c, tiles=tiles, kc=kc, k=k,
+                              with_insert=with_insert, with_query=with_query)
+    # one pass over the (S, capacity, D) cache payload, read + (on insert)
+    # written back, plus the k_c batch and the tiny per-session blocks
+    itemsize = jnp.dtype(store_dtype).itemsize
+    payload = s * capacity * (dp * itemsize * (2 if with_insert else 1) + 12)
+    batch = s * kc * (dp * itemsize + 12) if with_insert else 0
+    cost = pl.CostEstimate(
+        flops=2 * s * capacity * dp * ((kc if with_insert else 0)
+                                       + (1 if with_query else 0)),
+        bytes_accessed=payload + batch, transcendentals=0)
+    return pl.pallas_call(
+        kernel,
+        grid=(s, tiles),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        cost_estimate=cost,
+        interpret=interpret,
+    )(*operands)
+
+
+def _pad_state(doc_emb, doc_ids, doc_scale, tile_c):
+    """Sentinel-pad the per-session cache arrays to the tile multiple."""
+    demb = _pad_axis(_pad_axis(doc_emb, 2, LANE), 1, tile_c)
+    dids = _pad_axis(doc_ids, 1, tile_c, value=-1)
+    dscale = _pad_axis(doc_scale.astype(jnp.float32), 1, tile_c, value=1.0)
+    return demb, dids, dscale
+
+
+def _psi_block(psi, dp):
+    """(S, D) -> (S, 8, Dp): sublane-friendly single-row block, row 0 live."""
+    p = _pad_axis(psi, 1, LANE)
+    return _pad_axis(p[:, None, :], 1, SUBLANE)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def wave_query_topk(doc_emb, doc_ids, doc_scale, psi, k: int,
+                    interpret: bool = False):
+    """Batched top-k over cached docs, one launch.  doc_emb (S, C, D)
+    payload (any storage dtype), doc_ids (S, C) with -1 empties, doc_scale
+    (S, C) f32, psi (S, D) f32.  Returns (vals (S, k) f32 — -inf past the
+    cached docs, ids (S, k) int32 — -1 there, slots (S, k) int32) with the
+    ref tier's exact slot ordering (stable top-k, empties ascending)."""
+    s, capacity, d = doc_emb.shape
+    assert k <= capacity, f"k={k} > capacity={capacity} (ref tier errors too)"
+    tile_c = wave_tile(capacity)
+    demb, dids, dscale = _pad_state(doc_emb, doc_ids, doc_scale, tile_c)
+    ints = jnp.zeros((s, 8), jnp.int32)
+    operands = (ints, demb, dids, dscale,
+                _psi_block(psi.astype(jnp.float32), d))
+    return _launch(
+        s=s, capacity=demb.shape[1], dp=demb.shape[2], kc=0, qmax=0, k=k,
+        tile_c=tile_c, store_dtype=doc_emb.dtype, radius_dtype=jnp.float32,
+        with_insert=False, with_query=True, interpret=interpret,
+        operands=operands)
+
+
+def _insert_operands(doc_emb, doc_ids, doc_stamp, doc_scale, q_emb, q_radius,
+                     q_scale, emb_q, emb_scale, new_ids, pos, psi_q,
+                     psi_scale, radius, rec, qslot, step_ins, tile_c):
+    s, capacity, d = doc_emb.shape
+    demb, dids, dscale = _pad_state(doc_emb, doc_ids, doc_scale, tile_c)
+    cpad = demb.shape[1]
+    dstamp = _pad_axis(doc_stamp, 1, tile_c)
+    # remap drop positions (== capacity) past the PADDED capacity: a padded
+    # column is a real column of the launch and a doc written there would
+    # leak into the query scan as a live id
+    pos = jnp.where(pos >= capacity, cpad, pos.astype(jnp.int32))
+    emb_p = _pad_axis(_pad_axis(emb_q, 2, LANE), 1, SUBLANE)
+    kc_p = emb_p.shape[1]
+    escale = _pad_axis(emb_scale.astype(jnp.float32), 1, SUBLANE,
+                       value=1.0)[:, None, :]
+    nids = _pad_axis(new_ids.astype(jnp.int32), 1, SUBLANE,
+                     value=-1)[:, None, :]
+    pos_p = _pad_axis(pos, 1, SUBLANE, value=cpad)[:, None, :]
+    qemb = _pad_axis(_pad_axis(q_emb, 2, LANE), 1, SUBLANE)
+    qmax_p = qemb.shape[1]
+    qrad = _pad_axis(q_radius, 1, SUBLANE, value=-jnp.inf)
+    qsc = _pad_axis(q_scale.astype(jnp.float32), 1, SUBLANE, value=1.0)
+    psis = _pad_axis(_pad_axis(psi_q, 1, LANE)[:, None, :], 1, SUBLANE)
+    ints = jnp.stack([
+        jnp.zeros((s,), jnp.int32),
+        jnp.asarray(rec, jnp.int32),
+        jnp.asarray(qslot, jnp.int32),
+        jnp.asarray(step_ins, jnp.int32),
+    ] + [jnp.zeros((s,), jnp.int32)] * 4, axis=1)
+    floats = jnp.stack([
+        jnp.asarray(radius, jnp.float32),
+        jnp.asarray(psi_scale, jnp.float32),
+    ] + [jnp.zeros((s,), jnp.float32)] * 6, axis=1)
+    operands = (ints, demb, dids, dscale, dstamp, floats, emb_p, escale,
+                nids, pos_p, psis, qemb, qrad, qsc)
+    dims = dict(s=s, capacity=cpad, dp=demb.shape[2], kc=kc_p, qmax=qmax_p,
+                tile_c=tile_c, store_dtype=doc_emb.dtype,
+                radius_dtype=q_radius.dtype)
+    return operands, dims, capacity, d
+
+
+def _unpad_insert_outs(outs, capacity, d, qmax):
+    demb, dids, dstamp, dscale, qemb, qrad, qsc = outs[:7]
+    return (demb[:, :capacity, :d], dids[:, :capacity], dstamp[:, :capacity],
+            dscale[:, :capacity], qemb[:, :qmax, :d], qrad[:, :qmax],
+            qsc[:, :qmax])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wave_insert_scatter(doc_emb, doc_ids, doc_stamp, doc_scale, q_emb,
+                        q_radius, q_scale, emb_q, emb_scale, new_ids, pos,
+                        psi_q, psi_scale, radius, rec, qslot, step_ins,
+                        interpret: bool = False):
+    """Batched insert scatter, one launch.  ``pos`` (S, kc) are precomputed
+    write positions (== capacity for dropped/masked docs); ``psi_q`` /
+    ``psi_scale`` / ``radius`` the per-session query record, written at ring
+    slot ``qslot`` when ``rec``; ``step_ins`` stamps the written rows.
+    Returns the 7 post-insert doc/q arrays (counters stay with the
+    caller)."""
+    tile_c = wave_tile(doc_emb.shape[1])
+    operands, dims, capacity, d = _insert_operands(
+        doc_emb, doc_ids, doc_stamp, doc_scale, q_emb, q_radius, q_scale,
+        emb_q, emb_scale, new_ids, pos, psi_q, psi_scale, radius, rec,
+        qslot, step_ins, tile_c)
+    outs = _launch(**dims, k=0, with_insert=True, with_query=False,
+                   interpret=interpret, operands=operands)
+    return _unpad_insert_outs(outs, capacity, d, q_emb.shape[1])
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def wave_insert_query(doc_emb, doc_ids, doc_stamp, doc_scale, q_emb,
+                      q_radius, q_scale, emb_q, emb_scale, new_ids, pos,
+                      psi_q, psi_scale, radius, rec, qslot, step_ins,
+                      psi, k: int, interpret: bool = False):
+    """The fused serving wave: insert scatter + post-insert top-k query in
+    ONE launch — the query scan scores each freshly blended tile, so the
+    whole wave costs a single pass over the cache payload.  Returns
+    (doc/q arrays as ``wave_insert_scatter``, (vals, ids, slots))."""
+    capacity = doc_emb.shape[1]
+    assert k <= capacity, f"k={k} > capacity={capacity} (ref tier errors too)"
+    tile_c = wave_tile(capacity)
+    operands, dims, capacity, d = _insert_operands(
+        doc_emb, doc_ids, doc_stamp, doc_scale, q_emb, q_radius, q_scale,
+        emb_q, emb_scale, new_ids, pos, psi_q, psi_scale, radius, rec,
+        qslot, step_ins, tile_c)
+    operands = operands + (_psi_block(psi.astype(jnp.float32), d),)
+    outs = _launch(**dims, k=k, with_insert=True, with_query=True,
+                   interpret=interpret, operands=operands)
+    state_outs = _unpad_insert_outs(outs, capacity, d, q_emb.shape[1])
+    return state_outs, tuple(outs[7:])

@@ -20,10 +20,12 @@ interpret, never silently to ref.
 
 The ``REPRO_KERNEL_BACKEND`` environment variable pins the default for a
 whole process (e.g. ``REPRO_KERNEL_BACKEND=interpret`` to smoke the kernel
-path in a CPU CI job without touching call sites).  Its sibling policy,
-``REPRO_CORPUS_DTYPE`` (``repro.core.quant``), picks the corpus/cache
-storage format the scan contract streams; CI runs the kernel gate across
-the full backend x dtype matrix.
+path in a CPU CI job without touching call sites).  Its sibling policies
+live in ``repro.core.quant``: ``REPRO_CORPUS_DTYPE`` picks the
+corpus/cache storage format the scan contract streams, and
+``REPRO_INT8_DOT`` switches int8 corpora to the native int8-MXU scoring
+rule; CI runs the kernel gate across the full backend x dtype matrix plus
+the int8-MXU cells.
 """
 
 from __future__ import annotations

@@ -3,13 +3,17 @@
 Handles backend dispatch (``repro.kernels.dispatch`` tiers: ref / interpret
 / compiled), quantized corpora (``repro.core.quant``: bf16 / int8 payloads
 with an optional per-document f32 ``scale`` applied score-side, identically
-in every tier), padding (corpus rows to the tile multiple with sentinel id
--1, feature dim to the lane multiple, batch to the sublane multiple — all
-score-preserving), the width-aware ``tile_n``/``k_eff`` autotuner (the VMEM
-budget is element-size dependent: an int8 tile holds 4x the documents of an
-fp32 tile), and sentinel-id hygiene: any -inf candidate (k > n_valid,
-fully-masked tiles) reports id -1 — never a padded-row position clipped
-onto a real document.
+in every tier), the native int8-MXU-dot tier (``int8_dot``: queries are
+quantized per-row to int8 here, in the wrapper, so ref and kernel tiers
+score the SAME payloads and stay bit-identical with each other), padding
+(corpus rows to the tile multiple with sentinel id -1, feature dim to the
+lane multiple, batch to the sublane multiple — all score-preserving), the
+width-aware ``tile_n``/``k_eff`` autotuner (the VMEM budget is element-size
+dependent AND double-buffered: the pipelined kernel keeps TWO tiles
+resident, so an int8 tile still holds ~4x the documents of an fp32 tile
+but every dtype's tile halves vs the single-buffered budget), and
+sentinel-id hygiene: any -inf candidate (k > n_valid, fully-masked tiles)
+reports id -1 — never a padded-row position clipped onto a real document.
 """
 
 from __future__ import annotations
@@ -19,6 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
 from repro.kernels import dispatch
 from repro.kernels.knn.knn import NEG_INF, knn_fused_topk, knn_tile_topk
 
@@ -41,13 +46,18 @@ def autotune_knn(n: int, d: int, b: int, k: int,
     """Pick (tile_n, k_eff) for a corpus of shape (n, d) and batch (b, k).
 
     tile_n: largest power of two (<= 4096, >= the sublane multiple, no
-    larger than the padded corpus) whose VMEM working set — the streamed
-    tile at ``itemsize`` bytes/element (4 fp32, 2 bf16, 1 int8), resident
-    f32 queries, and the f32 merge candidate pool — fits a ~6 MB budget
-    (half of VMEM, leaving room for double buffering).  Narrower corpus
-    elements buy bigger tiles: the streamed-tile term dominates at serving
-    shapes, so tile_n roughly doubles at bf16 and again at int8.  k_eff is
-    the per-tile candidate count of the two-stage scheme (min(k, tile_n)).
+    larger than the padded corpus) whose VMEM working set fits a ~6 MB
+    budget (half of VMEM).  The working set is sized for the
+    double-buffered DMA pipeline: TWO resident corpus tiles at
+    ``itemsize`` bytes/element (4 fp32, 2 bf16, 1 int8) plus their id and
+    scale columns — tile t+1 streams in while tile t is scored — plus the
+    resident f32 query block, the (b, k) carry pair, and the f32 merge
+    candidate pool.  Narrower corpus elements buy bigger tiles: the
+    streamed-tile term dominates at serving shapes, so tile_n roughly
+    doubles at bf16 and again at int8 (and halves across the board vs the
+    old single-buffered budget — the price of the prefetch overlap).
+    k_eff is the per-tile candidate count of the two-stage scheme
+    (min(k, tile_n)).
     """
     dp = d + (-d) % LANE
     bp = b + (-b) % SUBLANE
@@ -56,20 +66,32 @@ def autotune_knn(n: int, d: int, b: int, k: int,
     budget = 6 * 2 ** 20
 
     def working_set(t: int) -> int:
-        return itemsize * t * dp + 4 * (bp * dp + 3 * bp * (k + t))
+        # 2 payload tiles + 2 (id, scale) column pairs; query block; carry
+        # vals+ids; merge pool (vals, ids, col iota) over (b, k + t)
+        return (2 * t * (itemsize * dp + 8)
+                + 4 * bp * dp + 8 * bp * k + 12 * bp * (k + t))
 
     while tile > SUBLANE and working_set(tile) > budget:
         tile //= 2
     return tile, min(k, tile)
 
 
-def _ref_search(docs, doc_ids, queries, k, scale=None):
+def _ref_search(docs, doc_ids, queries, k, scale=None, int8_dot=False):
     """Oracle tier: one masked (B, N) score matrix + stable top-k.
 
-    Shares the scan contract's dequantization rule: payload cast to f32,
-    f32 dot, per-document ``scale`` applied to the *scores*.
+    Shares the scan contract's scoring rules: dequantize-first (payload
+    cast to f32, f32 dot, per-document ``scale`` applied to the *scores*)
+    or, under ``int8_dot``, the int8 x int8 -> int32 dot with both fp32
+    scales applied score-side in the kernel's association order.
     """
-    scores = queries.astype(jnp.float32) @ docs.astype(jnp.float32).T
+    if int8_dot:
+        qq = quant.quantize(queries, "int8")
+        acc = jax.lax.dot_general(
+            qq.data, docs, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        scores = acc.astype(jnp.float32) * qq.scale[:, None]
+    else:
+        scores = queries.astype(jnp.float32) @ docs.astype(jnp.float32).T
     if scale is not None:
         scores = scores * scale.astype(jnp.float32)[None, :]
     scores = jnp.where(doc_ids[None, :] < 0, NEG_INF, scores)
@@ -84,11 +106,12 @@ def _ref_search(docs, doc_ids, queries, k, scale=None):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "k", "tile_n", "interpret", "backend", "two_stage"))
+    "k", "tile_n", "interpret", "backend", "two_stage", "int8_dot"))
 def knn_search(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
                tile_n: int | None = None, interpret: bool | None = None,
                backend: str | None = None, two_stage: bool = False,
-               scale: jax.Array | None = None):
+               scale: jax.Array | None = None,
+               int8_dot: bool | None = None):
     """Top-k MIPS over the corpus. Returns (scores (B, k), ids (B, k)).
 
     docs: (N, D) transformed embeddings — fp32, or a quantized payload
@@ -102,13 +125,18 @@ def knn_search(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
     ``interpret`` is the legacy spelling of backend="interpret".
     ``two_stage`` opts out of the on-chip cross-tile merge (A/B baseline);
     both merge paths share the id-driven validity masking and the
-    score-side scale rule.
+    score-side scale rule.  ``int8_dot`` (None = the ``REPRO_INT8_DOT``
+    policy) switches an int8 corpus to the native int8 MXU dot — queries
+    quantized per-row here so every tier scores identical payloads;
+    ignored on fp32/bf16 corpora.
     """
     if backend is None and interpret is not None:
         backend = "interpret" if interpret else "compiled"
     be = dispatch.resolve(backend, kernel=True)
+    use_i8 = quant.resolve_int8_dot(int8_dot, docs.dtype)
     if be == "ref":
-        return _ref_search(docs, doc_ids, queries, k, scale=scale)
+        return _ref_search(docs, doc_ids, queries, k, scale=scale,
+                           int8_dot=use_i8)
 
     n, d = docs.shape
     b = queries.shape[0]
@@ -121,18 +149,28 @@ def knn_search(docs: jax.Array, doc_ids: jax.Array, queries: jax.Array, k: int,
 
     docs_p = _pad_to(_pad_to(docs, 1, LANE), 0, tile_n)
     ids_p = _pad_to(doc_ids.astype(jnp.int32), 0, tile_n, value=-1)
-    q_p = _pad_to(_pad_to(queries, 1, LANE), 0, SUBLANE)
+    if use_i8:
+        # quantize queries ONCE here — kernel and ref tiers then share the
+        # exact payload, keeping tier parity bit-for-bit under int8_dot
+        qq = quant.quantize(queries, "int8")
+        q_p = _pad_to(_pad_to(qq.data, 1, LANE), 0, SUBLANE)
+        qscale_p = _pad_to(qq.scale, 0, SUBLANE, value=1.0)
+    else:
+        q_p = _pad_to(_pad_to(queries, 1, LANE), 0, SUBLANE)
+        qscale_p = None
     scale_p = (None if scale is None else
                _pad_to(scale.astype(jnp.float32), 0, tile_n, value=1.0))
     interp = dispatch.interpret_flag(be)
 
     if not two_stage:
         vals, idx = knn_fused_topk(docs_p, ids_p, q_p, k, tile_n=tile_n,
-                                   interpret=interp, scale=scale_p)
+                                   interpret=interp, scale=scale_p,
+                                   q_scale=qscale_p, int8_dot=use_i8)
         return vals[:b], idx[:b]
 
     vals, idx = knn_tile_topk(docs_p, ids_p, q_p, k_eff, tile_n=tile_n,
-                              interpret=interp, scale=scale_p)
+                              interpret=interp, scale=scale_p,
+                              q_scale=qscale_p, int8_dot=use_i8)
     tiles = vals.shape[0]
     assert tiles * k_eff >= k, (
         f"two-stage candidate pool {tiles}x{k_eff} < k={k}; "

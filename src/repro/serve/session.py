@@ -10,15 +10,19 @@ with
   * one ``probe_batched`` over the wave's cache slices,
   * one ``router.search`` for the whole miss subset (the paper batches 216
     queries into FAISS for the same reason), scattered back per session,
-  * one ``insert_batched`` gated by per-session ``do``/``record`` masks,
-  * one ``query_batched`` for the answers.
+  * one ``insert_query_batched`` — the gated insert (per-session
+    ``do``/``record`` masks) FUSED with the answer query.
 
-Per session the cache ops are vmaps of the scalar ops, so a wave produces
-results bit-identical to running a sequential ``ConversationalEngine`` loop
-over the same turn stream (tested).  One semantic difference is inherent to
-batching: the router degrades per *call*, so a degraded back-end wave marks
-every miss in that wave degraded (and, like the sequential engine, skips
-their (psi, r_a) records so the caches are never poisoned).
+On the kernel dispatch tiers every one of those cache steps is a single
+Pallas launch, so a whole wave is exactly THREE kernel launches — probe ->
+miss-search -> insert+query — with no vmap-of-scalar fallback (a missless
+wave is two: probe -> query).  Per session the cache ops match the scalar
+ops bit for bit on every tier, so a wave produces results identical to
+running a sequential ``ConversationalEngine`` loop over the same turn
+stream (tested).  One semantic difference is inherent to batching: the
+router degrades per *call*, so a degraded back-end wave marks every miss
+in that wave degraded (and, like the sequential engine, skips their
+(psi, r_a) records so the caches are never poisoned).
 
 ``SessionManager`` puts an asynchronous front door on the engine: it maps
 external session keys to engine slots and micro-batches ``submit``-ed turns
@@ -36,9 +40,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quant
-from repro.core.cache import (BatchedMetricCache, CacheConfig, insert_batched,
-                              probe_batched, query_batched)
+from repro.core.cache import (BatchedMetricCache, CacheConfig,
+                              insert_query_batched, probe_batched,
+                              query_batched)
 from repro.core.embedding import distance_from_scores
+from repro.kernels import dispatch as kdispatch
 from repro.serve.engine import EngineTurn
 from repro.serve.router import MicroBatcher, ShardedRouter
 
@@ -52,12 +58,18 @@ class BatchedEngine:
                  *, dim: int, n_sessions: int, k: int = 10, k_c: int = 1000,
                  epsilon: float = 0.04, capacity: Optional[int] = None,
                  encoder: Optional[Callable] = None,
-                 dtype: Optional[str] = None):
+                 dtype: Optional[str] = None,
+                 backend: Optional[str] = None):
         self.router = router
         self.doc_embeddings = doc_embeddings
         self.n_sessions = n_sessions
         self.k, self.k_c, self.epsilon = k, k_c, epsilon
         self.encoder = encoder
+        # backend: the kernels.dispatch tier the wave's cache ops run on
+        # (None follows the process default — compiled Pallas on TPU, jnp
+        # ref elsewhere).  Resolved once so every wave of this engine rides
+        # one tier.
+        self.backend = kdispatch.resolve(backend)
         # dtype: stacked-cache storage format (quant.DTYPES; None follows
         # the REPRO_CORPUS_DTYPE policy).  S sessions' caches share one
         # device allocation, so a bf16 / int8 store cuts the resident
@@ -108,11 +120,12 @@ class BatchedEngine:
         psi = self.encoder(q) if self.encoder else q
 
         sub = self.cache.gather(pad_sids)
-        pr = probe_batched(sub, psi, self.epsilon)
+        pr = probe_batched(sub, psi, self.epsilon, backend=self.backend)
         n_queries = np.asarray(sub.n_queries)
         need = np.logical_or(n_queries == 0, ~np.asarray(pr.hit))
         need[wave:] = False
         degraded = False
+        inserted = False
         failed = np.zeros((bucket,), bool)
 
         if need.any():
@@ -138,11 +151,15 @@ class BatchedEngine:
                 rad[miss] = radii
                 do = jnp.asarray(need)
                 record = do if not degraded else jnp.zeros((bucket,), bool)
-                sub, dropped = insert_batched(
-                    sub, self.cache.cfg, psi, jnp.asarray(rad),
-                    jnp.asarray(new_emb), jnp.asarray(new_ids),
-                    do=do, record=record)
+                # insert + answer query FUSED: one kernel launch closes the
+                # wave (launch 3 of 3: probe -> miss-search -> insert+query)
+                (scores, _dists, ids, _slots), sub, dropped = \
+                    insert_query_batched(
+                        sub, self.cache.cfg, psi, jnp.asarray(rad),
+                        jnp.asarray(new_emb), jnp.asarray(new_ids), self.k,
+                        do=do, record=record, backend=self.backend)
                 self.cache.total_dropped += int(np.asarray(dropped).sum())
+                inserted = True
             except TimeoutError as e:
                 # total back-end failure: miss sessions fall back to their
                 # caches; one with an empty cache fails alone, like its
@@ -153,7 +170,9 @@ class BatchedEngine:
                     raise
                 outage = e
 
-        (scores, _dists, ids, _slots), sub = query_batched(sub, psi, self.k)
+        if not inserted:  # missless (or outage) wave: probe -> query
+            (scores, _dists, ids, _slots), sub = query_batched(
+                sub, psi, self.k, backend=self.backend)
         able = np.nonzero(~failed[:wave])[0]
         # write back only real, answerable rows (padded rows are shadows of
         # row 0; failed rows must stay exactly as they were, like a

@@ -1,12 +1,15 @@
 """Kernel/reference equivalence across awkward shapes — all in interpret
 mode, so CI exercises the Pallas code paths on CPU.
 
-Covers the contract the serving hot path now rides on: the fused kNN scan
-(on-chip cross-tile merge) and the session-batched cache probe must agree
-with the jnp ref tier in ranking — including non-multiple feature/batch
-dims, k > n_valid (the sentinel-id regression), single-doc corpora,
-sentinel-padded shard slices, ring-wrapped query records, and the
-composition of the kernel with ``shard_map``.
+Covers the contract the serving hot path now rides on: the double-buffered
+fused kNN scan (on-chip cross-tile merge), the native int8-MXU-dot tier,
+the session-batched cache probe, and the fused wave kernels backing
+``query_batched`` / ``insert_batched`` / ``insert_query_batched`` must
+agree with the jnp ref tier — including non-multiple feature/batch dims,
+k > n_valid (the sentinel-id regression), single-doc corpora,
+sentinel-padded shard slices, ring-wrapped query records, evict-while-
+append waves, per-session do/record gating, and the composition of the
+kernel with ``shard_map``.
 """
 
 import jax
@@ -14,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import cache as C
 from repro.core import quant
 from repro.core.cache import (CacheConfig, MetricCache, init_batched_cache,
                               probe_batched)
@@ -253,8 +257,12 @@ def test_quantized_tiers_agree_on_near_tied_scores(dt):
     q = jnp.asarray(_unit(rng, (3, 64)))
     qc = quant.quantize(jnp.asarray(docs), dt)
 
-    ref = knn_search(qc.data, ids, q, 16, backend="ref", scale=qc.scale)
-    ker = knn_search(qc.data, ids, q, 16, backend="interpret", scale=qc.scale)
+    # pin the dequantize-first rule: this test documents ITS score
+    # tolerance (the int8-MXU tier has its own tests + overlap gate)
+    ref = knn_search(qc.data, ids, q, 16, backend="ref", scale=qc.scale,
+                     int8_dot=False)
+    ker = knn_search(qc.data, ids, q, 16, backend="interpret",
+                     scale=qc.scale, int8_dot=False)
     _assert_same(ker, ref)
     fp = knn_search(jnp.asarray(docs), ids, q, 16, backend="ref")
     np.testing.assert_allclose(np.asarray(ref[0]), np.asarray(fp[0]),
@@ -400,3 +408,310 @@ def test_autotune_widens_tiles_for_narrow_dtypes():
     t8, _ = autotune_knn(1 << 20, 768, 16, 100, 1)
     assert t32 < t16 <= t8
     assert t16 >= 2 * t32
+
+
+def test_autotune_budgets_two_resident_tiles_64k():
+    """Regression pin (ISSUE 5): the pipelined kernel keeps TWO corpus
+    tiles resident (prefetch + in-use), so the chosen tiles at the 64K x
+    768 serving geometry are exactly half the single-buffered era's — and
+    the double-buffered footprint of the NEXT power of two must overflow
+    the ~6 MB budget (else the tuner left bandwidth on the table)."""
+    budget = 6 * 2 ** 20
+    expect = {4: 512, 2: 1024, 1: 2048}
+    for itemsize, tile in expect.items():
+        got, k_eff = autotune_knn(65536, 768, 16, 100, itemsize)
+        assert got == tile, f"itemsize {itemsize}: tile {got} != {tile}"
+        assert k_eff == 100
+        # 2x tile + id/scale columns + query block + carry + merge pool
+        def footprint(t):
+            return (2 * t * (itemsize * 768 + 8)
+                    + 4 * 16 * 768 + 8 * 16 * 100 + 12 * 16 * (100 + t))
+        assert footprint(tile) <= budget < footprint(2 * tile)
+
+
+# ------------------------------------------------ int8 MXU dots (ISSUE 5)
+def test_int8_dot_tiers_agree_and_hold_overlap_floor():
+    """The native int8 x int8 -> int32 scoring rule: ref and kernel tiers
+    must agree EXACTLY with each other (they share the rule and the
+    wrapper-quantized query payload), and the ranking vs the fp32 corpus
+    must hold the established int8 floor (>= 0.90 top-k overlap)."""
+    rng = np.random.default_rng(31)
+    docs = jnp.asarray(_unit(rng, (2048, 128)))
+    ids = jnp.arange(2048, dtype=jnp.int32)
+    q = jnp.asarray(_unit(rng, (4, 128)))
+    qc = quant.quantize(docs, "int8")
+    ref = knn_search(qc.data, ids, q, 10, backend="ref", scale=qc.scale,
+                     int8_dot=True)
+    ker = knn_search(qc.data, ids, q, 10, backend="interpret",
+                     scale=qc.scale, int8_dot=True)
+    _assert_same(ker, ref)
+    fp = knn_search(docs, ids, q, 10, backend="ref")
+    overlap = np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / 10
+        for a, b in zip(np.asarray(ref[1]), np.asarray(fp[1]))])
+    assert overlap >= 0.90, f"int8-dot overlap vs fp32 = {overlap:.3f}"
+    # the two-stage A/B baseline shares the rule
+    two = knn_search(qc.data, ids, q, 10, tile_n=256, backend="interpret",
+                     two_stage=True, scale=qc.scale, int8_dot=True)
+    _assert_same(two, ref)
+
+
+def test_int8_dot_sentinel_hygiene_and_k_exceeds_n_valid():
+    """Interior sentinels and k > n_valid under the int8-MXU rule: an
+    all-zero int8 payload accumulates to 0 — the id-driven masking must
+    still keep it out, and -inf positions must carry id -1."""
+    rng = np.random.default_rng(32)
+    real = _unit(rng, (8, 16))
+    real[:4] = -np.abs(real[:4])
+    real = real / np.linalg.norm(real, axis=1, keepdims=True)
+    docs = np.concatenate([real[:4], np.zeros((8, 16), np.float32), real[4:]])
+    ids = np.concatenate(
+        [np.arange(4), np.full(8, -1), np.arange(4, 8)]).astype(np.int32)
+    q = jnp.asarray(_unit(rng, (2, 16)))
+    qc = quant.quantize(jnp.asarray(docs), "int8")
+    for backend in ("ref", "interpret"):
+        s, i = knn_search(qc.data, jnp.asarray(ids), q, 8, tile_n=8,
+                          backend=backend, scale=qc.scale, int8_dot=True)
+        assert (np.asarray(i) >= 0).all()
+        s, i = knn_search(qc.data[:4], jnp.asarray(ids[:4]), q, 9,
+                          backend=backend, scale=qc.scale[:4], int8_dot=True)
+        s, i = np.asarray(s), np.asarray(i)
+        assert np.isneginf(s[:, 4:]).all()
+        np.testing.assert_array_equal(i[:, 4:], -1)
+
+
+def test_int8_dot_ignored_on_wide_corpora():
+    """int8_dot on an fp32/bf16 payload is a no-op, never an error — the
+    results are bitwise the dequantize-first answer."""
+    docs, ids, q = _corpus(33, 200, 32, 3)
+    a = knn_search(docs, ids, q, 7, backend="interpret", int8_dot=True)
+    b = knn_search(docs, ids, q, 7, backend="interpret", int8_dot=False)
+    _assert_same(a, b, rtol=0, atol=0)
+
+
+def test_int8_dot_streaming_ref_tier_matches_kernel():
+    """``scan_topk``'s ref tier (the chunked streaming scan) implements the
+    int8-dot rule too — same query quantization, same score association —
+    so tier parity holds through the one-scan contract, including on a
+    sentinel-padded shard slice."""
+    rng = np.random.default_rng(34)
+    docs = np.concatenate(
+        [_unit(rng, (96, 24)), np.zeros((32, 24), np.float32)])
+    ids = np.concatenate([np.arange(96), np.full(32, -1)]).astype(np.int32)
+    q = jnp.asarray(_unit(rng, (4, 24)))
+    qc = quant.quantize(jnp.asarray(docs), "int8")
+    ref = scan_topk(qc.data, jnp.asarray(ids), q, 10, chunk=32,
+                    backend="ref", scale=qc.scale, int8_dot=True)
+    ker = scan_topk(qc.data, jnp.asarray(ids), q, 10, chunk=32,
+                    backend="interpret", scale=qc.scale, int8_dot=True)
+    _assert_same(ker, ref)
+
+
+def test_int8_dot_sharded_nn_matches_single_device():
+    """int8-dot composes with shard_map: queries quantize identically per
+    shard, so the merged top-k equals the single-device int8-dot answer."""
+    from repro.dist.retrieval import sharded_nn
+    rng = np.random.default_rng(35)
+    docs = jnp.asarray(_unit(rng, (1000, 32)))
+    ids = jnp.arange(1000, dtype=jnp.int32)
+    q = jnp.asarray(_unit(rng, (3, 32)))
+    qc = quant.quantize(docs, "int8")
+    single = knn_search(qc.data, ids, q, 25, backend="ref", scale=qc.scale,
+                        int8_dot=True)
+    res = sharded_nn(qc.data, ids, q, 25, chunk=64, backend="interpret",
+                     scale=qc.scale, int8_dot=True)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(single[1]))
+    np.testing.assert_allclose(np.asarray(res.scores),
+                               np.asarray(single[0]), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------- fused wave kernels (ISSUE 5)
+def _assert_states_equal(ref, got, msg=""):
+    for name, a, b in zip(C.CacheState._fields, ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{msg} leaf {name}")
+
+
+def _assert_query_equal(out_r, out_k):
+    np.testing.assert_allclose(np.asarray(out_r[0]), np.asarray(out_k[0]),
+                               rtol=1e-5, atol=1e-5)          # scores
+    np.testing.assert_allclose(np.asarray(out_r[1]), np.asarray(out_k[1]),
+                               rtol=1e-5, atol=1e-5)          # distances
+    np.testing.assert_array_equal(np.asarray(out_r[2]),
+                                  np.asarray(out_k[2]))       # ids
+    np.testing.assert_array_equal(np.asarray(out_r[3]),
+                                  np.asarray(out_k[3]))       # slots
+
+
+def _filled_states(rng, cfg, s, fills):
+    """Two identical stacked states with per-session fill levels."""
+    state = C.init_batched_cache(cfg, s)
+    for sess, n in enumerate(fills):
+        if n == 0:
+            continue
+        one = jax.tree_util.tree_map(lambda x: x[sess], state)
+        one, _ = C.insert(one, cfg, jnp.asarray(_unit(rng, (cfg.dim,))),
+                          jnp.asarray(0.8, jnp.float32),
+                          jnp.asarray(_unit(rng, (n, cfg.dim))),
+                          jnp.arange(n, dtype=jnp.int32))
+        state = jax.tree_util.tree_map(
+            lambda full, o: full.at[sess].set(o), state, one)
+    return state
+
+
+@pytest.mark.parametrize("dt", quant.DTYPES)
+def test_wave_query_batched_matches_vmap_ref(dt):
+    """Empty, partial, and full sessions in one wave, k > n_cached for
+    most: the fused launch must match vmap(query) bitwise — ids, SLOT
+    ORDER (stable top-k: empty slots ascend), LRU-stamp touches, step."""
+    rng = np.random.default_rng(41)
+    cfg = CacheConfig(capacity=24, dim=13, max_queries=4, store_dtype=dt)
+    s = 4
+    state = _filled_states(rng, cfg, s, [0, 3, 10, 24])
+    psi = jnp.asarray(_unit(rng, (s, cfg.dim)))
+    out_r, ref = C.query_batched(state, psi, 12, backend="ref")
+    out_k, ker = C.query_batched(state, psi, 12, backend="interpret")
+    _assert_query_equal(out_r, out_k)
+    _assert_states_equal(ref, ker, f"query dt={dt}")
+    # empty session answers all sentinels
+    assert np.isneginf(np.asarray(out_k[0])[0]).all()
+    assert (np.asarray(out_k[2])[0] == -1).all()
+
+
+@pytest.mark.parametrize("dt", quant.DTYPES)
+@pytest.mark.parametrize("eviction", ["none", "lru"])
+def test_wave_insert_batched_matches_vmap_ref(dt, eviction):
+    """Evict-while-append waves with per-session do/record masks and
+    ring-wrapping query records: every post-insert state leaf must equal
+    the vmap-of-scalar ref tier bitwise."""
+    rng = np.random.default_rng(42)
+    cfg = CacheConfig(capacity=16, dim=11, max_queries=3, store_dtype=dt,
+                      eviction=eviction)
+    s, kc = 5, 7
+    ref = _filled_states(rng, cfg, s, [0, 4, 12, 16, 14])
+    ker = ref
+    for wave in range(5):                   # 5 waves: records wrap the ring
+        psi = jnp.asarray(_unit(rng, (s, cfg.dim)))
+        emb = jnp.asarray(_unit(rng, (s * kc, cfg.dim)).reshape(s, kc, -1))
+        ids = jnp.asarray(rng.integers(0, 50, (s, kc)).astype(np.int32))
+        radius = jnp.asarray(rng.uniform(0.4, 1.0, s).astype(np.float32))
+        do = jnp.asarray(rng.integers(0, 2, s).astype(bool))
+        rec = jnp.asarray(rng.integers(0, 2, s).astype(bool))
+        ref, dr = C.insert_batched(ref, cfg, psi, radius, emb, ids,
+                                   do=do, record=rec, backend="ref")
+        ker, dk = C.insert_batched(ker, cfg, psi, radius, emb, ids,
+                                   do=do, record=rec, backend="interpret")
+        np.testing.assert_array_equal(np.asarray(dr), np.asarray(dk))
+        _assert_states_equal(ref, ker, f"insert {dt}/{eviction} wave {wave}")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dt", quant.DTYPES)
+def test_wave_insert_query_fused_matches_ref_sequence(dt):
+    """The fused insert+query launch over mixed hit/miss waves must equal
+    the ref-tier insert_batched -> query_batched sequence: query results
+    (incl. slot order), dropped counts, and every state leaf."""
+    rng = np.random.default_rng(43)
+    cfg = CacheConfig(capacity=24, dim=12, max_queries=4, store_dtype=dt)
+    s, kc, k = 5, 7, 6
+    ref = C.init_batched_cache(cfg, s)
+    ker = C.init_batched_cache(cfg, s)
+    for wave in range(6):
+        psi = jnp.asarray(_unit(rng, (s, cfg.dim)))
+        emb = jnp.asarray(_unit(rng, (s * kc, cfg.dim)).reshape(s, kc, -1))
+        ids = jnp.asarray(rng.integers(0, 40, (s, kc)).astype(np.int32))
+        radius = jnp.asarray(rng.uniform(0.4, 1.0, s).astype(np.float32))
+        do = (jnp.ones((s,), bool) if wave == 0 else
+              jnp.asarray(rng.integers(0, 2, s).astype(bool)))
+        rec = jnp.asarray(rng.integers(0, 2, s).astype(bool))
+        out_r, ref, dr = C.insert_query_batched(
+            ref, cfg, psi, radius, emb, ids, k, do=do, record=rec,
+            backend="ref")
+        out_k, ker, dk = C.insert_query_batched(
+            ker, cfg, psi, radius, emb, ids, k, do=do, record=rec,
+            backend="interpret")
+        np.testing.assert_array_equal(np.asarray(dr), np.asarray(dk))
+        _assert_query_equal(out_r, out_k)
+        _assert_states_equal(ref, ker, f"fused dt={dt} wave {wave}")
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_wave_insert_do_false_leaves_lru_stamps_untouched(backend):
+    """Regression (ISSUE 5 sweep): a do=False session's LRU stamps must
+    survive an insert wave bitwise on BOTH tiers — the kernel scatter
+    routes its positions to the drop sentinel, so nothing is written (a
+    stamp refresh would shield the session's docs from LRU eviction)."""
+    rng = np.random.default_rng(44)
+    cfg = CacheConfig(capacity=16, dim=9, max_queries=4, eviction="lru")
+    s, kc = 3, 5
+    state = _filled_states(rng, cfg, s, [8, 8, 8])
+    # distinct stamps via a query pass
+    psi = jnp.asarray(_unit(rng, (s, cfg.dim)))
+    _, state = C.query_batched(state, psi, 4, backend="ref")
+    before = jax.tree_util.tree_map(np.asarray, state)
+    do = jnp.asarray([True, False, True])
+    state, _ = C.insert_batched(
+        state, cfg, psi, jnp.asarray(np.full(s, 0.6, np.float32)),
+        jnp.asarray(_unit(rng, (s * kc, cfg.dim)).reshape(s, kc, -1)),
+        jnp.asarray(rng.integers(100, 200, (s, kc)).astype(np.int32)),
+        do=do, backend=backend)
+    after = jax.tree_util.tree_map(np.asarray, state)
+    for name, a, b in zip(C.CacheState._fields, before, after):
+        np.testing.assert_array_equal(
+            a[1], b[1], err_msg=f"{backend}: do=False leaf {name} changed")
+    assert int(after.step[0]) == int(before.step[0]) + 1   # do=True advanced
+
+
+@pytest.mark.slow
+def test_batched_engine_wave_is_three_launches_and_turn_identical(
+        monkeypatch):
+    """Acceptance (ISSUE 5): on the kernel tier a BatchedEngine wave with
+    misses executes as EXACTLY three Pallas launches — probe ->
+    miss-search -> fused insert+query, no vmap-of-scalar fallback — and
+    its turns match the ref-tier engine on the same router."""
+    import jax.experimental.pallas as plmod
+
+    from repro.dist.retrieval import DeviceShard
+    from repro.serve.router import ShardedRouter
+    from repro.serve.session import BatchedEngine
+
+    rng = np.random.default_rng(45)
+    n, d, s = 600, 67, 4
+    docs = _unit(rng, (n, d))
+    # transformed geometry: unit rows are their own transform with an extra
+    # zero column; keep it simple and treat docs as already transformed
+    shard = DeviceShard(jnp.asarray(docs), jnp.arange(n, dtype=jnp.int32),
+                        backend="interpret")
+    # interpret-mode scans are slow; keep the deadline far away so the
+    # router never degrades (degradation would skip the insert launch)
+    router = ShardedRouter([shard], deadline_s=120.0)
+    kw = dict(dim=d, n_sessions=s, k=9, k_c=53, capacity=160, epsilon=0.04)
+    eng_k = BatchedEngine(router, docs, backend="interpret", **kw)
+    eng_r = BatchedEngine(router, docs, backend="ref", **kw)
+
+    calls = {"n": 0}
+    orig = plmod.pallas_call
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(plmod, "pallas_call", counting)
+
+    base = _unit(rng, (s, d))
+    for turn in range(3):
+        queries = base + 0.02 * turn * _unit(rng, (s, d))
+        queries = queries / np.linalg.norm(queries, axis=1, keepdims=True)
+        qs = [jnp.asarray(q) for q in queries]
+        calls["n"] = 0
+        turns_k = eng_k.answer_batch(list(range(s)), qs)
+        if turn == 0:
+            # compulsory-miss wave, fresh shapes: every kernel-tier cache
+            # op traces exactly one pallas_call — 3 launches total
+            assert calls["n"] == 3, f"wave traced {calls['n']} launches"
+        turns_r = eng_r.answer_batch(list(range(s)), qs)
+        for tk, tr in zip(turns_k, turns_r):
+            assert tk.hit == tr.hit and tk.degraded == tr.degraded
+            np.testing.assert_array_equal(tk.ids, tr.ids)
+            np.testing.assert_allclose(tk.scores, tr.scores,
+                                       rtol=1e-5, atol=1e-5)

@@ -139,7 +139,11 @@ def test_conversational_searcher_over_quantized_index(dt):
     from repro.core.conversation import ConversationalSearcher
     rng = np.random.default_rng(5)
     raw = jnp.asarray(rng.standard_normal((400, 32)).astype(np.float32))
-    idx = MetricIndex(raw, dtype=dt, use_kernel=False)
+    # pin the dequantize-first rule: the cache always scores that way, so
+    # under REPRO_INT8_DOT=1 an int8-MXU index may legally swap near-ties
+    # vs the cache — this test is about cache payload corruption, not the
+    # scoring-rule drift (gated elsewhere)
+    idx = MetricIndex(raw, dtype=dt, use_kernel=False, int8_dot=False)
     searcher = ConversationalSearcher(idx, k=10, k_c=50, epsilon=0.04)
     assert searcher.cache.cfg.store_dtype == dt
     searcher.start_conversation()
