@@ -22,6 +22,11 @@ hard while wall-clock gates are deliberately loose):
     (RANK_OVERLAP_FLOOR at bench time).
   * int8 effective scan bandwidth: >= MIN_INT8_BW_X (absolute — this is
     the ISSUE 4 acceptance floor, machine-independent by construction).
+  * wave_moved_bytes (the zero-copy property of the pre-padded cache
+    layout, jaxpr-derived so machine-independent): must exist, must stay
+    <= MAX_WAVE_MOVED_FRAC of one stacked payload, and must not grow
+    beyond WAVE_MOVED_GROWTH x the committed baseline.  Wave latency
+    (best-of-N) gates loosely like the other wall-clock columns.
 
 Usage (CI):
     python benchmarks/check_regression.py \
@@ -39,6 +44,9 @@ HIT_RATE_TOL = 0.15
 SPEEDUP_KEEP_FRAC = 0.3
 QPS_KEEP_FRAC = 0.15
 MIN_INT8_BW_X = 1.8
+MAX_WAVE_MOVED_FRAC = 0.5   # non-launch traffic per wave vs ONE payload
+WAVE_MOVED_GROWTH = 1.05    # jaxpr-derived, so near-exact across machines
+WAVE_LATENCY_KEEP_FRAC = 0.15
 
 
 def _load(path: str) -> dict:
@@ -71,6 +79,37 @@ def check_serve(current: dict, baseline: dict, errors: list) -> None:
         errors.append(
             f"serve: batched qps {cur_row['batched_qps']:.1f} below "
             f"{QPS_KEEP_FRAC:.0%} of baseline {base_row['batched_qps']:.1f}")
+    # zero-copy columns (pre-padded cache layout): their ABSENCE is itself
+    # a failure — losing the columns would silently drop the gate
+    for key in ("wave_moved_bytes", "wave_payload_bytes",
+                "batched_wave_best_s"):
+        if key not in cur_row:
+            errors.append(f"serve: zero-copy column {key} missing from "
+                          "current smoke record")
+    if "wave_moved_bytes" in cur_row and "wave_payload_bytes" in cur_row:
+        moved, payload = (cur_row["wave_moved_bytes"],
+                          cur_row["wave_payload_bytes"])
+        # absolute property: non-launch wave traffic well under one stacked
+        # payload copy (the pre-padding layout moved >= 2x payload per wave)
+        if moved > MAX_WAVE_MOVED_FRAC * payload:
+            errors.append(
+                f"serve: wave_moved_bytes {moved} exceeds "
+                f"{MAX_WAVE_MOVED_FRAC:.0%} of the stacked payload "
+                f"{payload} — a zero-copy regression")
+        # relative: jaxpr-derived bytes are machine-independent, so any
+        # growth beyond rounding is a real new copy on the hot path
+        base_moved = base_row.get("wave_moved_bytes")
+        if base_moved and moved > WAVE_MOVED_GROWTH * base_moved:
+            errors.append(
+                f"serve: wave_moved_bytes grew {base_moved} -> {moved} "
+                f"(> {WAVE_MOVED_GROWTH}x baseline)")
+    base_wave = base_row.get("batched_wave_best_s")
+    cur_wave = cur_row.get("batched_wave_best_s")
+    if base_wave and cur_wave and cur_wave > base_wave / WAVE_LATENCY_KEEP_FRAC:
+        errors.append(
+            f"serve: best wave latency {cur_wave * 1e3:.1f}ms beyond "
+            f"{1 / WAVE_LATENCY_KEEP_FRAC:.1f}x baseline "
+            f"{base_wave * 1e3:.1f}ms")
 
 
 def check_kernels(current: dict, baseline: dict, errors: list) -> None:

@@ -28,7 +28,11 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quant
+from repro.core.cache import (CacheConfig, init_batched_cache,
+                              insert_query_batched, probe_batched)
 from repro.core.metric_index import MetricIndex
+from repro.kernels import jaxpr_util
 from repro.data.conversations import WorldConfig, make_world
 from repro.serve.engine import ConversationalEngine
 from repro.serve.router import ShardAnswer, ShardedRouter
@@ -96,11 +100,41 @@ def bench_batched(index, streams, *, n_shards, k, k_c, capacity, dtype=None):
     for s in sids:
         engine.start_session(s)
     t0 = time.perf_counter()
+    wave_best = float("inf")
     for t in range(turns):
+        t1 = time.perf_counter()
         engine.answer_batch(sids, [streams[s][t] for s in sids])
+        wave_best = min(wave_best, time.perf_counter() - t1)
     elapsed = time.perf_counter() - t0
     hits = float(np.mean([engine.hit_rate(s) for s in sids]))
-    return elapsed, len(streams) * turns, hits
+    return elapsed, len(streams) * turns, hits, wave_best
+
+
+def wave_traffic(*, n_sessions, dim, capacity, k_c, k, dtype=None):
+    """Machine-independent zero-copy metric: trace the kernel-tier cache
+    ops of one full miss wave (batched probe + fused insert+query) and sum
+    the bytes produced by every NON-Pallas equation — the per-wave overhead
+    traffic around the launches.  The pre-padding layout copied the whole
+    stacked payload in and out of each launch (>= 2x payload per wave);
+    the pre-padded layout moves only wave-sized operands.  Returns
+    (wave_moved_bytes, wave_payload_bytes) where the payload is one stacked
+    (S, phys_capacity, phys_dim) doc allocation."""
+    cfg = CacheConfig(capacity=capacity, dim=dim,
+                      store_dtype=quant.resolve_dtype(dtype))
+    state = init_batched_cache(cfg, n_sessions)
+    psi = jnp.zeros((n_sessions, dim), jnp.float32)
+    ids = jnp.zeros((n_sessions, k_c), jnp.int32)
+    emb = jnp.zeros((n_sessions, k_c, dim), jnp.float32)
+    radius = jnp.zeros((n_sessions,), jnp.float32)
+    moved = jaxpr_util.trace_moved_bytes(
+        lambda st, p: probe_batched(st, p, cfg.epsilon, backend="interpret",
+                                    max_queries=cfg.max_queries),
+        state, psi)
+    moved += jaxpr_util.trace_moved_bytes(
+        lambda st, p, r, e, i: insert_query_batched(
+            st, cfg, p, r, e, i, k=k, backend="interpret"),
+        state, psi, radius, emb, ids)
+    return int(moved), int(state.doc_emb.nbytes)
 
 
 def run(session_counts=(64, 128, 256, 512), *, turns=4, n_shards=4,
@@ -118,16 +152,20 @@ def run(session_counts=(64, 128, 256, 512), *, turns=4, n_shards=4,
         streams = _streams(world, index, n_sessions)
         # best-of-N: wall-clock on a shared host is noisy; the minimum is
         # the least-contended estimate of each path's real cost
-        t_seq, t_bat = float("inf"), float("inf")
+        t_seq, t_bat, t_wave = float("inf"), float("inf"), float("inf")
         for _ in range(repeats):
             t, n_q, hit_seq = bench_sequential(
                 index, streams, n_shards=n_shards, k=k, k_c=k_c,
                 capacity=capacity, dtype=dtype)
             t_seq = min(t_seq, t)
-            t, _, hit_bat = bench_batched(
+            t, _, hit_bat, wave_best = bench_batched(
                 index, streams, n_shards=n_shards, k=k, k_c=k_c,
                 capacity=capacity, dtype=dtype)
             t_bat = min(t_bat, t)
+            t_wave = min(t_wave, wave_best)
+        moved, payload = wave_traffic(
+            n_sessions=n_sessions, dim=index.dim, capacity=capacity,
+            k_c=k_c, k=k, dtype=dtype)
         row = {
             "sessions": n_sessions, "turns": int(streams[0].shape[0]),
             "queries": n_q,
@@ -135,11 +173,19 @@ def run(session_counts=(64, 128, 256, 512), *, turns=4, n_shards=4,
             "sequential_qps": n_q / t_seq, "batched_qps": n_q / t_bat,
             "speedup": t_seq / max(t_bat, 1e-12),
             "hit_rate_sequential": hit_seq, "hit_rate_batched": hit_bat,
+            # zero-copy columns: best-of-N single-wave latency, and the
+            # traced non-launch traffic of one miss wave vs one stacked
+            # payload (machine-independent; gated by check_regression)
+            "batched_wave_best_s": t_wave,
+            "wave_moved_bytes": moved,
+            "wave_payload_bytes": payload,
         }
         rows.append(row)
         print(f"sessions={n_sessions:4d}  sequential {row['sequential_qps']:8.1f} q/s"
               f"  batched {row['batched_qps']:8.1f} q/s"
-              f"  speedup {row['speedup']:.1f}x")
+              f"  speedup {row['speedup']:.1f}x"
+              f"  wave {1e3 * t_wave:.1f}ms"
+              f"  moved/payload {moved / max(payload, 1):.2f}x")
     record = {"n_docs": index.n_docs, "dim": world.cfg.dim, "k": k,
               "k_c": k_c, "n_shards": n_shards, "dtype": index.dtype,
               "rows": rows, "timestamp": time.time()}

@@ -5,22 +5,30 @@ updated with pure ops, so every operation jits, shards, and fuses with the
 query encoder on-device.  A thin host wrapper (``MetricCache``) provides the
 stateful convenience API used by the conversational client.
 
-State layout (all pre-allocated; ``-1`` ids / ``-inf`` radii mark empty slots):
-  doc_emb   (capacity, dim)   cached transformed document embeddings, stored
+State layout (all pre-allocated; ``-1`` ids / ``-inf`` radii mark empty
+slots).  The leaves are allocated at the PHYSICAL extents (``Cp`` =
+``cfg.phys_capacity``, ``Dp`` = ``cfg.phys_dim``, ``Qp`` =
+``cfg.phys_max_queries`` — capacity rounded to the wave-kernel tile
+multiple, dim to the lane multiple, the ring to the sublane multiple; see
+``repro.core.layout``) so every kernel launch is zero-copy; the ops mask
+on the *logical* extents in ``CacheConfig`` and padded slots permanently
+hold the empty-slot sentinels:
+  doc_emb   (Cp, Dp)          cached transformed document embeddings, stored
                               in ``cfg.store_dtype`` (fp32 / bf16 / int8 —
                               ``repro.core.quant`` formats)
-  doc_ids   (capacity,)       global document ids, -1 = empty
-  doc_stamp (capacity,)       last-use step (for the beyond-paper LRU policy)
-  q_emb     (max_queries, dim) embeddings of queries answered by the back-end
+  doc_ids   (Cp,)             global document ids, -1 = empty
+  doc_stamp (Cp,)             last-use step (for the beyond-paper LRU policy)
+  q_emb     (Qp, Dp)          embeddings of queries answered by the back-end
                               (same storage format as doc_emb)
-  q_radius  (max_queries,)    r_a — distance of the k_c-th doc retrieved
+  q_radius  (Qp,)             r_a — distance of the k_c-th doc retrieved
   n_docs, step                scalars
   n_queries                   total queries ever recorded (monotone); the
-                              query records live in a ring, so the number of
+                              query records live in a ring over the LOGICAL
+                              ``max_queries`` slots, so the number of
                               *valid* records is min(n_queries, max_queries)
-  doc_scale (capacity,)       f32 per-document score multipliers (all ones
+  doc_scale (Cp,)             f32 per-document score multipliers (all ones
                               unless store_dtype == "int8")
-  q_scale   (max_queries,)    f32 per-record score multipliers, ditto
+  q_scale   (Qp,)             f32 per-record score multipliers, ditto
 
 Quantized storage rides the same dequantization rule as the corpus scan
 (``quant.scale_scores``): probe / query / insert cast the payload to f32,
@@ -55,6 +63,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import embedding as emb
+from repro.core import layout
 from repro.core import quant
 from repro.kernels import dispatch as kdispatch
 
@@ -78,30 +87,65 @@ class CacheState(NamedTuple):
 
 
 class CacheConfig(NamedTuple):
-    capacity: int
-    dim: int
-    max_queries: int = 64
+    capacity: int              # logical doc-slot count (mask extent)
+    dim: int                   # logical feature width
+    max_queries: int = 64      # logical query-record ring length
     epsilon: float = 0.04      # the paper's tuned default (Fig. 4)
     dedup: bool = True
     eviction: str = "none"     # "none" (paper) | "lru" | "ball" (beyond-paper)
     dtype: object = jnp.float32
     store_dtype: str = "fp32"  # quant.DTYPES embedding storage format
 
+    # Physical allocation extents (derived, so the config stays a hashable
+    # static-jit argument): the CacheState leaves are allocated at these at
+    # init and every kernel launch rides them unchanged — zero-copy.
+    @property
+    def phys_capacity(self) -> int:
+        return layout.phys_capacity(self.capacity)
+
+    @property
+    def phys_dim(self) -> int:
+        return layout.phys_dim(self.dim)
+
+    @property
+    def phys_max_queries(self) -> int:
+        return layout.phys_queries(self.max_queries)
+
 
 def init_cache(cfg: CacheConfig) -> CacheState:
+    """Allocate one session's cache at the PHYSICAL extents.
+
+    Padded doc columns / ring slots are written with their empty-slot
+    sentinels exactly once, here: id -1, scale 1.0, radius -inf, stamp 0,
+    zero payload.  Every op masks on the logical extents (or relies on
+    those sentinels), and dropped insert positions route past
+    ``phys_capacity``, so no launch ever rewrites a padded slot — LRU
+    stamps of padded columns stay 0 forever (regression-tested).
+    """
     store = quant.storage_dtype(cfg.store_dtype)
+    cp, dp, qp = cfg.phys_capacity, cfg.phys_dim, cfg.phys_max_queries
     return CacheState(
-        doc_emb=jnp.zeros((cfg.capacity, cfg.dim), store),
-        doc_ids=jnp.full((cfg.capacity,), -1, jnp.int32),
-        doc_stamp=jnp.zeros((cfg.capacity,), jnp.int32),
-        q_emb=jnp.zeros((cfg.max_queries, cfg.dim), store),
-        q_radius=jnp.full((cfg.max_queries,), -jnp.inf, cfg.dtype),
+        doc_emb=jnp.zeros((cp, dp), store),
+        doc_ids=jnp.full((cp,), -1, jnp.int32),
+        doc_stamp=jnp.zeros((cp,), jnp.int32),
+        q_emb=jnp.zeros((qp, dp), store),
+        q_radius=jnp.full((qp,), -jnp.inf, cfg.dtype),
         n_docs=jnp.zeros((), jnp.int32),
         n_queries=jnp.zeros((), jnp.int32),
         step=jnp.zeros((), jnp.int32),
-        doc_scale=jnp.ones((cfg.capacity,), jnp.float32),
-        q_scale=jnp.ones((cfg.max_queries,), jnp.float32),
+        doc_scale=jnp.ones((cp,), jnp.float32),
+        q_scale=jnp.ones((qp,), jnp.float32),
     )
+
+
+def _pad_features(x: jax.Array, width: int) -> jax.Array:
+    """Zero-pad the trailing feature axis to the state's physical width —
+    a per-wave O(rows * dim) copy, never O(capacity).  No-op (and no
+    traced pad) when already aligned."""
+    short = width - x.shape[-1]
+    if short == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, short)])
 
 
 def _store_rows(x: jax.Array, store_dtype: str):
@@ -120,16 +164,25 @@ class ProbeResult(NamedTuple):
     nearest_q: jax.Array  # arg of that max (int32), -1 if cache has no queries
 
 
-@functools.partial(jax.jit, static_argnames=())
-def probe(state: CacheState, psi: jax.Array, epsilon: jax.Array | float) -> ProbeResult:
+@functools.partial(jax.jit, static_argnames=("max_queries",))
+def probe(state: CacheState, psi: jax.Array, epsilon: jax.Array | float,
+          max_queries: int | None = None) -> ProbeResult:
     """The LowQuality test (Eq. 3/4). Cost: O(n_queries * dim) — a few us.
 
     Returns hit=False when the cache holds no queries (compulsory miss).
+    ``max_queries`` is the LOGICAL ring length from ``CacheConfig``; ring
+    slots past it are allocation padding and masked out.  When None (a
+    caller without the config) the padded slots' permanent -inf radius
+    sentinels keep them out of the argmax anyway.
     """
-    valid = jnp.arange(state.q_emb.shape[0]) < state.n_queries
+    n_slots = state.q_emb.shape[0]
+    mq = n_slots if max_queries is None else max_queries
+    idx = jnp.arange(n_slots)
+    valid = jnp.logical_and(idx < state.n_queries, idx < mq)
+    psi_p = _pad_features(psi, state.q_emb.shape[-1])
     scores = quant.scale_scores(
-        state.q_emb.astype(jnp.float32) @ psi, state.q_scale)
-    dist = emb.distance_from_scores(scores)                      # (max_queries,)
+        state.q_emb.astype(jnp.float32) @ psi_p, state.q_scale)
+    dist = emb.distance_from_scores(scores)                      # (Qp,)
     r_hat = jnp.where(valid, state.q_radius - dist, -jnp.inf)
     best = jnp.argmax(r_hat)
     best_r = r_hat[best]
@@ -143,10 +196,14 @@ def query(state: CacheState, psi: jax.Array, k: int):
 
     A cache holding fewer than k docs pads the answer with (id -1, score
     -inf) sentinel slots; callers must drop those rows before ranking-metric
-    or result use (``serve.engine`` does).
+    or result use (``serve.engine`` does).  The scan runs over the physical
+    columns; padded columns carry id -1 so they score -inf, and the stable
+    top-k (ascending empty slots) can never reach them while k <= the
+    logical capacity.
     """
+    psi_p = _pad_features(psi, state.doc_emb.shape[-1])
     scores = quant.scale_scores(
-        state.doc_emb.astype(jnp.float32) @ psi, state.doc_scale)  # (capacity,)
+        state.doc_emb.astype(jnp.float32) @ psi_p, state.doc_scale)  # (Cp,)
     scores = jnp.where(state.doc_ids >= 0, scores, -jnp.inf)
     top_s, slots = jax.lax.top_k(scores, k)
     ids = state.doc_ids[slots]
@@ -169,7 +226,8 @@ def _dedup_mask(new_ids: jax.Array, existing_ids: jax.Array) -> jax.Array:
 
 
 def _evicting_positions(state: CacheState, capacity: int, keep: jax.Array,
-                        evict_key: jax.Array, evictable: jax.Array):
+                        evict_key: jax.Array, evictable: jax.Array,
+                        drop: int):
     """Write positions for kept docs under an eviction policy.
 
     Appends fill the empty tail ([n_docs, capacity)); once the tail is
@@ -180,6 +238,12 @@ def _evicting_positions(state: CacheState, capacity: int, keep: jax.Array,
     eviction target of the same call — the write sets are disjoint by
     construction.  Kept docs beyond what appends + evictions can place are
     dropped and counted, never collapsed onto one slot.
+
+    ``capacity`` is the LOGICAL capacity (occupied slots only ever live in
+    [0, capacity)); ``drop`` is the drop sentinel, the PHYSICAL capacity —
+    a dropped doc must route past the allocation padding, because a padded
+    column is a real column of a kernel launch and a doc written there
+    would leak into the query scan as a live id.
     """
     rank = jnp.cumsum(keep) - 1                       # dense rank among kept
     append_pos = state.n_docs + rank
@@ -188,7 +252,7 @@ def _evicting_positions(state: CacheState, capacity: int, keep: jax.Array,
     evict_pos = evict_order[jnp.clip(evict_rank, 0, capacity - 1)]
     pos = jnp.where(append_pos < capacity, append_pos, evict_pos)
     placeable = evict_rank < evictable.sum()          # appends are < 0 here
-    pos = jnp.where(jnp.logical_and(keep, placeable), pos, capacity)
+    pos = jnp.where(jnp.logical_and(keep, placeable), pos, drop)
     dropped = jnp.logical_and(keep, ~placeable).sum().astype(jnp.int32)
     return pos, dropped
 
@@ -200,10 +264,13 @@ def _insert_positions(state: CacheState, cfg: CacheConfig, psi: jax.Array,
     THE position logic of the scalar ``insert`` — dedup, append, and the
     eviction policies — factored out so the kernel-tier batched scatter
     (``kernels.cache_wave``) reuses it verbatim and stays bit-identical to
-    the scalar path by construction.  ``pos[j] == cfg.capacity`` marks a
-    dropped (or non-kept) document.
+    the scalar path by construction.  ``pos[j] == cfg.phys_capacity``
+    marks a dropped (or non-kept) document: the drop sentinel routes past
+    the PHYSICAL capacity so it can neither land in a real column nor in
+    an allocation-padding column of the pre-padded state.
     """
     kc = new_ids.shape[0]
+    drop = cfg.phys_capacity
     keep = _dedup_mask(new_ids, state.doc_ids) if cfg.dedup else jnp.ones((kc,), bool)
     keep = jnp.logical_and(keep, new_ids >= 0)
 
@@ -220,14 +287,15 @@ def _insert_positions(state: CacheState, cfg: CacheConfig, psi: jax.Array,
             key = state.doc_stamp.astype(state.q_radius.dtype)
         else:
             # Beyond-paper: overflow evicts docs farthest from the query.
+            psi_p = _pad_features(psi, state.doc_emb.shape[-1])
             key = -emb.distance_from_scores(quant.scale_scores(
-                state.doc_emb.astype(jnp.float32) @ psi, state.doc_scale))
+                state.doc_emb.astype(jnp.float32) @ psi_p, state.doc_scale))
         pos, dropped = _evicting_positions(state, cfg.capacity, keep, key,
-                                           evictable)
+                                           evictable, drop)
     else:  # paper-faithful: append, drop overflow (and report it)
         append_pos = state.n_docs + jnp.cumsum(keep) - 1
         fits = append_pos < cfg.capacity
-        pos = jnp.where(jnp.logical_and(keep, fits), append_pos, cfg.capacity)
+        pos = jnp.where(jnp.logical_and(keep, fits), append_pos, drop)
         dropped = jnp.logical_and(keep, ~fits).sum().astype(jnp.int32)
     new_n = jnp.minimum(state.n_docs + keep.sum(), cfg.capacity)
     return keep, pos, dropped, new_n
@@ -250,19 +318,25 @@ def insert(state: CacheState, cfg: CacheConfig, psi: jax.Array, radius: jax.Arra
     """
     _keep, pos, dropped, new_n = _insert_positions(state, cfg, psi, new_ids)
 
-    # embeddings enter the cache in the storage format: quantize the batch
-    # (identity at fp32) and scatter payload + per-row scale together
+    # embeddings enter the cache in the storage format: quantize the LOGICAL
+    # rows (identity at fp32; int8 scales come from the real features), then
+    # zero-pad to the physical width — the zero pad equals the init pad in
+    # every storage format — and scatter payload + per-row scale together
     emb_q, emb_scale = _store_rows(new_emb, cfg.store_dtype)
+    emb_q = _pad_features(emb_q, state.doc_emb.shape[-1])
     doc_emb = state.doc_emb.at[pos].set(emb_q, mode="drop")
     doc_scale = state.doc_scale.at[pos].set(emb_scale, mode="drop")
     doc_ids = state.doc_ids.at[pos].set(new_ids, mode="drop")
     doc_stamp = state.doc_stamp.at[pos].set(state.step, mode="drop")
 
-    # query records live in a ring: slot = total-count mod max_queries, so a
-    # full cache overwrites the *oldest* record, not the most recent one
+    # query records live in a ring over the LOGICAL max_queries slots:
+    # slot = total-count mod max_queries, so a full cache overwrites the
+    # *oldest* record, not the most recent one — and the padded ring slots
+    # past cfg.max_queries are never written
     rec = jnp.asarray(record, bool)
-    qslot = jnp.mod(state.n_queries, state.q_emb.shape[0])
+    qslot = jnp.mod(state.n_queries, cfg.max_queries)
     psi_q, psi_scale = _store_rows(psi, cfg.store_dtype)
+    psi_q = _pad_features(psi_q, state.q_emb.shape[-1])
     q_emb = state.q_emb.at[qslot].set(
         jnp.where(rec, psi_q, state.q_emb[qslot]))
     q_scale = state.q_scale.at[qslot].set(
@@ -318,11 +392,11 @@ class MetricCache:
             st = self.state
             hit, r_hat, idx = cache_probe(
                 st.q_emb, psi, st.q_radius, st.n_queries, eps,
-                q_scale=st.q_scale,
+                q_scale=st.q_scale, max_queries=self.cfg.max_queries,
                 interpret=(None if be == "ref"
                            else kdispatch.interpret_flag(be)))
             return ProbeResult(hit, r_hat, idx)
-        return probe(self.state, psi, eps)
+        return probe(self.state, psi, eps, max_queries=self.cfg.max_queries)
 
     def query(self, psi, k: int):
         out, self.state = query(self.state, psi, k)
@@ -372,10 +446,11 @@ def reset_sessions(state: CacheState, cfg: CacheConfig,
                                f, s), fresh, state)
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
+@functools.partial(jax.jit, static_argnames=("backend", "max_queries"))
 def probe_batched(state: CacheState, psi: jax.Array,
                   epsilon: jax.Array | float,
-                  backend: str | None = None) -> ProbeResult:
+                  backend: str | None = None,
+                  max_queries: int | None = None) -> ProbeResult:
     """One LowQuality test per session: psi is (S, dim).
 
     Dispatches on the kernel backend tier (``repro.kernels.dispatch``):
@@ -383,15 +458,19 @@ def probe_batched(state: CacheState, psi: jax.Array,
     the whole wave as ONE fused Pallas launch over the stacked state
     (``cache_probe_batched``), ring-buffer validity included.  Both tiers
     agree bitwise on hit/nearest_q and to float tolerance on r_hat.
+    ``max_queries`` is the LOGICAL ring length from ``CacheConfig`` (the
+    ring of a pre-padded state is longer; its padded slots hold -inf
+    radius sentinels, so omitting it stays correct, just unmasked).
     """
     be = kdispatch.resolve(backend)
     if be == "ref":
-        return ProbeResult(*jax.vmap(probe, in_axes=(0, 0, None))(
+        one = functools.partial(probe, max_queries=max_queries)
+        return ProbeResult(*jax.vmap(one, in_axes=(0, 0, None))(
             state, psi, epsilon))
     from repro.kernels.cache_probe.ops import cache_probe_batched
     hit, r_hat, idx = cache_probe_batched(
         state.q_emb, psi, state.q_radius, state.n_queries, epsilon,
-        q_scale=state.q_scale,
+        q_scale=state.q_scale, max_queries=max_queries,
         interpret=kdispatch.interpret_flag(be))
     return ProbeResult(hit, r_hat, idx)
 
@@ -465,12 +544,12 @@ def _insert_batched_kernel(state, cfg, psi, radius, new_emb, new_ids, do,
     from repro.kernels.cache_wave import ops as wave_ops
     _keep, pos, dropped, new_n = jax.vmap(
         lambda s, p, i: _insert_positions(s, cfg, p, i))(state, psi, new_ids)
-    pos = jnp.where(do[:, None], pos, cfg.capacity)
+    pos = jnp.where(do[:, None], pos, cfg.phys_capacity)
     dropped = jnp.where(do, dropped, 0)
     rec_g = jnp.logical_and(do, record)
     emb_q, emb_scale = _store_rows(new_emb, cfg.store_dtype)
     psi_q, psi_scale = _store_rows(psi, cfg.store_dtype)
-    qslot = jnp.mod(state.n_queries, state.q_emb.shape[1])
+    qslot = jnp.mod(state.n_queries, cfg.max_queries)
     args = (state.doc_emb, state.doc_ids, state.doc_stamp, state.doc_scale,
             state.q_emb, state.q_radius, state.q_scale,
             emb_q, emb_scale, new_ids, pos, psi_q, psi_scale,
@@ -596,7 +675,8 @@ class BatchedMetricCache:
 
     def probe(self, psi, epsilon=None, backend=None) -> ProbeResult:
         eps = self.cfg.epsilon if epsilon is None else epsilon
-        return probe_batched(self.state, psi, eps, backend=backend)
+        return probe_batched(self.state, psi, eps, backend=backend,
+                             max_queries=self.cfg.max_queries)
 
     def query(self, psi, k: int, backend=None):
         out, self.state = query_batched(self.state, psi, k, backend=backend)

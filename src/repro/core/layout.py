@@ -1,0 +1,55 @@
+"""Physical cache-state layout: the TPU tiling extents, in one place.
+
+The metric cache's logical extents (``capacity``, ``dim``, ``max_queries``
+in ``CacheConfig``) are whatever the serving configuration asks for; the
+Pallas wave kernels want lane-aligned feature dims and tile-aligned
+capacities.  Since ISSUE 6 the ``CacheState`` leaves are allocated at the
+*physical* extents once, at ``init_cache`` time — capacity rounded up to
+the ``cache_wave`` tile multiple, feature dim to the lane multiple, the
+query-record ring to the sublane multiple — so every kernel launch is
+zero-copy: no per-launch pad of the stacked ``(S, capacity, dim)`` payload
+in, no slice back out.  Only per-wave inputs (the k_c new documents, the
+wave's queries) still get padded, which is O(wave), not O(capacity).
+
+This module owns the rounding rules so ``core.cache`` (allocation +
+masking) and ``kernels.cache_wave`` / ``kernels.cache_probe`` (launch
+geometry) cannot drift apart.  Padded slots carry the empty-slot
+sentinels (doc id -1, scale 1.0, radius -inf, stamp 0, zero payload) and
+the ops mask on the *logical* extents, so the pads are invisible to every
+result.
+"""
+
+from __future__ import annotations
+
+LANE = 128      # TPU lane multiple: feature (last) axis of VMEM blocks
+SUBLANE = 8     # TPU sublane multiple: second-to-last axis
+
+__all__ = ["LANE", "SUBLANE", "round_up", "wave_tile", "phys_capacity",
+           "phys_dim", "phys_queries"]
+
+
+def round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def wave_tile(capacity: int) -> int:
+    """Capacity tile of the wave kernels: one power of two <= 512 (the
+    whole cache when smaller)."""
+    pow2 = max(SUBLANE, 1 << max(capacity - 1, 1).bit_length())
+    return min(512, pow2)
+
+
+def phys_capacity(capacity: int) -> int:
+    """Physical doc-slot count: capacity rounded to the wave tile multiple
+    (== the next power of two for capacities up to 512)."""
+    return round_up(capacity, wave_tile(capacity))
+
+
+def phys_dim(dim: int) -> int:
+    """Physical feature width: dim rounded to the lane multiple."""
+    return round_up(dim, LANE)
+
+
+def phys_queries(max_queries: int) -> int:
+    """Physical query-record ring length: rounded to the sublane multiple."""
+    return round_up(max_queries, SUBLANE)

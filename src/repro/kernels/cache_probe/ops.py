@@ -1,14 +1,22 @@
-"""Public wrappers: pad/mask handling + hit decision for the probe kernels.
+"""Public wrappers: mask handling + hit decision for the probe kernels.
 
 ``cache_probe`` is the single-session entry point; ``cache_probe_batched``
 fuses a whole serving wave — S sessions' LowQuality tests — into one
 Pallas launch over the stacked cache state.  Both apply the ring-buffer
-validity mask (a slot is live iff its index < n_queries; n_queries counts
-*total* records, so a wrapped ring keeps every slot live) by folding -inf
-into the radius operand, both accept quantized record storage (the
-``q_scale`` per-record score multipliers of ``repro.core.quant``; padded
-slots get scale 1), and both return nearest_q = -1 for a cache that holds
-no query records.
+validity mask (a slot is live iff its index < min(n_queries, the LOGICAL
+``max_queries``); n_queries counts *total* records, so a wrapped ring
+keeps every logical slot live) by folding -inf into the radius operand,
+both accept quantized record storage (the ``q_scale`` per-record score
+multipliers of ``repro.core.quant``; padded slots get scale 1), and both
+return nearest_q = -1 for a cache that holds no query records.
+
+Pre-padded layout: states from ``init_cache`` arrive with the ring
+already at the sublane multiple and the feature dim at the lane multiple,
+so the shape-static padding branches below trace to NOTHING for them —
+zero-copy launches.  The branches stay for direct callers with arbitrary
+shapes (the public contract); they are O(ring), not O(doc capacity),
+either way.  Only the per-wave psi rows are always assembled fresh,
+which is O(wave).
 """
 
 from __future__ import annotations
@@ -18,37 +26,47 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.layout import LANE, SUBLANE
 from repro.kernels import dispatch
 from repro.kernels.cache_probe.cache_probe import probe_rhat, probe_rhat_batched
 
-LANE = 128
-SUBLANE = 8
+__all__ = ["LANE", "SUBLANE", "cache_probe", "cache_probe_batched"]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "max_queries"))
 def cache_probe(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
                 n_queries: jax.Array, epsilon,
                 q_scale: jax.Array | None = None,
-                interpret: bool | None = None):
+                interpret: bool | None = None,
+                max_queries: int | None = None):
     """Fused LowQuality test. q_emb (Qmax, D) record payload (any storage
     dtype); psi (D,) f32; radius (Qmax,); n_queries scalar; q_scale (Qmax,)
-    f32 per-record score multipliers (None = unquantized). Returns (hit,
-    best_r_hat, best_idx)."""
+    f32 per-record score multipliers (None = unquantized); ``max_queries``
+    the LOGICAL ring length when the state is pre-padded (None = every
+    slot logical).  Returns (hit, best_r_hat, best_idx)."""
     if interpret is None:
         interpret = dispatch.interpret_flag(dispatch.resolve(None, kernel=True))
     qmax, d = q_emb.shape
     dpad = (-d) % LANE
     qpad = (-qmax) % SUBLANE
-    q_emb_p = jnp.pad(q_emb, ((0, qpad), (0, dpad)))
-    psi_p = jnp.pad(psi[None], ((0, SUBLANE - 1), (0, dpad)))
+    if dpad or qpad:  # not taken for pre-padded states: zero traced pads
+        q_emb = jnp.pad(q_emb, ((0, qpad), (0, dpad)))
+        radius = jnp.pad(radius, (0, qpad), constant_values=-jnp.inf)
+        if q_scale is not None:
+            q_scale = jnp.pad(q_scale.astype(jnp.float32), (0, qpad),
+                              constant_values=1.0)
+    # psi arrives at the LOGICAL dim; pad it to the state's physical width
+    # (O(wave), and a no-op for callers passing pre-padded rows)
+    psi_p = jnp.pad(psi[None],
+                    ((0, SUBLANE - 1), (0, d + dpad - psi.shape[0])))
     if q_scale is None:
-        q_scale = jnp.ones((qmax,), jnp.float32)
-    scale_p = jnp.pad(q_scale.astype(jnp.float32), (0, qpad),
-                      constant_values=1.0)
-    valid = jnp.arange(qmax + qpad) < n_queries
-    radius_m = jnp.where(valid, jnp.pad(radius, (0, qpad),
-                                        constant_values=-jnp.inf), -jnp.inf)
-    r_hat = probe_rhat(q_emb_p, psi_p, radius_m[:, None], scale_p[:, None],
+        q_scale = jnp.ones((qmax + qpad,), jnp.float32)
+    mq = qmax if max_queries is None else max_queries
+    idx = jnp.arange(qmax + qpad)
+    valid = jnp.logical_and(idx < n_queries, idx < mq)
+    radius_m = jnp.where(valid, radius, -jnp.inf)
+    r_hat = probe_rhat(q_emb, psi_p, radius_m[:, None],
+                       q_scale.astype(jnp.float32)[:, None],
                        interpret=interpret)[:, 0]
     r_hat = jnp.where(valid, r_hat, -jnp.inf)
     best = jnp.argmax(r_hat)
@@ -56,18 +74,22 @@ def cache_probe(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
     return hit, r_hat[best], jnp.where(n_queries > 0, best, -1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "max_queries"))
 def cache_probe_batched(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
                         n_queries: jax.Array, epsilon,
                         q_scale: jax.Array | None = None,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None,
+                        max_queries: int | None = None):
     """One fused LowQuality test per session, one kernel launch total.
 
     q_emb (S, Qmax, D) stacked record payload (any storage dtype); psi
     (S, D) f32 — the wave's queries; radius (S, Qmax); n_queries (S,)
     total-record counters (ring semantics: valid slots are those with
-    index < n_queries); q_scale (S, Qmax) f32 per-record score multipliers
-    (None = unquantized).  Returns (hit (S,) bool, best_r_hat (S,) f32,
+    index < min(n_queries, max_queries)); q_scale (S, Qmax) f32 per-record
+    score multipliers (None = unquantized); ``max_queries`` the LOGICAL
+    ring length from ``CacheConfig`` for pre-padded states (None = every
+    slot logical; padded slots' -inf radius sentinels keep them out of
+    the argmax regardless).  Returns (hit (S,) bool, best_r_hat (S,) f32,
     best_idx (S,) int32 with -1 for empty caches).
     """
     if interpret is None:
@@ -75,24 +97,30 @@ def cache_probe_batched(q_emb: jax.Array, psi: jax.Array, radius: jax.Array,
     s, qmax, d = q_emb.shape
     dpad = (-d) % LANE
     qpad = (-qmax) % SUBLANE
-    q_emb_p = jnp.pad(q_emb, ((0, 0), (0, qpad), (0, dpad)))
+    if dpad or qpad:  # not taken for pre-padded states: zero traced pads
+        q_emb = jnp.pad(q_emb, ((0, 0), (0, qpad), (0, dpad)))
+        radius = jnp.pad(radius, ((0, 0), (0, qpad)),
+                         constant_values=-jnp.inf)
+        if q_scale is not None:
+            q_scale = jnp.pad(q_scale.astype(jnp.float32),
+                              ((0, 0), (0, qpad)), constant_values=1.0)
+    # psi arrives at the LOGICAL dim; pad it to the state's physical width
+    # (O(wave), and a no-op for callers passing pre-padded rows)
     psi_p = jnp.broadcast_to(
-        jnp.pad(psi, ((0, 0), (0, dpad)))[:, None, :],
+        jnp.pad(psi, ((0, 0), (0, d + dpad - psi.shape[1])))[:, None, :],
         (s, SUBLANE, d + dpad))
     if q_scale is None:
-        q_scale = jnp.ones((s, qmax), jnp.float32)
-    scale_p = jnp.pad(q_scale.astype(jnp.float32), ((0, 0), (0, qpad)),
-                      constant_values=1.0)
+        q_scale = jnp.ones((s, qmax + qpad), jnp.float32)
     # ring-aware validity: n_queries is the monotone total, so a wrapped
-    # ring (n_queries >= Qmax) keeps every slot live
-    valid = jnp.arange(qmax + qpad)[None, :] < n_queries[:, None]   # (S, Qp)
-    radius_m = jnp.where(
-        valid,
-        jnp.pad(radius, ((0, 0), (0, qpad)), constant_values=-jnp.inf),
-        -jnp.inf)
-    r_hat = probe_rhat_batched(q_emb_p, psi_p, radius_m[..., None],
-                               scale_p[..., None],
-                               interpret=interpret)[..., 0]         # (S, Qp)
+    # ring (n_queries >= max_queries) keeps every LOGICAL slot live;
+    # allocation-padding slots past max_queries stay dead forever
+    mq = qmax if max_queries is None else max_queries
+    idx = jnp.arange(qmax + qpad)[None, :]
+    valid = jnp.logical_and(idx < n_queries[:, None], idx < mq)  # (S, Qp)
+    radius_m = jnp.where(valid, radius, -jnp.inf)
+    r_hat = probe_rhat_batched(q_emb, psi_p, radius_m[..., None],
+                               q_scale.astype(jnp.float32)[..., None],
+                               interpret=interpret)[..., 0]      # (S, Qp)
     r_hat = jnp.where(valid, r_hat, -jnp.inf)
     best = jnp.argmax(r_hat, axis=1)
     best_r = jnp.take_along_axis(r_hat, best[:, None], axis=1)[:, 0]

@@ -1,4 +1,4 @@
-"""Public wrappers for the fused wave kernels: padding + launch assembly.
+"""Public wrappers for the fused wave kernels: zero-copy launch assembly.
 
 Three entry points, all ONE ``pallas_call`` each (the launch-count contract
 of the kernel-tier serving wave: probe -> miss-search -> insert+query is
@@ -12,10 +12,15 @@ exactly three launches):
 
 The wrappers take plain stacked arrays (``core.cache`` orchestrates state
 assembly and precomputes write positions/ring slots with the scalar ops'
-exact jnp logic); they handle lane/sublane padding — feature dim to the
-lane multiple, cache capacity to a power-of-two tile, the k_c batch and
-query-record axes to the sublane multiple — and remap dropped write
-positions past the *padded* capacity so a dropped document can never land
+exact jnp logic).  Since the pre-padded layout (``repro.core.layout``),
+the STATE arrays arrive already at the physical extents — capacity a
+multiple of the wave tile, feature dim a multiple of the lane, the query
+ring a multiple of the sublane, scales f32 — and pass straight into the
+launch: no per-launch pad of the O(S * capacity * dim) payload, no slice
+back out.  Only per-wave INPUTS (the k_c new documents, the per-session
+psi rows) still get lane/sublane-padded, which is O(wave).  Dropped write
+positions arrive pre-routed past the physical capacity
+(``core.cache._insert_positions``), so a dropped document can never land
 in a padded column and leak into the query scan.
 """
 
@@ -28,10 +33,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.layout import LANE, SUBLANE, wave_tile
 from repro.kernels.cache_wave.cache_wave import make_wave_kernel
 
-LANE = 128
-SUBLANE = 8
+__all__ = ["LANE", "SUBLANE", "wave_tile", "wave_query_topk",
+           "wave_insert_scatter", "wave_insert_query"]
 
 
 def _pad_axis(x, axis, mult, value=0):
@@ -43,10 +49,18 @@ def _pad_axis(x, axis, mult, value=0):
     return jnp.pad(x, widths, constant_values=value)
 
 
-def wave_tile(capacity: int) -> int:
-    """Capacity tile: one power of two <= 512 (whole cache when smaller)."""
-    pow2 = max(SUBLANE, 1 << max(capacity - 1, 1).bit_length())
-    return min(512, pow2)
+def _check_state(doc_emb, doc_scale, tile_c):
+    """The zero-copy contract: state arrays must arrive pre-padded (see
+    ``core.cache.init_cache``) — the wave wrappers no longer pad them."""
+    s, capacity, d = doc_emb.shape
+    assert capacity % tile_c == 0, (
+        f"capacity {capacity} not a multiple of the wave tile {tile_c}: "
+        "pass a pre-padded CacheState (init_cache allocates phys_capacity)")
+    assert d % LANE == 0, (
+        f"feature dim {d} not a multiple of the lane {LANE}: pass a "
+        "pre-padded CacheState (init_cache allocates phys_dim)")
+    assert doc_scale.dtype == jnp.float32, (
+        f"doc_scale must be stored f32, got {doc_scale.dtype}")
 
 
 def _common_specs(tile_c, dp):
@@ -138,37 +152,33 @@ def _launch(*, s, capacity, dp, kc, qmax, k, tile_c, store_dtype,
     )(*operands)
 
 
-def _pad_state(doc_emb, doc_ids, doc_scale, tile_c):
-    """Sentinel-pad the per-session cache arrays to the tile multiple."""
-    demb = _pad_axis(_pad_axis(doc_emb, 2, LANE), 1, tile_c)
-    dids = _pad_axis(doc_ids, 1, tile_c, value=-1)
-    dscale = _pad_axis(doc_scale.astype(jnp.float32), 1, tile_c, value=1.0)
-    return demb, dids, dscale
-
-
 def _psi_block(psi, dp):
-    """(S, D) -> (S, 8, Dp): sublane-friendly single-row block, row 0 live."""
-    p = _pad_axis(psi, 1, LANE)
-    return _pad_axis(p[:, None, :], 1, SUBLANE)
+    """(S, D) -> (S, 8, Dp): sublane-friendly single-row block, row 0 live.
+    A per-wave O(S * dim) pad — one pad, never O(capacity)."""
+    return jnp.pad(psi[:, None, :],
+                   ((0, 0), (0, SUBLANE - 1), (0, dp - psi.shape[1])))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def wave_query_topk(doc_emb, doc_ids, doc_scale, psi, k: int,
                     interpret: bool = False):
-    """Batched top-k over cached docs, one launch.  doc_emb (S, C, D)
-    payload (any storage dtype), doc_ids (S, C) with -1 empties, doc_scale
-    (S, C) f32, psi (S, D) f32.  Returns (vals (S, k) f32 — -inf past the
-    cached docs, ids (S, k) int32 — -1 there, slots (S, k) int32) with the
-    ref tier's exact slot ordering (stable top-k, empties ascending)."""
+    """Batched top-k over cached docs, one launch.  doc_emb (S, Cp, Dp)
+    pre-padded payload (any storage dtype), doc_ids (S, Cp) with -1 empties
+    (padded columns included), doc_scale (S, Cp) f32, psi (S, dim) f32 —
+    the one per-wave input, lane-padded here.  Returns (vals (S, k) f32 —
+    -inf past the cached docs, ids (S, k) int32 — -1 there, slots (S, k)
+    int32) with the ref tier's exact slot ordering (stable top-k, empties
+    ascending — so padded columns, which sit past every logical slot, are
+    unreachable while k <= the logical capacity)."""
     s, capacity, d = doc_emb.shape
     assert k <= capacity, f"k={k} > capacity={capacity} (ref tier errors too)"
     tile_c = wave_tile(capacity)
-    demb, dids, dscale = _pad_state(doc_emb, doc_ids, doc_scale, tile_c)
+    _check_state(doc_emb, doc_scale, tile_c)
     ints = jnp.zeros((s, 8), jnp.int32)
-    operands = (ints, demb, dids, dscale,
+    operands = (ints, doc_emb, doc_ids, doc_scale,
                 _psi_block(psi.astype(jnp.float32), d))
     return _launch(
-        s=s, capacity=demb.shape[1], dp=demb.shape[2], kc=0, qmax=0, k=k,
+        s=s, capacity=capacity, dp=d, kc=0, qmax=0, k=k,
         tile_c=tile_c, store_dtype=doc_emb.dtype, radius_dtype=jnp.float32,
         with_insert=False, with_query=True, interpret=interpret,
         operands=operands)
@@ -177,26 +187,31 @@ def wave_query_topk(doc_emb, doc_ids, doc_scale, psi, k: int,
 def _insert_operands(doc_emb, doc_ids, doc_stamp, doc_scale, q_emb, q_radius,
                      q_scale, emb_q, emb_scale, new_ids, pos, psi_q,
                      psi_scale, radius, rec, qslot, step_ins, tile_c):
+    """Assemble the insert launch operands.  State arrays pass through
+    untouched (pre-padded layout); only the per-wave inputs — the k_c new
+    rows, their metadata, and the psi record row — get lane/sublane pads.
+    ``pos`` arrives with drops already routed to the PHYSICAL capacity, so
+    the pad value for the position block is simply ``capacity``."""
     s, capacity, d = doc_emb.shape
-    demb, dids, dscale = _pad_state(doc_emb, doc_ids, doc_scale, tile_c)
-    cpad = demb.shape[1]
-    dstamp = _pad_axis(doc_stamp, 1, tile_c)
-    # remap drop positions (== capacity) past the PADDED capacity: a padded
-    # column is a real column of the launch and a doc written there would
-    # leak into the query scan as a live id
-    pos = jnp.where(pos >= capacity, cpad, pos.astype(jnp.int32))
-    emb_p = _pad_axis(_pad_axis(emb_q, 2, LANE), 1, SUBLANE)
+    _check_state(doc_emb, doc_scale, tile_c)
+    assert q_emb.shape[1] % SUBLANE == 0 and q_emb.shape[2] == d, (
+        f"query ring {q_emb.shape} not pre-padded to (*, {SUBLANE}-multiple,"
+        f" {d}): pass a pre-padded CacheState")
+    assert q_scale.dtype == jnp.float32, "q_scale must be stored f32"
+    assert emb_q.shape[2] <= d and psi_q.shape[1] <= d
+    # one fused pad per wave input (rows to the sublane, features to the
+    # state's physical width) — two chained pads would materialize twice
+    emb_p = jnp.pad(emb_q, ((0, 0), (0, (-emb_q.shape[1]) % SUBLANE),
+                            (0, d - emb_q.shape[2])))
     kc_p = emb_p.shape[1]
     escale = _pad_axis(emb_scale.astype(jnp.float32), 1, SUBLANE,
                        value=1.0)[:, None, :]
     nids = _pad_axis(new_ids.astype(jnp.int32), 1, SUBLANE,
                      value=-1)[:, None, :]
-    pos_p = _pad_axis(pos, 1, SUBLANE, value=cpad)[:, None, :]
-    qemb = _pad_axis(_pad_axis(q_emb, 2, LANE), 1, SUBLANE)
-    qmax_p = qemb.shape[1]
-    qrad = _pad_axis(q_radius, 1, SUBLANE, value=-jnp.inf)
-    qsc = _pad_axis(q_scale.astype(jnp.float32), 1, SUBLANE, value=1.0)
-    psis = _pad_axis(_pad_axis(psi_q, 1, LANE)[:, None, :], 1, SUBLANE)
+    pos_p = _pad_axis(pos.astype(jnp.int32), 1, SUBLANE,
+                      value=capacity)[:, None, :]
+    psis = jnp.pad(psi_q[:, None, :],
+                   ((0, 0), (0, SUBLANE - 1), (0, d - psi_q.shape[1])))
     ints = jnp.stack([
         jnp.zeros((s,), jnp.int32),
         jnp.asarray(rec, jnp.int32),
@@ -207,19 +222,12 @@ def _insert_operands(doc_emb, doc_ids, doc_stamp, doc_scale, q_emb, q_radius,
         jnp.asarray(radius, jnp.float32),
         jnp.asarray(psi_scale, jnp.float32),
     ] + [jnp.zeros((s,), jnp.float32)] * 6, axis=1)
-    operands = (ints, demb, dids, dscale, dstamp, floats, emb_p, escale,
-                nids, pos_p, psis, qemb, qrad, qsc)
-    dims = dict(s=s, capacity=cpad, dp=demb.shape[2], kc=kc_p, qmax=qmax_p,
+    operands = (ints, doc_emb, doc_ids, doc_scale, doc_stamp, floats, emb_p,
+                escale, nids, pos_p, psis, q_emb, q_radius, q_scale)
+    dims = dict(s=s, capacity=capacity, dp=d, kc=kc_p, qmax=q_emb.shape[1],
                 tile_c=tile_c, store_dtype=doc_emb.dtype,
                 radius_dtype=q_radius.dtype)
-    return operands, dims, capacity, d
-
-
-def _unpad_insert_outs(outs, capacity, d, qmax):
-    demb, dids, dstamp, dscale, qemb, qrad, qsc = outs[:7]
-    return (demb[:, :capacity, :d], dids[:, :capacity], dstamp[:, :capacity],
-            dscale[:, :capacity], qemb[:, :qmax, :d], qrad[:, :qmax],
-            qsc[:, :qmax])
+    return operands, dims
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -227,20 +235,20 @@ def wave_insert_scatter(doc_emb, doc_ids, doc_stamp, doc_scale, q_emb,
                         q_radius, q_scale, emb_q, emb_scale, new_ids, pos,
                         psi_q, psi_scale, radius, rec, qslot, step_ins,
                         interpret: bool = False):
-    """Batched insert scatter, one launch.  ``pos`` (S, kc) are precomputed
-    write positions (== capacity for dropped/masked docs); ``psi_q`` /
-    ``psi_scale`` / ``radius`` the per-session query record, written at ring
-    slot ``qslot`` when ``rec``; ``step_ins`` stamps the written rows.
-    Returns the 7 post-insert doc/q arrays (counters stay with the
-    caller)."""
+    """Batched insert scatter, one launch over the pre-padded state.
+    ``pos`` (S, kc) are precomputed write positions (== the physical
+    capacity for dropped/masked docs); ``psi_q`` / ``psi_scale`` /
+    ``radius`` the per-session query record, written at ring slot
+    ``qslot`` when ``rec``; ``step_ins`` stamps the written rows.
+    Returns the 7 post-insert doc/q arrays at the physical extents,
+    unsliced (counters stay with the caller)."""
     tile_c = wave_tile(doc_emb.shape[1])
-    operands, dims, capacity, d = _insert_operands(
+    operands, dims = _insert_operands(
         doc_emb, doc_ids, doc_stamp, doc_scale, q_emb, q_radius, q_scale,
         emb_q, emb_scale, new_ids, pos, psi_q, psi_scale, radius, rec,
         qslot, step_ins, tile_c)
-    outs = _launch(**dims, k=0, with_insert=True, with_query=False,
+    return _launch(**dims, k=0, with_insert=True, with_query=False,
                    interpret=interpret, operands=operands)
-    return _unpad_insert_outs(outs, capacity, d, q_emb.shape[1])
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
@@ -252,15 +260,14 @@ def wave_insert_query(doc_emb, doc_ids, doc_stamp, doc_scale, q_emb,
     ONE launch — the query scan scores each freshly blended tile, so the
     whole wave costs a single pass over the cache payload.  Returns
     (doc/q arrays as ``wave_insert_scatter``, (vals, ids, slots))."""
-    capacity = doc_emb.shape[1]
+    s, capacity, d = doc_emb.shape
     assert k <= capacity, f"k={k} > capacity={capacity} (ref tier errors too)"
     tile_c = wave_tile(capacity)
-    operands, dims, capacity, d = _insert_operands(
+    operands, dims = _insert_operands(
         doc_emb, doc_ids, doc_stamp, doc_scale, q_emb, q_radius, q_scale,
         emb_q, emb_scale, new_ids, pos, psi_q, psi_scale, radius, rec,
         qslot, step_ins, tile_c)
     operands = operands + (_psi_block(psi.astype(jnp.float32), d),)
     outs = _launch(**dims, k=k, with_insert=True, with_query=True,
                    interpret=interpret, operands=operands)
-    state_outs = _unpad_insert_outs(outs, capacity, d, q_emb.shape[1])
-    return state_outs, tuple(outs[7:])
+    return tuple(outs[:7]), tuple(outs[7:])

@@ -1,0 +1,116 @@
+"""Jaxpr inspection helpers for the zero-copy launch contract.
+
+The pre-padded cache layout (``repro.core.layout``) promises that a
+kernel-tier serving wave moves only wave-sized operands outside its Pallas
+launches — no pad / slice / copy of the O(S * capacity * dim) stacked
+``CacheState`` payload.  These helpers make that promise checkable: walk a
+traced jaxpr's OUTER equations (recursing through ``pjit``/control-flow
+call equations, but never into a ``pallas_call``'s inner kernel jaxpr,
+whose payload traffic is the launch's job), and
+
+  * ``payload_copy_eqns`` flags data-movement primitives whose output
+    reaches a size threshold (the tier-1 guard in
+    ``tests/test_padded_layout.py`` sets it to the stacked payload size),
+  * ``moved_bytes`` totals the bytes produced by all non-launch outer
+    equations (the ``wave_moved_bytes`` column of ``serve_bench``) — a
+    machine-independent measure of per-wave overhead traffic,
+  * ``pallas_call_count`` counts launches (the 3-launch wave contract).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+
+# Primitives that MATERIALIZE a copy / re-layout of their operand — XLA
+# cannot fuse these away, so their outputs are real memory traffic.
+# ``broadcast`` variants and elementwise ops (``select_n``, arithmetic)
+# are excluded: they fuse into consumers and move nothing by themselves.
+MOVED_PRIMS = frozenset({
+    "pad", "slice", "dynamic_slice", "dynamic_update_slice", "concatenate",
+    "copy", "gather", "scatter", "scatter-add",
+})
+
+# For the payload-copy GUARD, a payload-sized ``select_n`` also counts: a
+# full-state ``jnp.where`` (e.g. a vmap-ref session merge) reads and writes
+# the whole payload even if XLA fuses the select itself.
+COPY_PRIMS = MOVED_PRIMS | {"select_n"}
+
+
+def _sub_jaxprs(eqn) -> list:
+    """Inner jaxprs of a call / control-flow equation (empty for leaves)."""
+    found = []
+
+    def _walk(v):
+        if hasattr(v, "eqns"):          # raw Jaxpr
+            found.append(v)
+        elif hasattr(v, "jaxpr"):       # ClosedJaxpr
+            found.append(v.jaxpr)
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                _walk(x)
+
+    for v in eqn.params.values():
+        _walk(v)
+    return found
+
+
+def outer_eqns(jaxpr) -> Iterator:
+    """All equations reachable OUTSIDE pallas kernel bodies.
+
+    Call equations (pjit, cond branches, scan bodies, ...) are expanded —
+    their inner equations are yielded, the call shell itself is not, so
+    nothing is double-counted.  ``pallas_call`` equations are yielded as
+    leaves: their inner kernel jaxpr is the launch, not overhead.
+    """
+    if hasattr(jaxpr, "jaxpr"):         # accept ClosedJaxpr
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            yield eqn
+            continue
+        sub = _sub_jaxprs(eqn)
+        if sub:
+            for j in sub:
+                yield from outer_eqns(j)
+        else:
+            yield eqn
+
+
+def pallas_call_count(jaxpr) -> int:
+    return sum(1 for e in outer_eqns(jaxpr)
+               if e.primitive.name == "pallas_call")
+
+
+def payload_copy_eqns(jaxpr, min_size: int) -> list:
+    """Copy-primitive equations whose output holds >= ``min_size`` elements
+    — empty for a zero-copy wave traced at the stacked payload size."""
+    flagged = []
+    for eqn in outer_eqns(jaxpr):
+        if eqn.primitive.name in COPY_PRIMS:
+            if any(getattr(v.aval, "size", 0) >= min_size
+                   for v in eqn.outvars):
+                flagged.append(eqn)
+    return flagged
+
+
+def moved_bytes(jaxpr) -> int:
+    """Total bytes produced by materializing (``MOVED_PRIMS``) outer
+    equations — the wave's overhead data movement.  The launches' own
+    payload traffic is intentional and excluded, and fusable elementwise
+    ops are not charged (XLA never materializes them)."""
+    total = 0
+    for eqn in outer_eqns(jaxpr):
+        if eqn.primitive.name not in MOVED_PRIMS:
+            continue
+        for v in eqn.outvars:
+            aval = v.aval
+            if hasattr(aval, "size") and hasattr(aval, "dtype"):
+                total += int(aval.size) * aval.dtype.itemsize
+    return total
+
+
+def trace_moved_bytes(fn, *args, **kwargs) -> int:
+    """``moved_bytes`` of ``jax.make_jaxpr(fn)(*args, **kwargs)``."""
+    return moved_bytes(jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args))

@@ -120,7 +120,8 @@ class BatchedEngine:
         psi = self.encoder(q) if self.encoder else q
 
         sub = self.cache.gather(pad_sids)
-        pr = probe_batched(sub, psi, self.epsilon, backend=self.backend)
+        pr = probe_batched(sub, psi, self.epsilon, backend=self.backend,
+                           max_queries=self.cache.cfg.max_queries)
         n_queries = np.asarray(sub.n_queries)
         need = np.logical_or(n_queries == 0, ~np.asarray(pr.hit))
         need[wave:] = False

@@ -150,10 +150,14 @@ def _stacked_state(seed, s, qmax, d, n_queries):
     rng = np.random.default_rng(seed)
     cfg = CacheConfig(capacity=8, dim=d, max_queries=qmax)
     state = init_batched_cache(cfg, s)
+    # deliberately replace the ring leaves with LOGICAL-extent arrays (not
+    # the pre-padded physical ones): the probe wrappers must still accept
+    # direct-call states of arbitrary shape, padding on the fly
     state = state._replace(
         q_emb=jnp.asarray(_unit(rng, (s, qmax, d))),
         q_radius=jnp.asarray(
             rng.uniform(0.2, 1.2, (s, qmax)).astype(np.float32)),
+        q_scale=jnp.ones((s, qmax), jnp.float32),
         n_queries=jnp.asarray(n_queries, jnp.int32))
     psi = jnp.asarray(_unit(rng, (s, d)))
     return state, psi

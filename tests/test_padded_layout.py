@@ -1,0 +1,316 @@
+"""The pre-padded physical cache layout (``repro.core.layout``).
+
+Four claims, each tested directly:
+
+  1. extent math — the physical extents are the documented roundings and
+     the wave tile derived from a physical capacity equals the tile
+     derived from the logical one (so wrappers can read shapes alone);
+  2. init sentinels — padded doc columns / ring slots hold the empty-slot
+     sentinels from birth, and NO op ever rewrites them (LRU stamps of
+     padded columns stay 0 across insert waves on every tier);
+  3. layout equivalence — the ops are layout-agnostic: a pre-padded state
+     and a hand-built LOGICAL-extent state (the pre-padding layout) give
+     turn-identical probe / insert / query behaviour across awkward
+     extents, storage dtypes, eviction policies, and ring wraps — and the
+     ref and interpret kernel tiers agree on the padded layout;
+  4. zero-copy — a traced kernel-tier wave contains no pad / slice /
+     copy of the stacked (S, capacity, dim) payload outside its Pallas
+     launches, and stays the contracted launch count.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layout, quant
+from repro.core.cache import (CacheConfig, CacheState, MetricCache,
+                              init_batched_cache, init_cache, insert,
+                              insert_query_batched, probe, probe_batched,
+                              query)
+from repro.kernels import jaxpr_util
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.kernels  # fast CI kernel gate: pytest -m kernels
+
+
+# ----------------------------------------------------------- 1. extent math
+def test_phys_extent_math():
+    assert [layout.wave_tile(c) for c in (1, 7, 8, 100, 127, 128, 512, 513)] \
+        == [8, 8, 8, 128, 128, 128, 512, 512]
+    assert [layout.phys_capacity(c) for c in (1, 100, 127, 128, 513)] \
+        == [8, 128, 128, 128, 1024]
+    assert [layout.phys_dim(d) for d in (32, 128, 200, 769)] \
+        == [128, 128, 256, 896]
+    assert [layout.phys_queries(q) for q in (1, 8, 33, 64)] == [8, 8, 40, 64]
+
+
+def test_wave_tile_stable_under_phys_rounding():
+    """Wrappers derive the tile from the PHYSICAL shape; it must equal the
+    tile of the logical capacity or the grid geometry would drift."""
+    for c in (1, 3, 8, 100, 127, 128, 200, 511, 512, 513, 1000, 4096):
+        assert layout.wave_tile(layout.phys_capacity(c)) == layout.wave_tile(c)
+
+
+def test_cacheconfig_derived_fields():
+    cfg = CacheConfig(capacity=100, dim=769, max_queries=33)
+    assert (cfg.phys_capacity, cfg.phys_dim, cfg.phys_max_queries) \
+        == (128, 896, 40)
+
+
+# -------------------------------------------------------- 2. init sentinels
+@pytest.mark.parametrize("store_dtype", ["fp32", "bf16", "int8"])
+def test_init_cache_allocates_physical_extents_with_sentinels(store_dtype):
+    cfg = CacheConfig(capacity=100, dim=200, max_queries=5,
+                      store_dtype=store_dtype)
+    st = init_cache(cfg)
+    assert st.doc_emb.shape == (128, 256)
+    assert st.q_emb.shape == (8, 256)
+    assert st.doc_ids.shape == st.doc_stamp.shape == st.doc_scale.shape \
+        == (128,)
+    assert st.q_radius.shape == st.q_scale.shape == (8,)
+    np.testing.assert_array_equal(np.asarray(st.doc_ids), -1)
+    np.testing.assert_array_equal(np.asarray(st.doc_stamp), 0)
+    np.testing.assert_array_equal(np.asarray(st.doc_scale), 1.0)
+    np.testing.assert_array_equal(np.asarray(st.q_scale), 1.0)
+    assert np.isneginf(np.asarray(st.q_radius)).all()
+    assert np.asarray(st.doc_emb.astype(jnp.float32)).sum() == 0.0
+
+
+def _rows(rng, n, d):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_padded_columns_survive_insert_waves_untouched(backend):
+    """Satellite: padded columns' sentinels — LRU stamps INCLUDED — stay
+    bitwise untouched across insert+query waves on both tiers."""
+    s, cap, dim, kc, mq = 3, 100, 64, 7, 5
+    cfg = CacheConfig(capacity=cap, dim=dim, max_queries=mq)
+    state = init_batched_cache(cfg, s)
+    rng = np.random.default_rng(0)
+    for t in range(4):
+        psi = jnp.asarray(_rows(rng, s, dim))
+        ids = jnp.asarray(
+            rng.integers(0, 500, (s, kc)).astype(np.int32))
+        emb = jnp.asarray(_rows(rng, s * kc, dim).reshape(s, kc, dim))
+        radius = jnp.asarray(rng.uniform(0.2, 1.0, s).astype(np.float32))
+        _out, state, _dropped = insert_query_batched(
+            state, cfg, psi, radius, emb, ids, k=4, backend=backend)
+    cp, qp = cfg.phys_capacity, cfg.phys_max_queries
+    assert cp > cap and qp > mq  # the test only bites with real padding
+    np.testing.assert_array_equal(np.asarray(state.doc_ids)[:, cap:], -1)
+    np.testing.assert_array_equal(np.asarray(state.doc_stamp)[:, cap:], 0)
+    np.testing.assert_array_equal(np.asarray(state.doc_scale)[:, cap:], 1.0)
+    assert np.isneginf(np.asarray(state.q_radius)[:, mq:]).all()
+    np.testing.assert_array_equal(np.asarray(state.q_scale)[:, mq:], 1.0)
+    assert np.asarray(
+        state.q_emb.astype(jnp.float32))[:, mq:, :].sum() == 0.0
+    # ...and real docs did land
+    assert (np.asarray(state.doc_ids)[:, :cap] >= 0).any()
+
+
+# --------------------------------------------------- 3. layout equivalence
+def _logical_state(cfg: CacheConfig) -> CacheState:
+    """Hand-build a CacheState at the LOGICAL extents — the pre-padding
+    layout.  The scalar ops are layout-agnostic (they mask on the config /
+    sentinels, never on leaf shapes), so driving both layouts through the
+    same turns must give identical results."""
+    store = quant.storage_dtype(cfg.store_dtype)
+    return CacheState(
+        doc_emb=jnp.zeros((cfg.capacity, cfg.dim), store),
+        doc_ids=jnp.full((cfg.capacity,), -1, jnp.int32),
+        doc_stamp=jnp.zeros((cfg.capacity,), jnp.int32),
+        q_emb=jnp.zeros((cfg.max_queries, cfg.dim), store),
+        q_radius=jnp.full((cfg.max_queries,), -jnp.inf, cfg.dtype),
+        n_docs=jnp.zeros((), jnp.int32),
+        n_queries=jnp.zeros((), jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+        doc_scale=jnp.ones((cfg.capacity,), jnp.float32),
+        q_scale=jnp.ones((cfg.max_queries,), jnp.float32),
+    )
+
+
+AWKWARD = [(1, 32), (100, 769), (127, 33), (128, 128)]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("capacity,dim", AWKWARD)
+@pytest.mark.parametrize("store_dtype", ["fp32", "bf16", "int8"])
+@pytest.mark.parametrize("eviction", ["none", "lru", "ball"])
+def test_padded_layout_turn_identical_to_logical_layout(
+        capacity, dim, store_dtype, eviction):
+    """The sweep: padded vs logical layout, turn-by-turn, through probes
+    (ring-wrapping max_queries=3), inserts (overflowing capacity=1 cases
+    exercise drops and every eviction policy), and top-k queries."""
+    cfg = CacheConfig(capacity=capacity, dim=dim, max_queries=3,
+                      eviction=eviction, store_dtype=store_dtype)
+    padded = init_cache(cfg)
+    oracle = _logical_state(cfg)
+    rng = np.random.default_rng(capacity * 7 + dim)
+    kc, k = 3, min(2, capacity)
+    for t in range(5):
+        psi = jnp.asarray(_rows(rng, 1, dim)[0])
+        pr_p = probe(padded, psi, cfg.epsilon, max_queries=cfg.max_queries)
+        pr_o = probe(oracle, psi, cfg.epsilon, max_queries=cfg.max_queries)
+        assert bool(pr_p.hit) == bool(pr_o.hit)
+        assert int(pr_p.nearest_q) == int(pr_o.nearest_q)
+        # scores to float tolerance only: the padded matmul reduces over
+        # Dp lanes (zeros past dim), a different XLA reduction shape
+        np.testing.assert_allclose(np.asarray(pr_p.r_hat),
+                                   np.asarray(pr_o.r_hat),
+                                   rtol=1e-6, atol=1e-6)
+
+        ids = jnp.asarray(rng.integers(0, 50, kc).astype(np.int32))
+        emb = jnp.asarray(_rows(rng, kc, dim))
+        radius = jnp.asarray(rng.uniform(0.2, 1.0), jnp.float32)
+        padded, drop_p = insert(padded, cfg, psi, radius, emb, ids)
+        oracle, drop_o = insert(oracle, cfg, psi, radius, emb, ids)
+        assert int(drop_p) == int(drop_o)
+        assert int(padded.n_docs) == int(oracle.n_docs)
+        assert int(padded.n_queries) == int(oracle.n_queries)
+
+        (s_p, d_p, i_p, sl_p), padded = query(padded, psi, k)
+        (s_o, d_o, i_o, sl_o), oracle = query(oracle, psi, k)
+        np.testing.assert_array_equal(np.asarray(i_p), np.asarray(i_o))
+        np.testing.assert_array_equal(np.asarray(sl_p), np.asarray(sl_o))
+        np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_o),
+                                   rtol=1e-6, atol=1e-6)
+
+    # final state: every logical leaf slice matches the oracle bitwise
+    np.testing.assert_array_equal(
+        np.asarray(padded.doc_ids)[:capacity], np.asarray(oracle.doc_ids))
+    np.testing.assert_array_equal(
+        np.asarray(padded.doc_stamp)[:capacity],
+        np.asarray(oracle.doc_stamp))
+    np.testing.assert_array_equal(
+        np.asarray(padded.doc_emb)[:capacity, :dim],
+        np.asarray(oracle.doc_emb))
+    np.testing.assert_array_equal(
+        np.asarray(padded.q_radius)[:cfg.max_queries],
+        np.asarray(oracle.q_radius))
+    np.testing.assert_array_equal(
+        np.asarray(padded.q_emb)[:cfg.max_queries, :dim],
+        np.asarray(oracle.q_emb))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("capacity,dim", AWKWARD)
+@pytest.mark.parametrize("store_dtype", ["fp32", "bf16", "int8"])
+def test_padded_layout_ref_vs_interpret_tiers(capacity, dim, store_dtype):
+    """Batched wave on the padded layout: the ref (vmap) and interpret
+    (fused Pallas) tiers stay rank-identical across the awkward extents."""
+    s, kc, mq = 3, 3, 3
+    k = min(2, capacity)
+    cfg = CacheConfig(capacity=capacity, dim=dim, max_queries=mq,
+                      store_dtype=store_dtype)
+    st_ref = init_batched_cache(cfg, s)
+    st_ker = init_batched_cache(cfg, s)
+    rng = np.random.default_rng(capacity + dim)
+    for t in range(4):
+        psi = jnp.asarray(_rows(rng, s, dim))
+        pr_r = probe_batched(st_ref, psi, cfg.epsilon, backend="ref",
+                             max_queries=mq)
+        pr_k = probe_batched(st_ker, psi, cfg.epsilon, backend="interpret",
+                             max_queries=mq)
+        np.testing.assert_array_equal(np.asarray(pr_r.hit),
+                                      np.asarray(pr_k.hit))
+        np.testing.assert_array_equal(np.asarray(pr_r.nearest_q),
+                                      np.asarray(pr_k.nearest_q))
+
+        ids = jnp.asarray(rng.integers(0, 40, (s, kc)).astype(np.int32))
+        emb = jnp.asarray(_rows(rng, s * kc, dim).reshape(s, kc, dim))
+        radius = jnp.asarray(rng.uniform(0.2, 1.0, s).astype(np.float32))
+        do = jnp.asarray(~np.asarray(pr_r.hit))
+        (v_r, _, i_r, sl_r), st_ref, dr_r = insert_query_batched(
+            st_ref, cfg, psi, radius, emb, ids, k=k, do=do, backend="ref")
+        (v_k, _, i_k, sl_k), st_ker, dr_k = insert_query_batched(
+            st_ker, cfg, psi, radius, emb, ids, k=k, do=do,
+            backend="interpret")
+        np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_k))
+        np.testing.assert_array_equal(np.asarray(sl_r), np.asarray(sl_k))
+        np.testing.assert_allclose(np.asarray(v_r), np.asarray(v_k),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_array_equal(np.asarray(dr_r), np.asarray(dr_k))
+    np.testing.assert_array_equal(np.asarray(st_ref.doc_ids),
+                                  np.asarray(st_ker.doc_ids))
+    np.testing.assert_array_equal(np.asarray(st_ref.doc_stamp),
+                                  np.asarray(st_ker.doc_stamp))
+    np.testing.assert_array_equal(np.asarray(st_ref.n_docs),
+                                  np.asarray(st_ker.n_docs))
+
+
+def test_ring_wrapped_probe_padded_layout():
+    """A ring wrapped far past max_queries on the padded layout: the probe
+    sees exactly the newest LOGICAL records, never a padded slot."""
+    dim, mq = 48, 3
+    cfg = CacheConfig(capacity=64, dim=dim, max_queries=mq)
+    cache = MetricCache(cfg)
+    rng = np.random.default_rng(9)
+    psis = _rows(rng, 8, dim)
+    for i in range(8):
+        cache.insert(jnp.asarray(psis[i]), jnp.asarray(0.5, jnp.float32),
+                     jnp.asarray(_rows(rng, 2, dim)),
+                     jnp.arange(2 * i, 2 * i + 2, dtype=jnp.int32))
+    assert cache.n_queries == mq and cache.total_queries == 8
+    # newest query self-probes to ~r_a; evicted query 0 does not
+    pr = cache.probe(jnp.asarray(psis[7]), epsilon=0.4)
+    assert bool(pr.hit) and abs(float(pr.r_hat) - 0.5) < 1e-3
+    assert int(pr.nearest_q) < mq  # never a padded ring slot
+    pr_old = cache.probe(jnp.asarray(psis[0]), epsilon=0.4)
+    assert float(pr_old.r_hat) < 0.5 - 1e-3 and not bool(pr_old.hit)
+
+
+# ------------------------------------------------------------ 4. zero-copy
+def _wave_setup(s=4, capacity=100, dim=200, kc=5, mq=5):
+    cfg = CacheConfig(capacity=capacity, dim=dim, max_queries=mq)
+    state = init_batched_cache(cfg, s)
+    rng = np.random.default_rng(1)
+    psi = jnp.asarray(_rows(rng, s, dim))
+    ids = jnp.asarray(rng.integers(0, 99, (s, kc)).astype(np.int32))
+    emb = jnp.asarray(_rows(rng, s * kc, dim).reshape(s, kc, dim))
+    radius = jnp.asarray(rng.uniform(0.2, 1.0, s).astype(np.float32))
+    return cfg, state, psi, ids, emb, radius
+
+
+def test_traced_miss_wave_has_no_payload_copies():
+    """Tier-1 guard: the kernel-tier probe and fused insert+query traces
+    contain NO pad/slice/copy at the stacked payload size — the zero-copy
+    contract — and each stays a single Pallas launch."""
+    cfg, state, psi, ids, emb, radius = _wave_setup()
+    s = psi.shape[0]
+    payload = s * cfg.phys_capacity * cfg.phys_dim  # elements
+
+    jx_probe = jax.make_jaxpr(
+        lambda st, p: probe_batched(st, p, cfg.epsilon, backend="interpret",
+                                    max_queries=cfg.max_queries))(state, psi)
+    assert jaxpr_util.payload_copy_eqns(jx_probe, payload) == []
+    assert jaxpr_util.pallas_call_count(jx_probe) == 1
+
+    jx_wave = jax.make_jaxpr(
+        lambda st, p, r, e, i: insert_query_batched(
+            st, cfg, p, r, e, i, k=4, backend="interpret"))(
+        state, psi, radius, emb, ids)
+    assert jaxpr_util.payload_copy_eqns(jx_wave, payload) == []
+    assert jaxpr_util.pallas_call_count(jx_wave) == 1
+
+
+def test_wave_moved_bytes_below_payload():
+    """The serve_bench metric at test scale: non-launch traffic of a full
+    miss wave (probe + insert+query) stays well under ONE stacked-payload
+    copy — the pre-padding layout used to move >= 2x payload per wave."""
+    cfg, state, psi, ids, emb, radius = _wave_setup()
+    s = psi.shape[0]
+    payload_bytes = (s * cfg.phys_capacity * cfg.phys_dim
+                     * jnp.dtype(jnp.float32).itemsize)
+    moved = jaxpr_util.trace_moved_bytes(
+        lambda st, p: probe_batched(st, p, cfg.epsilon, backend="interpret",
+                                    max_queries=cfg.max_queries),
+        state, psi)
+    moved += jaxpr_util.trace_moved_bytes(
+        lambda st, p, r, e, i: insert_query_batched(
+            st, cfg, p, r, e, i, k=4, backend="interpret"),
+        state, psi, radius, emb, ids)
+    assert moved < payload_bytes, (moved, payload_bytes)
