@@ -47,6 +47,14 @@ MIN_INT8_BW_X = 1.8
 MAX_WAVE_MOVED_FRAC = 0.5   # non-launch traffic per wave vs ONE payload
 WAVE_MOVED_GROWTH = 1.05    # jaxpr-derived, so near-exact across machines
 WAVE_LATENCY_KEEP_FRAC = 0.15
+# cache-hierarchy gates (Zipfian multi-user smoke; deterministic workload,
+# so these are tight): the shared tier must serve a real share of traffic,
+# the tiered hit rate must strictly beat private caches, back-end savings
+# must not evaporate, and semantically reused result sets must stay
+# rank-faithful to fresh retrieval
+L2_HIT_RATE_FLOOR = 0.05
+REUSE_OVERLAP_FLOOR = 0.95
+BACKEND_SAVED_KEEP_FRAC = 0.7
 
 
 def _load(path: str) -> dict:
@@ -110,6 +118,50 @@ def check_serve(current: dict, baseline: dict, errors: list) -> None:
             f"serve: best wave latency {cur_wave * 1e3:.1f}ms beyond "
             f"{1 / WAVE_LATENCY_KEEP_FRAC:.1f}x baseline "
             f"{base_wave * 1e3:.1f}ms")
+    _check_zipf(cur.get("zipf"), base.get("zipf") or {}, errors)
+
+
+def _check_zipf(zipf, base_zipf: dict, errors: list) -> None:
+    """Cache-hierarchy gates over the Zipfian multi-user smoke record."""
+    if not zipf:
+        errors.append("serve: zipf record missing from current smoke "
+                      "record — the cache-hierarchy gate lost its input")
+        return
+    for key in ("hit_rate", "l1_hit_rate", "l2_hit_rate",
+                "l1_only_hit_rate", "hit_gap", "backend_queries_saved",
+                "reuse_overlap", "n_reuse_sampled"):
+        if key not in zipf:
+            errors.append(f"serve: zipf column {key} missing")
+    # the tier's raison d'etre: combined L1+L2 strictly beats private-only
+    if zipf.get("hit_gap", 0.0) <= 0.0:
+        errors.append(
+            f"serve: tiered hit rate {zipf.get('hit_rate')} does not beat "
+            f"the L1-only baseline {zipf.get('l1_only_hit_rate')}")
+    l2_floor = max(L2_HIT_RATE_FLOOR,
+                   base_zipf.get("l2_hit_rate", 0.0) - HIT_RATE_TOL)
+    if zipf.get("l2_hit_rate", 0.0) < l2_floor:
+        errors.append(
+            f"serve: l2_hit_rate {zipf.get('l2_hit_rate')} below floor "
+            f"{l2_floor:.3f}")
+    saved = zipf.get("backend_queries_saved", 0)
+    base_saved = base_zipf.get("backend_queries_saved")
+    if saved <= 0:
+        errors.append("serve: shared tier saved no backend queries")
+    elif base_saved and saved < BACKEND_SAVED_KEEP_FRAC * base_saved:
+        errors.append(
+            f"serve: backend_queries_saved regressed {base_saved} -> "
+            f"{saved} (< {BACKEND_SAVED_KEEP_FRAC:.0%} of baseline)")
+    # reused result sets must stay rank-faithful to fresh retrieval; a
+    # smoke run in which reuse never happens is itself a regression (the
+    # workload is seeded, so reuse is deterministic)
+    if not zipf.get("n_reuse_sampled"):
+        errors.append("serve: no semantic result reuse occurred in the "
+                      "zipf smoke workload")
+    elif (zipf.get("reuse_overlap") is not None
+          and zipf["reuse_overlap"] < REUSE_OVERLAP_FLOOR):
+        errors.append(
+            f"serve: reuse_overlap {zipf['reuse_overlap']:.3f} below the "
+            f"{REUSE_OVERLAP_FLOOR} quality floor")
 
 
 def check_kernels(current: dict, baseline: dict, errors: list) -> None:

@@ -32,6 +32,7 @@ from repro.core import quant
 from repro.core.cache import (CacheConfig, init_batched_cache,
                               insert_query_batched, probe_batched)
 from repro.core.metric_index import MetricIndex
+from repro.core.shared import SharedTier
 from repro.kernels import jaxpr_util
 from repro.data.conversations import WorldConfig, make_world
 from repro.serve.engine import ConversationalEngine
@@ -84,6 +85,89 @@ def bench_sequential(index, streams, *, n_shards, k, k_c, capacity,
     return elapsed, len(streams) * turns, hits
 
 
+def _rank_overlap(ids_a, ids_b, k: int) -> float:
+    """Top-k set overlap in [0, 1] for one result pair (the per-query core
+    of benchmarks.kernel_bench._rank_overlap, standalone for script use)."""
+    return len(set(np.asarray(ids_a)[:k].tolist())
+               & set(np.asarray(ids_b)[:k].tolist())) / k
+
+
+def bench_zipf(index, world, *, n_sessions, n_generations=3, alpha=1.1,
+               jitter=0.005, n_shards=4, k=10, k_c=100, capacity=None,
+               dtype=None, with_shared=True, seed=11):
+    """Popularity-skewed multi-user workload: the global-vs-private gap.
+
+    ``n_generations`` cohorts of ``n_sessions`` sessions each run a full
+    conversation; every session draws its conversation from a Zipf(alpha)
+    popularity distribution over the world's conversation pool, with
+    per-session query jitter (so cross-session repeats are near-duplicate,
+    never identical — the semantic-reuse case, not trivial memoization).
+    Between generations every session restarts with an empty L1 cache: a
+    new user asking a popular question is exactly where a private cache
+    pays a compulsory miss and the shared tier does not.
+
+    Returns hit-rate accounting over ALL turns (compulsory first turns
+    included — they are the point), per-tier counts, back-end query count,
+    and the rank overlap of semantically reused result sets vs fresh
+    retrieval (the quality gate for the memo's similarity floor).
+    """
+    router = ShardedRouter(make_shards(index, n_shards), deadline_s=30)
+    shared = SharedTier(dim=index.dim, n_shards=n_shards,
+                        capacity=max(8 * k_c, 1024), memo_sim=0.995,
+                        dtype=dtype) if with_shared else None
+    engine = BatchedEngine(router, np.asarray(index.dequantized()),
+                           dim=index.dim, n_sessions=n_sessions, k=k,
+                           k_c=k_c, capacity=capacity or 4 * k_c,
+                           dtype=dtype, shared=shared)
+    rng = np.random.default_rng(seed)
+    convs = world.conversations
+    pop = np.arange(1, len(convs) + 1, dtype=np.float64) ** -alpha
+    pop /= pop.sum()
+    sids = list(range(n_sessions))
+    counts = {"l1": 0, "l2": 0, "l2_reuse": 0, "backend": 0}
+    reuse_samples: list = []
+    t0 = time.perf_counter()
+    for _g in range(n_generations):
+        choice = rng.choice(len(convs), size=n_sessions, p=pop)
+        for s in sids:
+            engine.start_session(s)
+        streams = []
+        for s in sids:
+            raw = (np.asarray(convs[choice[s]].queries)
+                   + jitter * rng.standard_normal(
+                       convs[choice[s]].queries.shape))
+            streams.append(np.asarray(index.transform_queries(
+                jnp.asarray(raw, jnp.float32))))
+        for t in range(streams[0].shape[0]):
+            qs = [streams[s][t] for s in sids]
+            turns = engine.answer_batch(sids, qs)
+            for s, turn in zip(sids, turns):
+                counts[turn.tier] += 1
+                if turn.tier == "l2_reuse" and len(reuse_samples) < 32:
+                    reuse_samples.append((qs[s], np.asarray(turn.ids)))
+    elapsed = time.perf_counter() - t0
+    total = sum(counts.values())
+    # quality of reused result sets: top-k overlap vs a fresh retrieval of
+    # the SAME query (the gated floor backing the memo_sim calibration)
+    overlaps = []
+    for psi_q, served_ids in reuse_samples:
+        ans, _ = router.search(np.asarray(psi_q)[None], k_c)
+        fresh = ans.ids[0][ans.ids[0] >= 0]
+        overlaps.append(_rank_overlap(served_ids, fresh, k))
+    return {
+        "sessions": n_sessions, "generations": n_generations,
+        "alpha": alpha, "queries": total, "elapsed_s": elapsed,
+        "qps": total / max(elapsed, 1e-12),
+        "hit_rate": 1.0 - counts["backend"] / max(total, 1),
+        "l1_hit_rate": counts["l1"] / max(total, 1),
+        "l2_hit_rate": (counts["l2"] + counts["l2_reuse"]) / max(total, 1),
+        "backend_queries": counts["backend"],
+        "tier_counts": counts,
+        "n_reuse_sampled": len(overlaps),
+        "reuse_overlap": float(np.mean(overlaps)) if overlaps else None,
+    }
+
+
 def bench_batched(index, streams, *, n_shards, k, k_c, capacity, dtype=None):
     router = ShardedRouter(make_shards(index, n_shards), deadline_s=30)
     engine = BatchedEngine(router, np.asarray(index.dequantized()),
@@ -106,8 +190,8 @@ def bench_batched(index, streams, *, n_shards, k, k_c, capacity, dtype=None):
         engine.answer_batch(sids, [streams[s][t] for s in sids])
         wave_best = min(wave_best, time.perf_counter() - t1)
     elapsed = time.perf_counter() - t0
-    hits = float(np.mean([engine.hit_rate(s) for s in sids]))
-    return elapsed, len(streams) * turns, hits, wave_best
+    hits = engine.hit_rate()   # aggregate across sessions (NaN-safe for
+    return elapsed, len(streams) * turns, hits, wave_best  # 1-turn sessions)
 
 
 def wave_traffic(*, n_sessions, dim, capacity, k_c, k, dtype=None):
@@ -186,9 +270,30 @@ def run(session_counts=(64, 128, 256, 512), *, turns=4, n_shards=4,
               f"  speedup {row['speedup']:.1f}x"
               f"  wave {1e3 * t_wave:.1f}ms"
               f"  moved/payload {moved / max(payload, 1):.2f}x")
+    # Zipfian multi-user workload: the same skewed traffic served with the
+    # shared L2 tier attached and private-cache-only; the gap between the
+    # two combined hit rates is the tier's raison d'etre (gated by
+    # check_regression alongside the reuse-quality overlap floor)
+    zipf_sessions = min(max(session_counts), 8 if smoke else 64)
+    zipf_kwargs = dict(n_sessions=zipf_sessions, n_generations=3,
+                       n_shards=n_shards, k=k, k_c=k_c,
+                       capacity=capacity, dtype=dtype)
+    tiered = bench_zipf(index, world, with_shared=True, **zipf_kwargs)
+    l1only = bench_zipf(index, world, with_shared=False, **zipf_kwargs)
+    zipf = dict(tiered)
+    zipf["l1_only_hit_rate"] = l1only["hit_rate"]
+    zipf["hit_gap"] = tiered["hit_rate"] - l1only["hit_rate"]
+    zipf["backend_queries_saved"] = (l1only["backend_queries"]
+                                     - tiered["backend_queries"])
+    print(f"zipf({zipf_sessions} sessions x {zipf['generations']} gens)"
+          f"  l1-only hit {zipf['l1_only_hit_rate']:.3f}"
+          f"  tiered hit {zipf['hit_rate']:.3f}"
+          f"  (l1 {zipf['l1_hit_rate']:.3f} + l2 {zipf['l2_hit_rate']:.3f})"
+          f"  backend saved {zipf['backend_queries_saved']}"
+          f"  reuse overlap {zipf['reuse_overlap']}")
     record = {"n_docs": index.n_docs, "dim": world.cfg.dim, "k": k,
               "k_c": k_c, "n_shards": n_shards, "dtype": index.dtype,
-              "rows": rows, "timestamp": time.time()}
+              "rows": rows, "zipf": zipf, "timestamp": time.time()}
     # merge-write so full runs and smoke runs co-own one file: the smoke
     # record nests under "smoke" (the committed-baseline schema
     # benchmarks/check_regression.py reads) and neither overwrites the other

@@ -1,4 +1,6 @@
-from repro.core.cache import CacheConfig, CacheState, MetricCache, init_cache
+from repro.core.cache import (BatchedMetricCache, CacheConfig, CacheState,
+                              MetricCache, init_cache)
+from repro.core.shared import SharedTier
 from repro.core.conversation import ConversationalSearcher, TurnRecord
 from repro.core.embedding import (distance_from_scores, pairwise_distances,
                                   pairwise_scores, transform_documents,
@@ -7,7 +9,8 @@ from repro.core.metric_index import MetricIndex, SearchResult, chunked_nn, exact
 from repro.core.quant import DTYPES, QuantizedCorpus, dequantize, quantize
 
 __all__ = [
-    "CacheConfig", "CacheState", "MetricCache", "init_cache",
+    "BatchedMetricCache", "CacheConfig", "CacheState", "MetricCache",
+    "init_cache", "SharedTier",
     "ConversationalSearcher", "TurnRecord",
     "distance_from_scores", "pairwise_distances", "pairwise_scores",
     "transform_documents", "transform_queries",

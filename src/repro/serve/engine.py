@@ -49,6 +49,12 @@ class EngineTurn:
     hit: bool
     degraded: bool
     latency_s: float
+    # which tier of the cache hierarchy served the turn: "l1" (session
+    # cache; also the single-session engine's only hit tier), "l2" (shared
+    # cross-session cache), "l2_reuse" (semantic result-set reuse from the
+    # shared tier's memo), or "backend" (full retrieval).  ``hit`` stays
+    # the paper's notion — True iff no back-end query was needed.
+    tier: str = "l1"
 
 
 def radius_and_docs(scores: np.ndarray, ids: np.ndarray,
@@ -125,7 +131,8 @@ class ConversationalEngine:
         real = ids >= 0
         turn = EngineTurn(ids=ids[real], scores=scores[real],
                           hit=not need_backend, degraded=degraded,
-                          latency_s=time.perf_counter() - t0)
+                          latency_s=time.perf_counter() - t0,
+                          tier="l1" if not need_backend else "backend")
         self.turns.append(turn)
         return turn
 

@@ -14,20 +14,36 @@ with
     ``do``/``record`` masks) FUSED with the answer query.
 
 On the kernel dispatch tiers every one of those cache steps is a single
-Pallas launch, so a whole wave is exactly THREE kernel launches — probe ->
-miss-search -> insert+query — with no vmap-of-scalar fallback (a missless
-wave is two: probe -> query).  Per session the cache ops match the scalar
-ops bit for bit on every tier, so a wave produces results identical to
-running a sequential ``ConversationalEngine`` loop over the same turn
-stream (tested).  One semantic difference is inherent to batching: the
-router degrades per *call*, so a degraded back-end wave marks every miss
-in that wave degraded (and, like the sequential engine, skips their
-(psi, r_a) records so the caches are never poisoned).
+Pallas launch, so a whole L1-only wave is exactly THREE kernel launches —
+probe -> miss-search -> insert+query — with no vmap-of-scalar fallback (a
+missless wave is two: probe -> query).  Per session the cache ops match
+the scalar ops bit for bit on every tier, so a wave produces results
+identical to running a sequential ``ConversationalEngine`` loop over the
+same turn stream (tested).  One semantic difference is inherent to
+batching: the router degrades per *call*, so a degraded back-end wave
+marks every miss in that wave degraded (and, like the sequential engine,
+skips their (psi, r_a) records so the caches are never poisoned).
+
+**Cache hierarchy.**  With a ``repro.core.shared.SharedTier`` attached,
+the miss wave becomes tiered: probe-L1 -> probe-L2 -> back-end search on
+the residual misses -> insert both tiers.  L1 misses first try the shared
+tier's semantic result memo (host-side; a near-duplicate query from
+another session reuses its full result set), then the shared shard caches
+via the SAME ``cache_probe_batched`` kernel over the gathered shard rows
+— so a full-miss tiered wave is exactly FOUR launches (L1 probe -> L2
+probe -> miss-search -> fused insert+query; an L2 answer query or an
+end-of-wave admission flush adds one only when L2 actually serves or
+promotes).  Every tier-served answer also warms the session's L1 cache
+through the same fused insert+query launch, with the (psi, r_a) coverage
+claim recorded only when it is sound: fresh un-degraded back-end radii,
+or the memo's triangle-corrected Eq. 3 claim.
 
 ``SessionManager`` puts an asynchronous front door on the engine: it maps
 external session keys to engine slots and micro-batches ``submit``-ed turns
 into waves via ``MicroBatcher`` — callers get a Future per turn, resolved
-when the wave executes (batch full or window elapsed).
+when the wave executes (batch full or window elapsed).  It is a context
+manager: leaving the ``with`` block (or calling ``shutdown()``) flushes
+pending turns and stops the batcher's window-timer thread.
 """
 
 from __future__ import annotations
@@ -44,6 +60,7 @@ from repro.core.cache import (BatchedMetricCache, CacheConfig,
                               insert_query_batched, probe_batched,
                               query_batched)
 from repro.core.embedding import distance_from_scores
+from repro.core.shared import SharedTier
 from repro.kernels import dispatch as kdispatch
 from repro.serve.engine import EngineTurn
 from repro.serve.router import MicroBatcher, ShardedRouter
@@ -59,7 +76,8 @@ class BatchedEngine:
                  epsilon: float = 0.04, capacity: Optional[int] = None,
                  encoder: Optional[Callable] = None,
                  dtype: Optional[str] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 shared: Optional[SharedTier] = None):
         self.router = router
         self.doc_embeddings = doc_embeddings
         self.n_sessions = n_sessions
@@ -78,11 +96,26 @@ class BatchedEngine:
             capacity=capacity or 16 * k_c, dim=dim, epsilon=epsilon,
             store_dtype=quant.resolve_dtype(dtype)),
             n_sessions)
+        # shared: the optional cross-session L2 tier (None = the paper's
+        # private-cache model).  Probe order: L1 -> L2 memo -> L2 shards ->
+        # back-end.
+        self.shared = shared
+        if shared is not None:
+            assert shared.cfg.dim == dim, "shared tier dim mismatch"
         self.turns: list[list[EngineTurn]] = [[] for _ in range(n_sessions)]
+        # admission identity: (slot, generation) — bumped on start_session
+        # so a recycled slot never inherits its predecessor's popularity
+        # votes in the shared tier's >= 2-distinct-sessions counts
+        self._gen = np.zeros((n_sessions,), np.int64)
 
     def start_session(self, session: int):
         self.cache.reset([session])
         self.turns[session] = []
+        self._gen[session] += 1
+
+    def _token(self, slot) -> tuple:
+        """The slot's current admission identity for the shared tier."""
+        return (int(slot), int(self._gen[int(slot)]))
 
     def _bucket(self, n: int) -> int:
         """Pad wave sizes to powers of two (capped at n_sessions): the
@@ -120,20 +153,85 @@ class BatchedEngine:
         psi = self.encoder(q) if self.encoder else q
 
         sub = self.cache.gather(pad_sids)
+        # launch 1: the L1 LowQuality probe over the wave's session slices
         pr = probe_batched(sub, psi, self.epsilon, backend=self.backend,
                            max_queries=self.cache.cfg.max_queries)
         n_queries = np.asarray(sub.n_queries)
         need = np.logical_or(n_queries == 0, ~np.asarray(pr.hit))
         need[wave:] = False
         degraded = False
-        inserted = False
         failed = np.zeros((bucket,), bool)
+        tier = np.where(need, "backend", "l1").astype(object)
+        psi_np = np.asarray(psi)
 
+        # rows that insert into L1 this wave fill these buffers; tier-served
+        # rows (memo reuse / L2 shard hits) ride the same fused insert+query
+        # launch as back-end rows, so warming L1 from L2 costs no extra
+        # launch and every answer is re-scored against THIS query's psi
+        reuse = np.zeros((bucket,), bool)
+        l2hit = np.zeros((bucket,), bool)
+        new_ids = np.full((bucket, self.k_c), -1, np.int64)
+        new_emb = np.zeros((bucket, self.k_c, self.doc_embeddings.shape[1]),
+                           self.doc_embeddings.dtype)
+        rad = np.zeros((bucket,), np.float32)
+        rec_np = np.zeros((bucket,), bool)
+
+        if self.shared is not None:
+            self.shared.tick()
+        if self.shared is not None and need.any():
+            l2 = self.shared
+            # L2a — semantic result reuse (host-side memo; no launch): a
+            # near-duplicate query from ANOTHER session reuses its full
+            # k_c result set, and records the triangle-corrected Eq. 3
+            # claim r_a - delta(psi_a, psi) when it still clears epsilon
+            for i in np.nonzero(need)[0]:
+                m = l2.memo_lookup(self._token(pad_sids[i]), psi_np[i])
+                if m is None:
+                    continue
+                m_ids, _m_scores, claim = m
+                reuse[i] = True
+                n = min(self.k_c, m_ids.shape[0])
+                new_ids[i, :n] = m_ids[:n]
+                new_emb[i, :n] = self.doc_embeddings[
+                    np.maximum(m_ids[:n], 0)]
+                if claim >= self.epsilon:
+                    rad[i] = claim
+                    rec_np[i] = True
+                # the reusing session is a distinct retriever of these
+                # docs — it counts toward the >= 2-sessions admission bar
+                l2.offer(self._token(pad_sids[i]), psi_np[i], claim,
+                         new_emb[i], new_ids[i])
+            rem = np.logical_and(need, ~reuse)
+            if rem.any():
+                # L2b — launch 2: the SAME LowQuality probe kernel over the
+                # gathered shard rows of the shared tier (whole bucket, one
+                # jitted shape; results masked to the residual misses)
+                shards = l2.route(psi_np)
+                l2pr = l2.probe_rows(psi, shards, backend=self.backend)
+                l2hit = np.logical_and(np.asarray(l2pr.hit), rem)
+                if l2hit.any():
+                    # covered by a shared claim: answer from the shard's
+                    # cached docs (one fused wave-query launch, only when
+                    # L2 actually serves someone)
+                    (_s2, _d2, i2, _sl2) = l2.query_rows(
+                        psi, shards, self.k, backend=self.backend)
+                    i2_np = np.asarray(i2)
+                    for i in np.nonzero(l2hit)[0]:
+                        row = i2_np[i][i2_np[i] >= 0]
+                        n = min(self.k_c, row.shape[0])
+                        new_ids[i, :n] = row[:n]
+                        new_emb[i, :n] = self.doc_embeddings[row[:n]]
+                need = np.logical_and(rem, ~l2hit)
+            else:
+                need = rem
+            tier[reuse] = "l2_reuse"
+            tier[l2hit] = "l2"
+
+        backend_ok = np.zeros((bucket,), bool)
         if need.any():
             miss = np.nonzero(need)[0]
             try:
-                ans, degraded = self.router.search(
-                    np.asarray(psi)[miss], self.k_c)
+                ans, degraded = self.router.search(psi_np[miss], self.k_c)
                 n_valid = (ans.ids >= 0).sum(axis=1)
                 if (n_valid == 0).any():
                     raise TimeoutError("back-end answer holds no valid docs")
@@ -142,25 +240,23 @@ class BatchedEngine:
                 radii = np.asarray(distance_from_scores(jnp.asarray(
                     np.take_along_axis(ans.scores, n_valid[:, None] - 1,
                                        axis=1)[:, 0])))
-                new_ids = np.full((bucket, self.k_c), -1, ans.ids.dtype)
                 new_ids[miss] = ans.ids
-                new_emb = np.zeros((bucket, self.k_c,
-                                    self.doc_embeddings.shape[1]),
-                                   self.doc_embeddings.dtype)
                 new_emb[miss] = self.doc_embeddings[np.maximum(ans.ids, 0)]
-                rad = np.zeros((bucket,), np.float32)
                 rad[miss] = radii
-                do = jnp.asarray(need)
-                record = do if not degraded else jnp.zeros((bucket,), bool)
-                # insert + answer query FUSED: one kernel launch closes the
-                # wave (launch 3 of 3: probe -> miss-search -> insert+query)
-                (scores, _dists, ids, _slots), sub, dropped = \
-                    insert_query_batched(
-                        sub, self.cache.cfg, psi, jnp.asarray(rad),
-                        jnp.asarray(new_emb), jnp.asarray(new_ids), self.k,
-                        do=do, record=record, backend=self.backend)
-                self.cache.total_dropped += int(np.asarray(dropped).sum())
-                inserted = True
+                # a degraded merge is missing shards: keep the docs, skip
+                # the (psi, r_a) record so no cache learns a false claim
+                rec_np[miss] = not degraded
+                backend_ok = need.copy()
+                if self.shared is not None and not degraded:
+                    # fresh retrievals feed the shared tier: memoized for
+                    # semantic reuse, offered toward shard admission
+                    for j, i in enumerate(miss):
+                        tok = self._token(pad_sids[i])
+                        self.shared.memo_record(tok, psi_np[i], ans.ids[j],
+                                                ans.scores[j],
+                                                float(radii[j]))
+                        self.shared.offer(tok, psi_np[i], float(radii[j]),
+                                          new_emb[i], new_ids[i])
             except TimeoutError as e:
                 # total back-end failure: miss sessions fall back to their
                 # caches; one with an empty cache fails alone, like its
@@ -171,7 +267,19 @@ class BatchedEngine:
                     raise
                 outage = e
 
-        if not inserted:  # missless (or outage) wave: probe -> query
+        fill = np.logical_or(np.logical_or(reuse, l2hit), backend_ok)
+        if fill.any():
+            # insert + answer query FUSED: one kernel launch closes the
+            # wave (L1-only: launch 3 of 3, probe -> miss-search ->
+            # insert+query; tiered: launch 4 of 4, after the L2 probe)
+            (scores, _dists, ids, _slots), sub, dropped = \
+                insert_query_batched(
+                    sub, self.cache.cfg, psi, jnp.asarray(rad),
+                    jnp.asarray(new_emb), jnp.asarray(new_ids), self.k,
+                    do=jnp.asarray(fill), record=jnp.asarray(rec_np),
+                    backend=self.backend)
+            self.cache.total_dropped += int(np.asarray(dropped).sum())
+        else:  # missless (or outage) wave: probe -> query
             (scores, _dists, ids, _slots), sub = query_batched(
                 sub, psi, self.k, backend=self.backend)
         able = np.nonzero(~failed[:wave])[0]
@@ -180,6 +288,10 @@ class BatchedEngine:
         # sequential engine raising before its cache query)
         self.cache.scatter(sids[able],
                            jax.tree_util.tree_map(lambda x: x[able], sub))
+        if self.shared is not None:
+            # end-of-wave: promote the wave's admitted answers into their
+            # shards (deferred so admission never adds launches mid-wave)
+            self.shared.flush_admissions(backend=self.backend)
 
         latency = time.perf_counter() - t0
         out: list = []
@@ -194,19 +306,44 @@ class BatchedEngine:
             row_ids = np.asarray(ids[i])
             row_scores = np.asarray(scores[i])
             real = row_ids >= 0
+            row_tier = str(tier[i])
             turn = EngineTurn(ids=row_ids[real], scores=row_scores[real],
-                              hit=not bool(need[i]),
-                              degraded=bool(degraded and need[i]),
-                              latency_s=latency)
+                              hit=row_tier != "backend",
+                              degraded=bool(degraded
+                                            and row_tier == "backend"),
+                              latency_s=latency, tier=row_tier)
             self.turns[int(s)].append(turn)
             out.append(turn)
         return out
 
-    def hit_rate(self, session: int) -> float:
-        turns = self.turns[session]
-        if len(turns) <= 1:
+    def hit_rate(self, session: Optional[int] = None) -> float:
+        """Cache hit rate, excluding each session's compulsory first turn.
+
+        With a session index: that session's rate (NaN for sessions of
+        <= 1 turn, which have no eligible turns).  With no argument: the
+        aggregate across ALL sessions' eligible turns — the engine-level
+        number serve_bench reports, well-defined as long as any session
+        has a second turn.
+        """
+        if session is not None:
+            turns = self.turns[session]
+            if len(turns) <= 1:
+                return float("nan")
+            return float(np.mean([t.hit for t in turns[1:]]))
+        flags = [t.hit for turns in self.turns for t in turns[1:]]
+        if not flags:
             return float("nan")
-        return float(np.mean([t.hit for t in turns[1:]]))
+        return float(np.mean(flags))
+
+    def tier_counts(self, skip_first: bool = True) -> dict:
+        """Turns served per hierarchy tier (``l1`` / ``l2`` / ``l2_reuse``
+        / ``backend``), excluding each session's compulsory first turn by
+        default (matching ``hit_rate`` accounting)."""
+        counts = {"l1": 0, "l2": 0, "l2_reuse": 0, "backend": 0}
+        for turns in self.turns:
+            for t in (turns[1:] if skip_first else turns):
+                counts[t.tier] += 1
+        return counts
 
 
 class SessionManager:
@@ -242,8 +379,24 @@ class SessionManager:
         """End a session and recycle its slot.  Flushes the pending wave
         first so a turn already submitted for this key cannot execute
         against the slot's next occupant."""
+        if key not in self._slots:
+            raise KeyError(f"unknown session key {key!r}")
         self.batcher.flush()
         self._free.append(self._slots.pop(key))
+
+    def shutdown(self):
+        """Flush pending turns and stop the batcher's window-timer thread.
+        Idempotent; further ``submit`` calls raise.  Benchmarks and tests
+        that spin up many managers must call this (or use the manager as a
+        context manager) so timer threads don't leak across runs."""
+        self.batcher.close()
+
+    def __enter__(self) -> "SessionManager":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.shutdown()
+        return False
 
     @property
     def active_sessions(self) -> int:

@@ -27,7 +27,7 @@ from repro.core import layout, quant
 from repro.core.cache import (CacheConfig, CacheState, MetricCache,
                               init_batched_cache, init_cache, insert,
                               insert_query_batched, probe, probe_batched,
-                              query)
+                              query, reset_sessions)
 from repro.kernels import jaxpr_util
 
 jax.config.update("jax_platform_name", "cpu")
@@ -314,3 +314,60 @@ def test_wave_moved_bytes_below_payload():
             st, cfg, p, r, e, i, k=4, backend="interpret"),
         state, psi, radius, emb, ids)
     assert moved < payload_bytes, (moved, payload_bytes)
+
+
+# ------------------------------------------- 5. session-lifecycle resets
+def test_reset_sessions_preserves_padded_sentinels():
+    """Satellite (ISSUE 7): resetting one L1 session row re-initializes its
+    LOGICAL content while the padded extents of EVERY row keep their
+    permanent sentinels — and untouched rows stay bitwise identical, so an
+    end-of-conversation reset can never perturb a neighbor session."""
+    cfg, state, psi, ids, emb, radius = _wave_setup(s=3)
+    _out, state, _dropped = insert_query_batched(
+        state, cfg, psi, radius, emb, ids, k=4, backend="interpret")
+    before = jax.tree_util.tree_map(np.asarray, state)
+    state = reset_sessions(state, cfg, jnp.asarray([True, False, False]))
+    cap, mq = cfg.capacity, cfg.max_queries
+    # the reset row is fully fresh: sentinels across logical AND padded slots
+    np.testing.assert_array_equal(np.asarray(state.doc_ids)[0], -1)
+    np.testing.assert_array_equal(np.asarray(state.doc_stamp)[0], 0)
+    assert np.isneginf(np.asarray(state.q_radius)[0]).all()
+    assert int(state.n_docs[0]) == 0 and int(state.n_queries[0]) == 0
+    # padded extents of every row still hold the permanent sentinels
+    np.testing.assert_array_equal(np.asarray(state.doc_ids)[:, cap:], -1)
+    np.testing.assert_array_equal(np.asarray(state.doc_stamp)[:, cap:], 0)
+    assert np.isneginf(np.asarray(state.q_radius)[:, mq:]).all()
+    # the other sessions' rows are bitwise untouched
+    for name, b, a in zip(CacheState._fields, before, state):
+        np.testing.assert_array_equal(
+            b[1:], np.asarray(a)[1:],
+            err_msg=f"reset of row 0 leaked into leaf {name}")
+
+
+def test_shared_tier_admissions_keep_padded_sentinels():
+    """The L2 shard rows are the SAME pre-padded CacheState layout: after
+    an admission insert and a TTL expiry pass, the padded extents still
+    hold their permanent sentinels (zero-copy launches depend on them)."""
+    from repro.core.shared import SharedTier
+
+    dim, cap, mq = 64, 100, 5
+    tier = SharedTier(dim=dim, n_shards=2, capacity=cap, max_queries=mq,
+                      ttl_waves=2, admission_sessions=1,
+                      backend="interpret")
+    rng = np.random.default_rng(21)
+    psi = _rows(rng, 1, dim)[0]
+    tier.tick()
+    assert tier.offer(("a", 1), psi, 0.5, _rows(rng, 7, dim), np.arange(7))
+    tier.flush_admissions()
+    for _ in range(3):
+        tier.tick()                    # expire the claim via TTL
+    st = tier.state
+    assert tier.cfg.phys_capacity > cap and tier.cfg.phys_max_queries > mq
+    np.testing.assert_array_equal(np.asarray(st.doc_ids)[:, cap:], -1)
+    np.testing.assert_array_equal(np.asarray(st.doc_stamp)[:, cap:], 0)
+    np.testing.assert_array_equal(np.asarray(st.doc_scale)[:, cap:], 1.0)
+    assert np.isneginf(np.asarray(st.q_radius)[:, mq:]).all()
+    np.testing.assert_array_equal(np.asarray(st.q_scale)[:, mq:], 1.0)
+    assert np.asarray(st.q_emb.astype(jnp.float32))[:, mq:, :].sum() == 0.0
+    # the promoted documents landed in the logical prefix
+    assert tier.contains(np.arange(7)).all()

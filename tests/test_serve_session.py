@@ -303,18 +303,18 @@ def test_session_manager_waves_match_sequential(world, index):
         e.start_session()
     eng = BatchedEngine(ShardedRouter(make_shards(index, 3), deadline_s=30),
                         doc, dim=index.dim, n_sessions=S, k=k, k_c=k_c)
-    mgr = SessionManager(eng, window_s=10.0, max_batch=S)  # flush on full
     streams = _streams(world, index, S)
-    for s in range(S):
-        mgr.open(f"user-{s}")
-    for t in range(T):
-        futs = [mgr.submit(f"user-{s}", streams[s][t]) for s in range(S)]
-        for s, fut in enumerate(futs):
-            turn = fut.result(timeout=30)
-            ref = seq[s].answer(streams[s][t])
-            np.testing.assert_array_equal(ref.ids, turn.ids)
-            np.testing.assert_array_equal(ref.scores, turn.scores)
-            assert ref.hit == turn.hit
+    with SessionManager(eng, window_s=10.0, max_batch=S) as mgr:  # flush full
+        for s in range(S):
+            mgr.open(f"user-{s}")
+        for t in range(T):
+            futs = [mgr.submit(f"user-{s}", streams[s][t]) for s in range(S)]
+            for s, fut in enumerate(futs):
+                turn = fut.result(timeout=30)
+                ref = seq[s].answer(streams[s][t])
+                np.testing.assert_array_equal(ref.ids, turn.ids)
+                np.testing.assert_array_equal(ref.scores, turn.scores)
+                assert ref.hit == turn.hit
 
 
 def test_session_manager_splits_same_session_turns(world, index):
@@ -323,34 +323,81 @@ def test_session_manager_splits_same_session_turns(world, index):
     eng = BatchedEngine(ShardedRouter(make_shards(index, 2), deadline_s=30),
                         np.asarray(index.doc_emb), dim=index.dim,
                         n_sessions=2, k=5, k_c=80)
-    mgr = SessionManager(eng, window_s=10.0, max_batch=3)
-    mgr.open("a")
-    mgr.open("b")
     qa = _streams(world, index, 1)[0]
-    f1 = mgr.submit("a", qa[0])
-    f2 = mgr.submit("b", qa[0])
-    f3 = mgr.submit("a", qa[1])            # same session, same wave -> split
-    t1, t2, t3 = (f.result(timeout=30) for f in (f1, f2, f3))
+    with SessionManager(eng, window_s=10.0, max_batch=3) as mgr:
+        mgr.open("a")
+        mgr.open("b")
+        f1 = mgr.submit("a", qa[0])
+        f2 = mgr.submit("b", qa[0])
+        f3 = mgr.submit("a", qa[1])        # same session, same wave -> split
+        t1, t2, t3 = (f.result(timeout=30) for f in (f1, f2, f3))
     assert not t1.hit                       # compulsory first miss
     assert len(eng.turns[0]) == 2           # both turns landed, in order
     assert eng.turns[0][0] is t1 and eng.turns[0][1] is t3
+
+
+def test_session_manager_shutdown_and_context_manager(world, index):
+    """Satellite (ISSUE 7): leaving the with-block (or calling shutdown())
+    stops the MicroBatcher's window-timer thread — later submits raise
+    instead of stranding a Future — and shutdown is idempotent."""
+    eng = BatchedEngine(ShardedRouter(make_shards(index, 2), deadline_s=30),
+                        np.asarray(index.doc_emb), dim=index.dim,
+                        n_sessions=2, k=5, k_c=50)
+    q = _streams(world, index, 1)[0]
+    with SessionManager(eng, window_s=0.02, max_batch=8) as mgr:
+        mgr.open("u")
+        turn = mgr.submit("u", q[0]).result(timeout=30)
+        assert turn.ids.shape == (5,)
+    with pytest.raises(RuntimeError, match="closed"):
+        mgr.submit("u", q[1])
+    mgr.shutdown()                              # idempotent
+
+
+def test_session_manager_close_unknown_key_names_key(index):
+    eng = BatchedEngine(ShardedRouter(make_shards(index, 2), deadline_s=30),
+                        np.asarray(index.doc_emb), dim=index.dim,
+                        n_sessions=1, k=5, k_c=50)
+    with SessionManager(eng) as mgr:
+        with pytest.raises(KeyError, match="unknown session key 'ghost'"):
+            mgr.close("ghost")
+
+
+def test_batched_engine_aggregate_hit_rate(world, index):
+    """Satellite (ISSUE 7): hit_rate() with no argument aggregates across
+    every session's eligible turns — well-defined as soon as ANY session
+    has a second turn, where the old per-session mean was NaN-prone."""
+    eng = BatchedEngine(ShardedRouter(make_shards(index, 2), deadline_s=30),
+                        np.asarray(index.doc_emb), dim=index.dim,
+                        n_sessions=2, k=5, k_c=80)
+    assert np.isnan(eng.hit_rate())
+    streams = _streams(world, index, 2)
+    eng.answer_batch([0, 1], [streams[0][0], streams[1][0]])
+    assert np.isnan(eng.hit_rate())             # only compulsory turns so far
+    eng.answer_batch([0], [streams[0][0]])      # repeat -> certain L1 hit
+    assert eng.hit_rate() == eng.hit_rate(0) == 1.0
+    assert np.isnan(eng.hit_rate(1))            # single-turn session
+    per = [eng.hit_rate(s) for s in range(2)]
+    agg = float(np.mean([h for turns in eng.turns
+                         for h in [t.hit for t in turns[1:]]]))
+    assert eng.hit_rate() == agg
+    assert per[0] == agg                        # session 1 contributes none
 
 
 def test_session_manager_window_flush_and_slot_reuse(world, index):
     eng = BatchedEngine(ShardedRouter(make_shards(index, 2), deadline_s=30),
                         np.asarray(index.doc_emb), dim=index.dim,
                         n_sessions=1, k=5, k_c=50)
-    mgr = SessionManager(eng, window_s=0.05, max_batch=8)
-    mgr.open("x")
     q = _streams(world, index, 1)[0]
-    fut = mgr.submit("x", q[0])             # below max_batch: window flushes
-    assert fut.result(timeout=10).ids.shape == (5,)
-    mgr.close("x")
-    assert mgr.active_sessions == 0
-    slot = mgr.open("y")                    # slot recycled, cache reset
-    assert slot == 0 and eng.cache.n_docs[0] == 0
-    with pytest.raises(RuntimeError, match="no free session slots"):
-        mgr._free.clear() or mgr.open("z")
+    with SessionManager(eng, window_s=0.05, max_batch=8) as mgr:
+        mgr.open("x")
+        fut = mgr.submit("x", q[0])         # below max_batch: window flushes
+        assert fut.result(timeout=10).ids.shape == (5,)
+        mgr.close("x")
+        assert mgr.active_sessions == 0
+        slot = mgr.open("y")                # slot recycled, cache reset
+        assert slot == 0 and eng.cache.n_docs[0] == 0
+        with pytest.raises(RuntimeError, match="no free session slots"):
+            mgr._free.clear() or mgr.open("z")
 
 
 def test_batched_engine_trims_sentinel_rows_when_cache_short(index):

@@ -196,22 +196,22 @@ def test_concurrent_sessions_through_session_manager(world, index):
         e.start_session()
     eng = BatchedEngine(ShardedRouter(_make_shards(index, 4), deadline_s=30),
                         doc, dim=index.dim, n_sessions=S, k=k, k_c=k_c)
-    mgr = SessionManager(eng, window_s=10.0, max_batch=S)
     streams = []
-    for s in range(S):
-        conv = world.conversations[s % len(world.conversations)]
-        streams.append(np.asarray(index.transform_queries(
-            jnp.asarray(conv.queries, jnp.float32))))
-        mgr.open(s)
-    turns = streams[0].shape[0]
-    for t in range(turns):
-        futs = [mgr.submit(s, streams[s][t]) for s in range(S)]
-        for s, fut in enumerate(futs):
-            got = fut.result(timeout=60)
-            ref = seq[s].answer(streams[s][t])
-            np.testing.assert_array_equal(ref.ids, got.ids)
-            np.testing.assert_array_equal(ref.scores, got.scores)
-            assert ref.hit == got.hit
+    with SessionManager(eng, window_s=10.0, max_batch=S) as mgr:
+        for s in range(S):
+            conv = world.conversations[s % len(world.conversations)]
+            streams.append(np.asarray(index.transform_queries(
+                jnp.asarray(conv.queries, jnp.float32))))
+            mgr.open(s)
+        turns = streams[0].shape[0]
+        for t in range(turns):
+            futs = [mgr.submit(s, streams[s][t]) for s in range(S)]
+            for s, fut in enumerate(futs):
+                got = fut.result(timeout=60)
+                ref = seq[s].answer(streams[s][t])
+                np.testing.assert_array_equal(ref.ids, got.ids)
+                np.testing.assert_array_equal(ref.scores, got.scores)
+                assert ref.hit == got.hit
     for s in range(S):
         assert seq[s].hit_rate() == eng.hit_rate(s)
         assert eng.hit_rate(s) > 0.0         # sessions actually reuse work
