@@ -12,7 +12,15 @@ Replays the same per-session turn streams two ways —
 — and reports wall-clock queries/sec for each at several concurrency
 levels.  Writes ``BENCH_serve.json``.
 
-    PYTHONPATH=src python benchmarks/serve_bench.py [--smoke]
+``--open-loop`` instead drives the asynchronous front door with an
+open-loop Poisson arrival process (arrivals do NOT wait for previous
+turns — the honest way to measure tail latency) plus session churn, twice:
+once through the continuous scheduler and once through the deprecated
+fixed-window admission, reporting per-turn p50/p95/p99 (total and queue
+wait, per serving tier) and the continuous-vs-windowed p99 improvement
+``check_regression.py`` gates.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--open-loop]
 
 ``--smoke`` runs a seconds-scale configuration (CI exercises the batched
 path on every push); the default sweep covers 64-512 concurrent sessions.
@@ -37,7 +45,7 @@ from repro.kernels import jaxpr_util
 from repro.data.conversations import WorldConfig, make_world
 from repro.serve.engine import ConversationalEngine
 from repro.serve.router import ShardAnswer, ShardedRouter
-from repro.serve.session import BatchedEngine
+from repro.serve.session import BatchedEngine, SessionManager
 
 
 def make_shards(index: MetricIndex, n_shards: int):
@@ -221,6 +229,217 @@ def wave_traffic(*, n_sessions, dim, capacity, k_c, k, dtype=None):
     return int(moved), int(state.doc_emb.nbytes)
 
 
+def _make_engine(index, *, n_sessions, n_shards, k, k_c, capacity, dtype):
+    router = ShardedRouter(make_shards(index, n_shards), deadline_s=30)
+    return BatchedEngine(router, np.asarray(index.dequantized()),
+                         dim=index.dim, n_sessions=n_sessions, k=k, k_c=k_c,
+                         capacity=capacity, dtype=dtype)
+
+
+def _warm_buckets(engine, streams) -> float:
+    """Compile every power-of-two wave bucket on both the miss path
+    (probe + miss-search + fused insert+query) and the hit path (probe +
+    query) so the open-loop measurement never pays an XLA compile, then
+    reset all sessions.  Returns the warm full-wave service time (best of
+    3 miss waves) — the calibration input for arrival rate and the
+    fixed-window baseline."""
+    n = engine.n_sessions
+    sizes, b = [], 1
+    while b < n:
+        sizes.append(b)
+        b *= 2
+    sizes.append(n)
+    for size in sizes:
+        sids = list(range(size))
+        for s in sids:
+            engine.start_session(s)
+        qs = [streams[s][0] for s in sids]
+        engine.answer_batch(sids, qs)   # miss path (insert+query shape)
+        engine.answer_batch(sids, qs)   # hit path (query shape)
+    svc = float("inf")
+    for _ in range(3):
+        for s in range(n):
+            engine.start_session(s)
+        t0 = time.perf_counter()
+        engine.answer_batch(list(range(n)), [streams[s][0] for s in range(n)])
+        svc = min(svc, time.perf_counter() - t0)
+    for s in range(n):
+        engine.start_session(s)
+    return svc
+
+
+def _percentiles_ms(xs) -> dict:
+    xs = np.asarray(xs, np.float64) * 1e3
+    if xs.size == 0:
+        return {"count": 0, "p50_ms": None, "p95_ms": None, "p99_ms": None}
+    return {"count": int(xs.size),
+            "mean_ms": float(xs.mean()),
+            "p50_ms": float(np.percentile(xs, 50)),
+            "p95_ms": float(np.percentile(xs, 95)),
+            "p99_ms": float(np.percentile(xs, 99))}
+
+
+def _open_loop_once(index, world, *, mode, n_sessions, n_arrivals,
+                    arrival_hz, window_s, n_shards, k, k_c, capacity,
+                    dtype, seed) -> dict:
+    """One open-loop replay: Poisson arrivals at ``arrival_hz`` against a
+    ``SessionManager`` in ``mode`` ('continuous' or 'windowed'), with
+    session churn (a session whose conversation ends is closed and its key
+    reopened on a fresh conversation).  Arrivals follow an absolute
+    schedule (sleep-until, no drift), and never wait for earlier turns —
+    queue wait lands in the measured latency instead of silently throttling
+    the workload."""
+    engine = _make_engine(index, n_sessions=n_sessions, n_shards=n_shards,
+                          k=k, k_c=k_c, capacity=capacity, dtype=dtype)
+    mgr_kwargs = (dict(window_s=0.0, adaptive=True, overlap=True)
+                  if mode == "continuous" else
+                  dict(window_s=window_s, adaptive=False, overlap=False))
+    rng = np.random.default_rng(seed)
+    convs = world.conversations
+    conv_len = convs[0].queries.shape[0]
+    next_conv = n_sessions          # global cursor for churned sessions
+
+    def stream_for(conv_idx):
+        return np.asarray(index.transform_queries(jnp.asarray(
+            convs[conv_idx % len(convs)].queries, jnp.float32)))
+
+    streams = {key: stream_for(key) for key in range(n_sessions)}
+    ptr = {key: 0 for key in range(n_sessions)}
+    churns = 0
+    futures = []
+    with SessionManager(engine, max_batch=n_sessions,
+                        **mgr_kwargs) as mgr:
+        for key in range(n_sessions):
+            mgr.open(key)
+        gaps = rng.exponential(1.0 / arrival_hz, size=n_arrivals)
+        sched = np.cumsum(gaps) + time.perf_counter()
+        for i in range(n_arrivals):
+            now = time.perf_counter()
+            if sched[i] > now:
+                time.sleep(sched[i] - now)
+            key = int(rng.integers(n_sessions))
+            if ptr[key] >= conv_len:
+                # churn: this conversation is over — drain + recycle the
+                # slot, open the key on a fresh conversation
+                mgr.close(key)
+                mgr.open(key)
+                streams[key] = stream_for(next_conv)
+                ptr[key] = 0
+                next_conv += 1
+                churns += 1
+            futures.append(mgr.submit(key, streams[key][ptr[key]]))
+            ptr[key] += 1
+        mgr.flush()
+        turns = [f.result(timeout=60) for f in futures]
+        summary = mgr.telemetry.summary()
+    totals = [t.latency_s for t in turns]
+    waits = [t.queue_wait_s for t in turns]
+    rec = {
+        "mode": mode,
+        "arrivals": n_arrivals,
+        "arrival_hz": arrival_hz,
+        "churns": churns,
+        "hit_rate": float(np.mean([t.hit for t in turns])),
+        "total": _percentiles_ms(totals),
+        "queue_wait": _percentiles_ms(waits),
+        "tiers": {tier: _percentiles_ms(
+            [t.latency_s for t in turns if t.tier == tier])
+            for tier in sorted({t.tier for t in turns})},
+        "waves": summary["waves"],
+        "mean_wave": summary["wave_size"]["mean"],
+    }
+    if mode == "windowed":
+        rec["window_ms"] = window_s * 1e3
+    return rec
+
+
+def bench_open_loop(index, world, *, n_sessions, n_arrivals, load=0.5,
+                    n_shards=4, k=10, k_c=100, capacity=None, dtype=None,
+                    repeats=2, seed=17) -> dict:
+    """Continuous scheduler vs fixed-window admission under identical
+    open-loop Poisson traffic.
+
+    Calibration keeps the record machine-independent in shape: the warm
+    full-wave service time ``svc`` sets both the arrival rate
+    (``load / svc`` — a fixed multiple of the wave rate, not a fixed Hz;
+    small enough that neither mode saturates, so the A/B measures
+    admission policy rather than queue buildup) and the fixed-window
+    baseline's window (``4 x svc``, floored at 4 ms — the old
+    MicroBatcher default regime).  Each mode runs ``repeats`` times and
+    keeps its lowest-p99 run (wall-clock on shared hosts is noisy; the
+    minimum is each policy's least-contended estimate).  The gated
+    headline is ``p99_improvement``: windowed p99 over continuous p99,
+    which the continuous scheduler wins by not holding arrivals hostage
+    to the window timer.
+    """
+    capacity = capacity or 4 * k_c
+    warm_engine = _make_engine(index, n_sessions=n_sessions,
+                               n_shards=n_shards, k=k, k_c=k_c,
+                               capacity=capacity, dtype=dtype)
+    warm_streams = _streams(world, index, n_sessions)
+    svc = _warm_buckets(warm_engine, warm_streams)
+    arrival_hz = load / max(svc, 1e-5)
+    window_s = max(4.0 * svc, 0.004)
+    kwargs = dict(n_sessions=n_sessions, n_arrivals=n_arrivals,
+                  arrival_hz=arrival_hz, window_s=window_s,
+                  n_shards=n_shards, k=k, k_c=k_c, capacity=capacity,
+                  dtype=dtype)
+    def best(mode):
+        runs = [_open_loop_once(index, world, mode=mode, seed=seed + r,
+                                **kwargs) for r in range(repeats)]
+        return min(runs, key=lambda r: r["total"]["p99_ms"])
+    continuous = best("continuous")
+    windowed = best("windowed")
+    improvement = (windowed["total"]["p99_ms"]
+                   / max(continuous["total"]["p99_ms"], 1e-9))
+    rec = {
+        "sessions": n_sessions,
+        "load": load,
+        "wave_service_ms": svc * 1e3,
+        "arrival_hz": arrival_hz,
+        "window_ms": window_s * 1e3,
+        "continuous": continuous,
+        "windowed": windowed,
+        "p99_improvement": improvement,
+    }
+    print(f"open-loop({n_sessions} sessions, {arrival_hz:.0f}/s): "
+          f"continuous p99 {continuous['total']['p99_ms']:.1f}ms "
+          f"(wait p99 {continuous['queue_wait']['p99_ms']:.1f}ms) | "
+          f"windowed p99 {windowed['total']['p99_ms']:.1f}ms "
+          f"(window {window_s * 1e3:.1f}ms) | "
+          f"p99 improvement {improvement:.2f}x")
+    return rec
+
+
+def run_open_loop(*, smoke=False, dtype=None,
+                  out_path="BENCH_serve.json") -> dict:
+    """Entry point for ``--open-loop``: builds the world, runs the A/B
+    open-loop measurement, and merge-writes it under ``open_loop`` (nested
+    in ``smoke`` for smoke runs, the schema check_regression gates)."""
+    if smoke:
+        cfg = WorldConfig(n_topics=4, docs_per_topic=200, n_background=1000,
+                          dim=64, subspace_dim=8, turns=3, n_conversations=8,
+                          doc_sigma=0.6, query_sigma=0.12, drift_sigma=0.16,
+                          subtopic_prob=0.35, subtopic_sigma=0.75, seed=7)
+        n_sessions, n_arrivals, k_c = 8, 240, 50
+    else:
+        cfg = WorldConfig(n_topics=8, docs_per_topic=800, n_background=4000,
+                          dim=128, subspace_dim=8, turns=4,
+                          n_conversations=16, doc_sigma=0.6,
+                          query_sigma=0.12, drift_sigma=0.16,
+                          subtopic_prob=0.35, subtopic_sigma=0.75, seed=7)
+        n_sessions, n_arrivals, k_c = 64, 2000, 100
+    world = make_world(cfg)
+    index = MetricIndex(jnp.asarray(world.doc_emb, jnp.float32), dtype=dtype)
+    rec = bench_open_loop(index, world, n_sessions=n_sessions,
+                          n_arrivals=n_arrivals, k_c=k_c, dtype=dtype)
+    rec["timestamp"] = time.time()
+    merge_json(out_path,
+               {"smoke": {"open_loop": rec}} if smoke
+               else {"open_loop": rec})
+    return rec
+
+
 def run(session_counts=(64, 128, 256, 512), *, turns=4, n_shards=4,
         k=10, k_c=100, repeats=3, world_cfg=None, dtype=None, smoke=False,
         out_path="BENCH_serve.json") -> dict:
@@ -301,10 +520,23 @@ def run(session_counts=(64, 128, 256, 512), *, turns=4, n_shards=4,
     return record
 
 
+def _deep_merge(dst: dict, src: dict) -> dict:
+    """Recursively merge ``src`` into ``dst`` (nested dicts merge key-wise,
+    anything else overwrites) so e.g. ``--smoke --open-loop`` extends the
+    existing ``smoke`` record instead of replacing it."""
+    for key, val in src.items():
+        if isinstance(val, dict) and isinstance(dst.get(key), dict):
+            _deep_merge(dst[key], val)
+        else:
+            dst[key] = val
+    return dst
+
+
 def merge_json(path: str, updates: dict) -> None:
-    """Merge ``updates`` into a JSON object file, preserving other keys
-    (standalone copy of benchmarks.kernel_bench.merge_json: this module
-    must run as a plain script, where sibling imports don't resolve)."""
+    """Deep-merge ``updates`` into a JSON object file, preserving other
+    keys (standalone sibling of benchmarks.kernel_bench.merge_json: this
+    module must run as a plain script, where sibling imports don't
+    resolve)."""
     rec = {}
     if os.path.exists(path):
         try:
@@ -314,7 +546,7 @@ def merge_json(path: str, updates: dict) -> None:
             rec = {}
     if not isinstance(rec, dict):
         rec = {}
-    rec.update(updates)
+    _deep_merge(rec, updates)
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)
 
@@ -323,12 +555,18 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale run for CI (8 sessions, tiny world)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="open-loop Poisson tail-latency A/B (continuous "
+                         "scheduler vs fixed-window admission) instead of "
+                         "the closed-loop throughput sweep")
     ap.add_argument("--dtype", default=None,
                     help="corpus + cache storage format (fp32/bf16/int8; "
                          "default follows REPRO_CORPUS_DTYPE)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
-    if args.smoke:
+    if args.open_loop:
+        run_open_loop(smoke=args.smoke, dtype=args.dtype, out_path=args.out)
+    elif args.smoke:
         cfg = WorldConfig(n_topics=4, docs_per_topic=200, n_background=1000,
                           dim=64, subspace_dim=8, turns=3, n_conversations=8,
                           doc_sigma=0.6, query_sigma=0.12, drift_sigma=0.16,

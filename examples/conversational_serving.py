@@ -70,7 +70,7 @@ def main():
         ShardedRouter(make_shards(index, 8), deadline_s=5.0),
         np.asarray(index.dequantized()), dim=index.dim,
         n_sessions=n_sessions, k=10, k_c=200)
-    mgr = SessionManager(batched, window_s=0.005, max_batch=n_sessions)
+    mgr = SessionManager(batched)        # continuous slot-scheduled admission
     streams = [np.asarray(index.transform_queries(
         jnp.asarray(c.queries, jnp.float32))) for c in world.conversations]
     for s in range(n_sessions):
@@ -86,6 +86,12 @@ def main():
     rates = [100 * batched.hit_rate(s) for s in range(n_sessions)]
     print(f"throughput: {n_sessions * streams[0].shape[0] / total:.1f} q/s  "
           f"hit rates: {', '.join(f'{r:.0f}%' for r in rates)}")
+    tel = mgr.telemetry.summary()
+    tot, qw = tel["spans"]["total_s"], tel["spans"]["queue_wait_s"]
+    print(f"SLO: p50={1e3 * tot['p50']:.1f} ms p99={1e3 * tot['p99']:.1f} ms "
+          f"(queue wait p99={1e3 * qw['p99']:.1f} ms) over "
+          f"{tel['waves']} waves, mean wave={tel['wave_size']['mean']:.1f}")
+    mgr.shutdown()
 
 
 if __name__ == "__main__":

@@ -1,9 +1,13 @@
-"""Serving tier: hedging shard router, single-session engine, and the
-session-batched multi-session engine + scheduler."""
+"""Serving tier: hedging shard router, single-session engine, the
+session-batched multi-session engine, and the continuous-batching
+scheduler + telemetry front door."""
 
 from repro.serve.engine import ConversationalEngine, EngineTurn
-from repro.serve.router import MicroBatcher, ShardAnswer, ShardedRouter
+from repro.serve.router import ShardAnswer, ShardedRouter
+from repro.serve.scheduler import ContinuousScheduler, MicroBatcher
 from repro.serve.session import BatchedEngine, SessionManager
+from repro.serve.telemetry import ServeTelemetry, TurnSpans
 
 __all__ = ["ConversationalEngine", "EngineTurn", "MicroBatcher",
-           "ShardAnswer", "ShardedRouter", "BatchedEngine", "SessionManager"]
+           "ShardAnswer", "ShardedRouter", "BatchedEngine", "SessionManager",
+           "ContinuousScheduler", "ServeTelemetry", "TurnSpans"]

@@ -55,6 +55,13 @@ class EngineTurn:
     # shared tier's memo), or "backend" (full retrieval).  ``hit`` stays
     # the paper's notion — True iff no back-end query was needed.
     tier: str = "l1"
+    # latency_s is admission-to-resolution; queue_wait_s breaks out the
+    # time between admission and the wave actually starting (0 for the
+    # single-session engine, which has no queue).  ``spans`` carries the
+    # full repro.serve.telemetry.TurnSpans decomposition when the turn
+    # came through the batched pipeline.
+    queue_wait_s: float = 0.0
+    spans: Optional[object] = None
 
 
 def radius_and_docs(scores: np.ndarray, ids: np.ndarray,

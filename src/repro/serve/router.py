@@ -1,10 +1,13 @@
-"""Serving router: micro-batching + straggler mitigation + degraded answers.
+"""Serving router: straggler mitigation + degraded answers.
 
 The back-end index is a set of shard handles (callables).  Production
 posture for thousands of nodes:
 
-  * **Micro-batching**: concurrent session queries are batched before the
-    scan (the paper batches 216 queries into FAISS for the same reason).
+  * **Batched scatter-gather**: concurrent session queries arrive as one
+    stacked ``search`` (the paper batches 216 queries into FAISS for the
+    same reason); admission batching itself lives in
+    ``repro.serve.scheduler`` (the old fixed-window ``MicroBatcher`` is a
+    deprecation shim there, still importable from this module).
   * **Hedging / straggler mitigation**: each shard call runs with a
     deadline; shards that miss it are retried once (hedge), and if the
     retry also misses, the router returns a *degraded* answer assembled
@@ -22,7 +25,6 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import dataclasses
-import threading
 import time
 from typing import Callable, Optional, Sequence
 
@@ -153,85 +155,6 @@ class ShardedRouter:
                            np.take_along_axis(ids, order, axis=1))
 
 
-class MicroBatcher:
-    """Groups requests arriving within a window into one batched call.
-
-    ``submit(item)`` returns a Future resolved with that caller's result.
-    The batch executes when ``max_batch`` requests are waiting or
-    ``window_s`` after the first request of the batch arrived, whichever
-    comes first (a timer thread enforces the window, so a lone request is
-    never stranded).  ``fn`` receives the list of queued items and must
-    return one result per item, in order; a result that is an exception
-    instance fails only its own waiter, while an exception *raised* by
-    ``fn`` fails every waiter of that batch.  Batches execute serially
-    (one ``fn`` call at a time), so a stateful ``fn`` — e.g. a
-    ``BatchedEngine`` wave — never sees two overlapping flushes.
-    """
-
-    def __init__(self, fn: Callable, max_batch: int = 64,
-                 window_s: float = 0.002):
-        self.fn, self.max_batch, self.window_s = fn, max_batch, window_s
-        self._queue: list[tuple[object, cf.Future]] = []
-        self._lock = threading.Lock()
-        self._exec_lock = threading.Lock()
-        self._timer: Optional[threading.Timer] = None
-        self._closed = False
-
-    @classmethod
-    def for_router(cls, router: "ShardedRouter", k: int,
-                   **kwargs) -> "MicroBatcher":
-        """Batcher whose items are single query vectors: one stacked
-        ``router.search`` per batch, per-row ``(ShardAnswer, degraded)``
-        routed back to each submitter."""
-        def run(items: list) -> list:
-            ans, degraded = router.search(np.stack(items), k)
-            return [(ShardAnswer(ans.scores[i:i + 1], ans.ids[i:i + 1]),
-                     degraded) for i in range(len(items))]
-        return cls(run, **kwargs)
-
-    def submit(self, item) -> cf.Future:
-        fut: cf.Future = cf.Future()
-        with self._lock:
-            if self._closed:
-                raise RuntimeError("MicroBatcher is closed")
-            self._queue.append((item, fut))
-            full = len(self._queue) >= self.max_batch
-            if not full and self._timer is None:
-                self._timer = threading.Timer(self.window_s, self.flush)
-                self._timer.daemon = True
-                self._timer.start()
-        if full:
-            self.flush()
-        return fut
-
-    def flush(self):
-        """Execute whatever is queued now; resolves the waiters' futures."""
-        with self._exec_lock:       # serialize batch execution (timer thread
-            with self._lock:        # vs batch-full submitter)
-                batch, self._queue = self._queue, []
-                if self._timer is not None:
-                    self._timer.cancel()
-                    self._timer = None
-            if not batch:
-                return
-            items = [it for it, _ in batch]
-            try:
-                results = self.fn(items)
-                if len(results) != len(batch):
-                    raise RuntimeError(
-                        f"batch fn returned {len(results)} results for "
-                        f"{len(batch)} items")
-            except Exception as e:                 # noqa: BLE001
-                for _, fut in batch:
-                    fut.set_exception(e)
-                return
-            for (_, fut), res in zip(batch, results):
-                if isinstance(res, BaseException):
-                    fut.set_exception(res)
-                else:
-                    fut.set_result(res)
-
-    def close(self):
-        with self._lock:
-            self._closed = True
-        self.flush()
+# Back-compat import path: the fixed-window batcher moved to the scheduler
+# module as a one-release deprecation shim over ContinuousScheduler.
+from repro.serve.scheduler import MicroBatcher  # noqa: E402,F401

@@ -24,6 +24,25 @@ batching: the router degrades per *call*, so a degraded back-end wave
 marks every miss in that wave degraded (and, like the sequential engine,
 skips their (psi, r_a) records so the caches are never poisoned).
 
+**Split wave contract.**  A wave executes in three explicit phases so the
+continuous scheduler can pipeline them across waves:
+
+  * ``probe_wave``   — encoder + L1 probe + (tiered) L2 memo / shard
+    probe.  Touches only cache state; never mutates L1.
+  * ``backend_wave`` — ``router.search`` over the residual miss subset
+    (host + router threads only; the miss-search kernel launch happens
+    inside the router's shards).
+  * ``fill_wave``    — the fused insert+query launch, the L1 scatter, the
+    shared-tier admission flush, and per-turn ``EngineTurn`` assembly.
+
+``answer_batch`` is exactly ``probe -> backend -> fill`` run inline, so
+its kernel-launch contract is unchanged (3 launches L1-only, 4 tiered
+full-miss).  Under the scheduler, wave *t+1*'s probe overlaps wave *t*'s
+back-end search: the probe reads only cache state of *disjoint* session
+slots (the scheduler admits at most one in-flight turn per slot), and all
+cache launches stay on the scheduler's worker thread, so per-session
+results remain bit-identical to the sequential engine.
+
 **Cache hierarchy.**  With a ``repro.core.shared.SharedTier`` attached,
 the miss wave becomes tiered: probe-L1 -> probe-L2 -> back-end search on
 the residual misses -> insert both tiers.  L1 misses first try the shared
@@ -38,18 +57,29 @@ through the same fused insert+query launch, with the (psi, r_a) coverage
 claim recorded only when it is sound: fresh un-degraded back-end radii,
 or the memo's triangle-corrected Eq. 3 claim.
 
+**Latency attribution.**  Each turn reports admission-to-resolution
+latency (``EngineTurn.latency_s``) with its queue wait broken out
+(``queue_wait_s``) and the wave-level probe / backend / insert spans
+attached (``spans``, a ``repro.serve.telemetry.TurnSpans``).  A wave used
+to stamp every member with the whole wave's wall clock and queue wait was
+invisible — SLO numbers were unmeasurable.
+
 ``SessionManager`` puts an asynchronous front door on the engine: it maps
-external session keys to engine slots and micro-batches ``submit``-ed turns
-into waves via ``MicroBatcher`` — callers get a Future per turn, resolved
-when the wave executes (batch full or window elapsed).  It is a context
-manager: leaving the ``with`` block (or calling ``shutdown()``) flushes
-pending turns and stops the batcher's window-timer thread.
+external session keys to engine slots and admits ``submit``-ed turns into
+continuously scheduled waves via ``repro.serve.scheduler
+.ContinuousScheduler`` — callers get a Future per turn, resolved when its
+wave's fill phase completes.  ``close(key)`` drains only that key's
+pending turns (per-slot drain); it no longer flushes the global queue.
+It is a context manager: leaving the ``with`` block (or calling
+``shutdown()``) drains pending turns and stops the scheduler's worker.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import threading
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -63,9 +93,46 @@ from repro.core.embedding import distance_from_scores
 from repro.core.shared import SharedTier
 from repro.kernels import dispatch as kdispatch
 from repro.serve.engine import EngineTurn
-from repro.serve.router import MicroBatcher, ShardedRouter
+from repro.serve.router import ShardedRouter
+from repro.serve.scheduler import ContinuousScheduler
+from repro.serve.telemetry import ServeTelemetry, TurnSpans
 
-__all__ = ["BatchedEngine", "SessionManager"]
+__all__ = ["BatchedEngine", "SessionManager", "WaveState"]
+
+
+@dataclasses.dataclass
+class WaveState:
+    """One wave in flight between the probe, backend, and fill phases.
+
+    Buffers are bucket-sized (the wave padded to its power-of-two jit
+    bucket); masks carry which rows are real, which still need the
+    back-end, and which tier answered each.  ``admitted_at`` holds the
+    per-turn admission stamps the latency attribution derives from.
+    """
+
+    sids: np.ndarray                 # (wave,) real session slots
+    pad_sids: np.ndarray             # (bucket,) padded slot row
+    wave: int
+    bucket: int
+    psi: jax.Array                   # (bucket, dim) transformed queries
+    psi_np: np.ndarray
+    sub: object                      # gathered CacheState rows
+    need: np.ndarray                 # (bucket,) rows still needing backend
+    tier: np.ndarray                 # (bucket,) serving tier per row
+    reuse: np.ndarray                # (bucket,) L2 memo reuse rows
+    l2hit: np.ndarray                # (bucket,) L2 shard-probe hit rows
+    new_ids: np.ndarray              # (bucket, k_c) docs to insert
+    new_emb: np.ndarray              # (bucket, k_c, dim)
+    rad: np.ndarray                  # (bucket,) claim radii
+    rec_np: np.ndarray               # (bucket,) record the (psi, r_a) claim
+    backend_ok: np.ndarray           # (bucket,) rows the backend answered
+    failed: np.ndarray               # (bucket,) empty-cache outage rows
+    admitted_at: np.ndarray          # (wave,) perf_counter admission stamps
+    t_start: float                   # wave (probe-phase) start stamp
+    degraded: bool = False
+    outage: Optional[BaseException] = None
+    probe_s: float = 0.0
+    backend_s: float = 0.0
 
 
 class BatchedEngine:
@@ -77,7 +144,8 @@ class BatchedEngine:
                  encoder: Optional[Callable] = None,
                  dtype: Optional[str] = None,
                  backend: Optional[str] = None,
-                 shared: Optional[SharedTier] = None):
+                 shared: Optional[SharedTier] = None,
+                 telemetry: Optional[ServeTelemetry] = None):
         self.router = router
         self.doc_embeddings = doc_embeddings
         self.n_sessions = n_sessions
@@ -102,6 +170,12 @@ class BatchedEngine:
         self.shared = shared
         if shared is not None:
             assert shared.cfg.dim == dim, "shared tier dim mismatch"
+        # the shared tier's host structures are touched from the probe/fill
+        # phases (scheduler worker) AND the backend phase (side thread)
+        # when waves overlap; its sections serialize on this lock
+        self._shared_lock = threading.Lock()
+        self.telemetry = telemetry if telemetry is not None \
+            else ServeTelemetry()
         self.turns: list[list[EngineTurn]] = [[] for _ in range(n_sessions)]
         # admission identity: (slot, generation) — bumped on start_session
         # so a recycled slot never inherits its predecessor's popularity
@@ -126,24 +200,34 @@ class BatchedEngine:
             b *= 2
         return min(b, self.n_sessions)
 
-    def answer_batch(self, sessions, queries) -> list:
-        """Answer one concurrent turn per listed session (a wave).
+    # ------------------------------------------------------- probe phase
+    def probe_wave(self, sessions, queries,
+                   admitted_at: Optional[Sequence[float]] = None
+                   ) -> WaveState:
+        """Phase 1 of a wave: encoder + L1 probe + (tiered) L2 lookups.
+
+        Touches only cache state — L1 rows are gathered and probed, the
+        shared tier's memo and shard caches are consulted for L1 misses —
+        and never writes L1, so it may run while the *previous* wave's
+        back-end search is still in flight (the scheduler guarantees the
+        two waves' session slots are disjoint).
 
         sessions: sequence of distinct session-slot indices.
         queries: matching sequence of raw queries (or pre-transformed psi
         when no encoder is configured).
-        Returns one entry per session, in input order: an ``EngineTurn``,
-        or a ``TimeoutError`` instance for a session whose back-end failed
-        entirely while its cache was still empty (the same per-session
-        failure a sequential engine loop raises).  Raises only when *every*
-        session in the wave is in that state.
+        admitted_at: optional per-turn admission stamps
+        (``time.perf_counter`` clock); defaults to now, i.e. zero queue
+        wait for directly-invoked waves.
         """
-        t0 = time.perf_counter()
+        t_start = time.perf_counter()
         sids = np.asarray(sessions, np.int32)
         if np.unique(sids).size != sids.size:
             raise ValueError("one turn per session per wave")
         wave = len(sids)
         bucket = self._bucket(wave)
+        admitted = (np.full((wave,), t_start, np.float64)
+                    if admitted_at is None
+                    else np.asarray(admitted_at, np.float64))
         # pad the wave with copies of row 0 (probe-only: do/need are forced
         # False and padded rows are never scattered back or reported)
         pad_sids = np.concatenate([sids, np.repeat(sids[:1], bucket - wave)])
@@ -159,8 +243,6 @@ class BatchedEngine:
         n_queries = np.asarray(sub.n_queries)
         need = np.logical_or(n_queries == 0, ~np.asarray(pr.hit))
         need[wave:] = False
-        degraded = False
-        failed = np.zeros((bucket,), bool)
         tier = np.where(need, "backend", "l1").astype(object)
         psi_np = np.asarray(psi)
 
@@ -177,144 +259,216 @@ class BatchedEngine:
         rec_np = np.zeros((bucket,), bool)
 
         if self.shared is not None:
-            self.shared.tick()
-        if self.shared is not None and need.any():
-            l2 = self.shared
-            # L2a — semantic result reuse (host-side memo; no launch): a
-            # near-duplicate query from ANOTHER session reuses its full
-            # k_c result set, and records the triangle-corrected Eq. 3
-            # claim r_a - delta(psi_a, psi) when it still clears epsilon
-            for i in np.nonzero(need)[0]:
-                m = l2.memo_lookup(self._token(pad_sids[i]), psi_np[i])
-                if m is None:
-                    continue
-                m_ids, _m_scores, claim = m
-                reuse[i] = True
-                n = min(self.k_c, m_ids.shape[0])
-                new_ids[i, :n] = m_ids[:n]
-                new_emb[i, :n] = self.doc_embeddings[
-                    np.maximum(m_ids[:n], 0)]
-                if claim >= self.epsilon:
-                    rad[i] = claim
-                    rec_np[i] = True
-                # the reusing session is a distinct retriever of these
-                # docs — it counts toward the >= 2-sessions admission bar
-                l2.offer(self._token(pad_sids[i]), psi_np[i], claim,
-                         new_emb[i], new_ids[i])
-            rem = np.logical_and(need, ~reuse)
-            if rem.any():
-                # L2b — launch 2: the SAME LowQuality probe kernel over the
-                # gathered shard rows of the shared tier (whole bucket, one
-                # jitted shape; results masked to the residual misses)
-                shards = l2.route(psi_np)
-                l2pr = l2.probe_rows(psi, shards, backend=self.backend)
-                l2hit = np.logical_and(np.asarray(l2pr.hit), rem)
-                if l2hit.any():
-                    # covered by a shared claim: answer from the shard's
-                    # cached docs (one fused wave-query launch, only when
-                    # L2 actually serves someone)
-                    (_s2, _d2, i2, _sl2) = l2.query_rows(
-                        psi, shards, self.k, backend=self.backend)
-                    i2_np = np.asarray(i2)
-                    for i in np.nonzero(l2hit)[0]:
-                        row = i2_np[i][i2_np[i] >= 0]
-                        n = min(self.k_c, row.shape[0])
-                        new_ids[i, :n] = row[:n]
-                        new_emb[i, :n] = self.doc_embeddings[row[:n]]
-                need = np.logical_and(rem, ~l2hit)
-            else:
-                need = rem
+            with self._shared_lock:
+                self.shared.tick()
+                if need.any():
+                    need = self._probe_shared(pad_sids, psi, psi_np, need,
+                                              reuse, l2hit, new_ids,
+                                              new_emb, rad, rec_np)
             tier[reuse] = "l2_reuse"
             tier[l2hit] = "l2"
 
-        backend_ok = np.zeros((bucket,), bool)
-        if need.any():
-            miss = np.nonzero(need)[0]
-            try:
-                ans, degraded = self.router.search(psi_np[miss], self.k_c)
-                n_valid = (ans.ids >= 0).sum(axis=1)
-                if (n_valid == 0).any():
-                    raise TimeoutError("back-end answer holds no valid docs")
-                # r_a per row from the last *valid* column (short merges are
-                # sentinel-padded); same guard as the sequential engine
-                radii = np.asarray(distance_from_scores(jnp.asarray(
-                    np.take_along_axis(ans.scores, n_valid[:, None] - 1,
-                                       axis=1)[:, 0])))
-                new_ids[miss] = ans.ids
-                new_emb[miss] = self.doc_embeddings[np.maximum(ans.ids, 0)]
-                rad[miss] = radii
-                # a degraded merge is missing shards: keep the docs, skip
-                # the (psi, r_a) record so no cache learns a false claim
-                rec_np[miss] = not degraded
-                backend_ok = need.copy()
-                if self.shared is not None and not degraded:
-                    # fresh retrievals feed the shared tier: memoized for
-                    # semantic reuse, offered toward shard admission
-                    for j, i in enumerate(miss):
-                        tok = self._token(pad_sids[i])
-                        self.shared.memo_record(tok, psi_np[i], ans.ids[j],
-                                                ans.scores[j],
-                                                float(radii[j]))
-                        self.shared.offer(tok, psi_np[i], float(radii[j]),
-                                          new_emb[i], new_ids[i])
-            except TimeoutError as e:
-                # total back-end failure: miss sessions fall back to their
-                # caches; one with an empty cache fails alone, like its
-                # sequential counterpart — not the whole wave
-                degraded = True
-                failed = np.logical_and(need, np.asarray(sub.n_docs) == 0)
-                if failed[:wave].all():
-                    raise
-                outage = e
+        ws = WaveState(
+            sids=sids, pad_sids=pad_sids, wave=wave, bucket=bucket,
+            psi=psi, psi_np=psi_np, sub=sub, need=need, tier=tier,
+            reuse=reuse, l2hit=l2hit, new_ids=new_ids, new_emb=new_emb,
+            rad=rad, rec_np=rec_np,
+            backend_ok=np.zeros((bucket,), bool),
+            failed=np.zeros((bucket,), bool),
+            admitted_at=admitted, t_start=t_start)
+        ws.probe_s = time.perf_counter() - t_start
+        return ws
 
-        fill = np.logical_or(np.logical_or(reuse, l2hit), backend_ok)
+    def _probe_shared(self, pad_sids, psi, psi_np, need, reuse, l2hit,
+                      new_ids, new_emb, rad, rec_np) -> np.ndarray:
+        """Tiered lookups for L1 misses (caller holds the shared lock).
+        Returns the residual miss mask after memo reuse and L2 hits."""
+        l2 = self.shared
+        # L2a — semantic result reuse (host-side memo; no launch): a
+        # near-duplicate query from ANOTHER session reuses its full
+        # k_c result set, and records the triangle-corrected Eq. 3
+        # claim r_a - delta(psi_a, psi) when it still clears epsilon
+        for i in np.nonzero(need)[0]:
+            m = l2.memo_lookup(self._token(pad_sids[i]), psi_np[i])
+            if m is None:
+                continue
+            m_ids, _m_scores, claim = m
+            reuse[i] = True
+            n = min(self.k_c, m_ids.shape[0])
+            new_ids[i, :n] = m_ids[:n]
+            new_emb[i, :n] = self.doc_embeddings[
+                np.maximum(m_ids[:n], 0)]
+            if claim >= self.epsilon:
+                rad[i] = claim
+                rec_np[i] = True
+            # the reusing session is a distinct retriever of these
+            # docs — it counts toward the >= 2-sessions admission bar
+            l2.offer(self._token(pad_sids[i]), psi_np[i], claim,
+                     new_emb[i], new_ids[i])
+        rem = np.logical_and(need, ~reuse)
+        if rem.any():
+            # L2b — launch 2: the SAME LowQuality probe kernel over the
+            # gathered shard rows of the shared tier (whole bucket, one
+            # jitted shape; results masked to the residual misses)
+            shards = l2.route(psi_np)
+            l2pr = l2.probe_rows(psi, shards, backend=self.backend)
+            l2hit[:] = np.logical_and(np.asarray(l2pr.hit), rem)
+            if l2hit.any():
+                # covered by a shared claim: answer from the shard's
+                # cached docs (one fused wave-query launch, only when
+                # L2 actually serves someone)
+                (_s2, _d2, i2, _sl2) = l2.query_rows(
+                    psi, shards, self.k, backend=self.backend)
+                i2_np = np.asarray(i2)
+                for i in np.nonzero(l2hit)[0]:
+                    row = i2_np[i][i2_np[i] >= 0]
+                    n = min(self.k_c, row.shape[0])
+                    new_ids[i, :n] = row[:n]
+                    new_emb[i, :n] = self.doc_embeddings[row[:n]]
+            return np.logical_and(rem, ~l2hit)
+        return rem
+
+    # ----------------------------------------------------- backend phase
+    def backend_wave(self, ws: WaveState) -> WaveState:
+        """Phase 2: ``router.search`` over the residual miss subset.
+
+        Host + router work only (the miss-search kernel launch lives
+        inside the router's shards), so the scheduler may run it on a side
+        thread while the next wave probes.  A total back-end failure marks
+        empty-cache miss rows failed; raises only when *every* real row in
+        the wave is in that state (the same per-session failure a
+        sequential engine loop raises).
+        """
+        t0 = time.perf_counter()
+        need, bucket, wave = ws.need, ws.bucket, ws.wave
+        try:
+            if need.any():
+                miss = np.nonzero(need)[0]
+                try:
+                    ans, degraded = self.router.search(
+                        ws.psi_np[miss], self.k_c)
+                    ws.degraded = degraded
+                    n_valid = (ans.ids >= 0).sum(axis=1)
+                    if (n_valid == 0).any():
+                        raise TimeoutError(
+                            "back-end answer holds no valid docs")
+                    # r_a per row from the last *valid* column (short
+                    # merges are sentinel-padded); same guard as the
+                    # sequential engine
+                    radii = np.asarray(distance_from_scores(jnp.asarray(
+                        np.take_along_axis(ans.scores, n_valid[:, None] - 1,
+                                           axis=1)[:, 0])))
+                    ws.new_ids[miss] = ans.ids
+                    ws.new_emb[miss] = self.doc_embeddings[
+                        np.maximum(ans.ids, 0)]
+                    ws.rad[miss] = radii
+                    # a degraded merge is missing shards: keep the docs,
+                    # skip the (psi, r_a) record so no cache learns a
+                    # false claim
+                    ws.rec_np[miss] = not degraded
+                    ws.backend_ok = need.copy()
+                    if self.shared is not None and not degraded:
+                        # fresh retrievals feed the shared tier: memoized
+                        # for semantic reuse, offered toward admission
+                        with self._shared_lock:
+                            for j, i in enumerate(miss):
+                                tok = self._token(ws.pad_sids[i])
+                                self.shared.memo_record(
+                                    tok, ws.psi_np[i], ans.ids[j],
+                                    ans.scores[j], float(radii[j]))
+                                self.shared.offer(
+                                    tok, ws.psi_np[i], float(radii[j]),
+                                    ws.new_emb[i], ws.new_ids[i])
+                except TimeoutError as e:
+                    # total back-end failure: miss sessions fall back to
+                    # their caches; one with an empty cache fails alone,
+                    # like its sequential counterpart — not the whole wave
+                    ws.degraded = True
+                    ws.failed = np.logical_and(
+                        need, np.asarray(ws.sub.n_docs) == 0)
+                    if ws.failed[:wave].all():
+                        raise
+                    ws.outage = e
+            return ws
+        finally:
+            ws.backend_s = time.perf_counter() - t0
+
+    # -------------------------------------------------------- fill phase
+    def fill_wave(self, ws: WaveState) -> list:
+        """Phase 3: fused insert+query launch, L1 scatter, admission
+        flush, and per-turn assembly.  Returns one entry per real session
+        in input order: an ``EngineTurn``, or a ``TimeoutError`` instance
+        for a session whose back-end failed entirely while its cache was
+        still empty.
+        """
+        t0 = time.perf_counter()
+        fill = np.logical_or(np.logical_or(ws.reuse, ws.l2hit),
+                             ws.backend_ok)
         if fill.any():
             # insert + answer query FUSED: one kernel launch closes the
             # wave (L1-only: launch 3 of 3, probe -> miss-search ->
             # insert+query; tiered: launch 4 of 4, after the L2 probe)
             (scores, _dists, ids, _slots), sub, dropped = \
                 insert_query_batched(
-                    sub, self.cache.cfg, psi, jnp.asarray(rad),
-                    jnp.asarray(new_emb), jnp.asarray(new_ids), self.k,
-                    do=jnp.asarray(fill), record=jnp.asarray(rec_np),
-                    backend=self.backend)
+                    ws.sub, self.cache.cfg, ws.psi, jnp.asarray(ws.rad),
+                    jnp.asarray(ws.new_emb), jnp.asarray(ws.new_ids),
+                    self.k, do=jnp.asarray(fill),
+                    record=jnp.asarray(ws.rec_np), backend=self.backend)
             self.cache.total_dropped += int(np.asarray(dropped).sum())
         else:  # missless (or outage) wave: probe -> query
             (scores, _dists, ids, _slots), sub = query_batched(
-                sub, psi, self.k, backend=self.backend)
-        able = np.nonzero(~failed[:wave])[0]
+                ws.sub, ws.psi, self.k, backend=self.backend)
+        able = np.nonzero(~ws.failed[:ws.wave])[0]
         # write back only real, answerable rows (padded rows are shadows of
         # row 0; failed rows must stay exactly as they were, like a
         # sequential engine raising before its cache query)
-        self.cache.scatter(sids[able],
+        self.cache.scatter(ws.sids[able],
                            jax.tree_util.tree_map(lambda x: x[able], sub))
         if self.shared is not None:
             # end-of-wave: promote the wave's admitted answers into their
             # shards (deferred so admission never adds launches mid-wave)
-            self.shared.flush_admissions(backend=self.backend)
+            with self._shared_lock:
+                self.shared.flush_admissions(backend=self.backend)
 
-        latency = time.perf_counter() - t0
+        resolved = time.perf_counter()
+        insert_s = resolved - t0
         out: list = []
-        for i, s in enumerate(sids):
-            if failed[i]:
+        for i, s in enumerate(ws.sids):
+            if ws.failed[i]:
                 out.append(TimeoutError(
                     f"session {int(s)}: back-end down and cache empty"
-                    f" ({outage})"))
+                    f" ({ws.outage})"))
                 continue
             # drop (id -1, score -inf) sentinel slots of a short cache, the
             # same trim the sequential engine applies
             row_ids = np.asarray(ids[i])
             row_scores = np.asarray(scores[i])
             real = row_ids >= 0
-            row_tier = str(tier[i])
+            row_tier = str(ws.tier[i])
+            spans = TurnSpans(
+                queue_wait_s=max(ws.t_start - float(ws.admitted_at[i]), 0.0),
+                probe_s=ws.probe_s, backend_s=ws.backend_s,
+                insert_s=insert_s,
+                total_s=resolved - float(ws.admitted_at[i]), tier=row_tier)
             turn = EngineTurn(ids=row_ids[real], scores=row_scores[real],
                               hit=row_tier != "backend",
-                              degraded=bool(degraded
+                              degraded=bool(ws.degraded
                                             and row_tier == "backend"),
-                              latency_s=latency, tier=row_tier)
+                              latency_s=spans.total_s, tier=row_tier,
+                              queue_wait_s=spans.queue_wait_s, spans=spans)
+            self.telemetry.record_turn(spans)
             self.turns[int(s)].append(turn)
             out.append(turn)
         return out
+
+    def answer_batch(self, sessions, queries) -> list:
+        """Answer one concurrent turn per listed session (a wave), inline:
+        ``probe_wave -> backend_wave -> fill_wave``.  Raises only when
+        *every* session in the wave is an empty-cache back-end failure.
+        """
+        ws = self.probe_wave(sessions, queries)
+        self.backend_wave(ws)
+        return self.fill_wave(ws)
 
     def hit_rate(self, session: Optional[int] = None) -> float:
         """Cache hit rate, excluding each session's compulsory first turn.
@@ -349,20 +503,46 @@ class BatchedEngine:
 class SessionManager:
     """Asynchronous front door: session keys -> engine slots -> waves.
 
-    ``submit(key, query)`` returns a Future[EngineTurn]; turns are grouped
-    into ``BatchedEngine.answer_batch`` waves by a ``MicroBatcher`` (flush
-    on batch-full or window expiry).  Two turns of the same session in one
-    wave are split into consecutive sub-waves, preserving arrival order.
+    ``submit(key, query)`` returns a Future[EngineTurn]; turns are
+    admitted into continuously scheduled ``BatchedEngine`` waves by a
+    ``ContinuousScheduler`` — an arrival joins the next wave the engine
+    can take (no fixed window), wave sizes adapt to the EWMA'd arrival
+    rate, and wave *t+1*'s cache probe overlaps wave *t*'s back-end
+    search.  Two turns of the same session are never in flight together
+    (the scheduler defers the later one), preserving arrival order.
+
+    Knobs: ``min_slots``/``max_slots`` bound the adaptive wave-size limit,
+    ``ewma_horizon_s`` sets the arrival-rate memory, ``target_p99_s``
+    backs wave sizes off when the measured turn p99 overshoots, and
+    ``window_s > 0`` recovers the deprecated fixed-window admission for
+    A/B comparison (serve_bench's baseline mode).
     """
 
-    def __init__(self, engine: BatchedEngine, *, window_s: float = 0.002,
-                 max_batch: Optional[int] = None):
+    def __init__(self, engine: BatchedEngine, *, window_s: float = 0.0,
+                 max_batch: Optional[int] = None, min_slots: int = 1,
+                 max_slots: Optional[int] = None,
+                 adaptive: Optional[bool] = None, headroom: float = 1.5,
+                 ewma_horizon_s: float = 1.0,
+                 target_p99_s: Optional[float] = None,
+                 overlap: bool = True):
         self.engine = engine
         self._slots: dict = {}
         self._free = list(range(engine.n_sessions - 1, -1, -1))
-        self.batcher = MicroBatcher(self._run_wave,
-                                    max_batch=max_batch or engine.n_sessions,
-                                    window_s=window_s)
+        self.scheduler = ContinuousScheduler(
+            engine, min_wave=min_slots,
+            max_wave=max_slots or max_batch or engine.n_sessions,
+            window_s=window_s, adaptive=adaptive, headroom=headroom,
+            ewma_horizon_s=ewma_horizon_s, target_p99_s=target_p99_s,
+            overlap=overlap)
+
+    @property
+    def batcher(self) -> ContinuousScheduler:
+        """Deprecated alias for ``scheduler`` (pre-ISSUE-8 name)."""
+        return self.scheduler
+
+    @property
+    def telemetry(self) -> ServeTelemetry:
+        return self.scheduler.telemetry
 
     def open(self, key) -> int:
         """Start a session for ``key``; returns its engine slot."""
@@ -376,20 +556,22 @@ class SessionManager:
         return slot
 
     def close(self, key):
-        """End a session and recycle its slot.  Flushes the pending wave
-        first so a turn already submitted for this key cannot execute
-        against the slot's next occupant."""
+        """End a session and recycle its slot, draining only THIS key's
+        pending turns first (so a turn already submitted for it cannot
+        execute against the slot's next occupant).  Other sessions'
+        queued and in-flight turns are untouched — closing a session no
+        longer force-flushes the global wave."""
         if key not in self._slots:
             raise KeyError(f"unknown session key {key!r}")
-        self.batcher.flush()
+        self.scheduler.drain_slot(self._slots[key])
         self._free.append(self._slots.pop(key))
 
     def shutdown(self):
-        """Flush pending turns and stop the batcher's window-timer thread.
+        """Drain pending turns and stop the scheduler's worker thread.
         Idempotent; further ``submit`` calls raise.  Benchmarks and tests
         that spin up many managers must call this (or use the manager as a
-        context manager) so timer threads don't leak across runs."""
-        self.batcher.close()
+        context manager) so worker threads don't leak across runs."""
+        self.scheduler.close()
 
     def __enter__(self) -> "SessionManager":
         return self
@@ -403,25 +585,11 @@ class SessionManager:
         return len(self._slots)
 
     def submit(self, key, query):
-        """Enqueue one turn; returns a Future resolved with its EngineTurn."""
-        return self.batcher.submit((self._slots[key], query))
+        """Admit one turn; returns a Future resolved with its EngineTurn.
+        The admission timestamp is stamped here, so the resolved turn's
+        ``latency_s`` covers queue wait + wave execution."""
+        return self.scheduler.submit(query, slot=self._slots[key])
 
     def flush(self):
-        """Force the pending wave to execute now (tests, shutdown)."""
-        self.batcher.flush()
-
-    def _run_wave(self, items: list) -> list:
-        results: list = [None] * len(items)
-        pending = list(enumerate(items))
-        while pending:      # split same-session turns into ordered sub-waves
-            seen, now, later = set(), [], []
-            for entry in pending:
-                (_, (slot, _)) = entry
-                (now if slot not in seen else later).append(entry)
-                seen.add(slot)
-            turns = self.engine.answer_batch([s for _, (s, _) in now],
-                                             [q for _, (_, q) in now])
-            for (pos, _), turn in zip(now, turns):
-                results[pos] = turn
-            pending = later
-        return results
+        """Force everything queued now to execute (tests, shutdown)."""
+        self.scheduler.flush()

@@ -1,0 +1,416 @@
+"""Continuous-batching scheduler tests: admission, adaptive sizing,
+per-slot drain, telemetry, outage behavior, and launch-count guards."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metric_index import MetricIndex
+from repro.data.conversations import WorldConfig, make_world
+from repro.serve.engine import ConversationalEngine, EngineTurn
+from repro.serve.router import ShardAnswer, ShardedRouter
+from repro.serve.scheduler import ContinuousScheduler
+from repro.serve.session import BatchedEngine, SessionManager
+from repro.serve.telemetry import (EwmaRate, RingPercentiles, ServeTelemetry,
+                                   TurnSpans)
+
+jax.config.update("jax_platform_name", "cpu")
+
+WORLD = WorldConfig(n_topics=4, docs_per_topic=200, n_background=800,
+                    dim=64, subspace_dim=8, turns=4, n_conversations=4,
+                    doc_sigma=0.6, query_sigma=0.12, drift_sigma=0.16,
+                    subtopic_prob=0.35, subtopic_sigma=0.75, seed=9)
+
+
+@pytest.fixture(scope="module")
+def world():
+    return make_world(WORLD)
+
+
+@pytest.fixture(scope="module")
+def index(world):
+    return MetricIndex(jnp.asarray(world.doc_emb, jnp.float32))
+
+
+def make_shards(index, n_shards, fail=()):
+    docs = np.asarray(index.doc_emb[:index.n_docs])
+    ids = np.arange(index.n_docs)
+    bounds = np.linspace(0, index.n_docs, n_shards + 1).astype(int)
+    shards = []
+    for i in range(n_shards):
+        d, did = docs[bounds[i]:bounds[i + 1]], ids[bounds[i]:bounds[i + 1]]
+
+        def shard(queries, k, d=d, did=did, i=i):
+            if i in fail:
+                raise RuntimeError(f"shard {i} down")
+            scores = queries @ d.T
+            top = np.argsort(-scores, axis=1)[:, :k]
+            return ShardAnswer(np.take_along_axis(scores, top, axis=1),
+                               did[top])
+        shards.append(shard)
+    return shards
+
+
+def _streams(world, index, n_sessions):
+    convs = world.conversations
+    return [np.asarray(index.transform_queries(
+        jnp.asarray(convs[s % len(convs)].queries, jnp.float32)))
+        for s in range(n_sessions)]
+
+
+def _unit(rng, shape):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+# --------------------------------------------------------------- telemetry
+def test_ring_percentiles_window_and_nearest_rank():
+    ring = RingPercentiles(capacity=4)
+    assert np.isnan(ring.percentile(50))
+    for x in range(1, 11):
+        ring.add(float(x))
+    assert len(ring) == 4 and ring.count == 10      # window holds last 4
+    assert ring.percentile(50) == 8.0               # nearest rank of 7..10
+    assert ring.percentile(99) == 10.0
+    s = ring.summary()
+    assert s["count"] == 10 and s["p50"] == 8.0 and s["p99"] == 10.0
+
+
+def test_ewma_rate_converges_and_decays_on_silence():
+    t = [0.0]
+    r = EwmaRate(horizon_s=0.05, clock=lambda: t[0])
+    for _ in range(50):                             # steady 10 events/sec
+        t[0] += 0.1
+        r.observe()
+    assert r.rate() == pytest.approx(10.0, rel=0.05)
+    t[0] += 0.5                                     # silence -> decay
+    assert r.rate() < 1.0
+    assert r.count == 50
+
+
+def test_serve_telemetry_records_spans_and_tiers():
+    tel = ServeTelemetry()
+    tel.record_turn(TurnSpans(queue_wait_s=0.01, probe_s=0.002,
+                              backend_s=0.05, insert_s=0.003,
+                              total_s=0.065, tier="backend"))
+    tel.record_turn(TurnSpans(total_s=0.004, tier="l1"))
+    tel.record_wave(2, 0.06)
+    s = tel.summary()
+    assert s["turns"] == 2 and s["waves"] == 1
+    assert s["spans"]["total_s"]["count"] == 2
+    assert set(s["tiers"]) == {"backend", "l1"}
+    assert s["wave_size"]["p50"] == 2.0
+
+
+# ----------------------------------------------------------- sizing policy
+def test_target_limit_little_law_pow2_and_clamps():
+    sched = ContinuousScheduler(fn=lambda xs: xs, min_wave=1, max_wave=64,
+                                adaptive=False)
+    try:
+        # 100/s x 20ms x 1.5 headroom = 3 turns -> next pow2 bucket = 4
+        assert sched._target_limit(100.0, 0.02) == 4
+        assert sched._target_limit(0.0, 0.02) == 1          # min clamp
+        assert sched._target_limit(1e9, 1.0) == 64          # max clamp
+    finally:
+        sched.close()
+
+
+def test_target_limit_p99_overshoot_backs_off():
+    sched = ContinuousScheduler(fn=lambda xs: xs, max_wave=64,
+                                adaptive=False, target_p99_s=0.05)
+    try:
+        sched.wave_limit = 32
+        # demand says 64, but measured p99 is over target: halve instead
+        assert sched._target_limit(1e9, 1.0, p99_s=0.1) == 16
+        # p99 under target: demand wins
+        assert sched._target_limit(1e9, 1.0, p99_s=0.01) == 64
+    finally:
+        sched.close()
+
+
+def test_adapt_sizes_wave_limit_from_arrival_ewma():
+    sched = ContinuousScheduler(fn=lambda xs: xs, max_wave=64, adaptive=True)
+    try:
+        t = [0.0]
+        sched.telemetry.arrivals = EwmaRate(horizon_s=0.02,
+                                            clock=lambda: t[0])
+        for _ in range(20):                         # 100 arrivals/sec
+            t[0] += 0.01
+            sched.telemetry.arrivals.observe()
+        sched._service_ewma = 0.02
+        with sched._cond:
+            sched._adapt_locked()
+        assert sched.wave_limit == 4                # 100/s x 20ms x 1.5
+    finally:
+        sched.close()
+
+
+def test_adapt_holds_cold_start_below_min_arrivals():
+    sched = ContinuousScheduler(fn=lambda xs: xs, max_wave=32, adaptive=True)
+    try:
+        sched._service_ewma = 0.02
+        with sched._cond:
+            sched._adapt_locked()                   # no arrivals yet
+        assert sched.wave_limit == 32               # cold start untouched
+    finally:
+        sched.close()
+
+
+# -------------------------------------------------------- fn-mode admission
+def test_continuous_admission_needs_no_window_or_full_batch():
+    """The continuous default: a lone arrival executes as soon as the
+    worker can take it — no window timer, no batch-full threshold."""
+    with ContinuousScheduler(fn=lambda xs: [x * 2 for x in xs]) as sched:
+        t0 = time.monotonic()
+        assert sched.submit(21).result(timeout=5) == 42
+        assert time.monotonic() - t0 < 2.0
+
+
+def test_flush_waits_for_inflight_wave():
+    def fn(items):
+        time.sleep(0.2)
+        return items
+
+    with ContinuousScheduler(fn=fn) as sched:
+        fut = sched.submit(1)
+        time.sleep(0.05)                            # wave now in flight
+        sched.flush()
+        assert fut.done() and fut.result() == 1
+
+
+def test_same_slot_arrivals_defer_to_later_waves():
+    calls = []
+
+    def fn(items):
+        calls.append(list(items))
+        time.sleep(0.05)
+        return items
+
+    with ContinuousScheduler(fn=fn, window_s=60.0, adaptive=False,
+                             max_wave=8) as sched:
+        futs = [sched.submit(f"a{i}", slot="a") for i in range(3)]
+        sched.flush()
+        assert [f.result(timeout=5) for f in futs] == ["a0", "a1", "a2"]
+    # one in-flight turn per slot: three sub-waves, in admission order
+    assert calls == [["a0"], ["a1"], ["a2"]]
+
+
+def test_drain_slot_executes_only_that_slot():
+    """Per-slot drain (the SessionManager.close satellite): draining slot
+    'a' bypasses the window hold for a's turns ONLY — slot b's queued turn
+    keeps waiting on its own schedule."""
+    calls = []
+
+    def fn(items):
+        calls.append(list(items))
+        return items
+
+    with ContinuousScheduler(fn=fn, window_s=60.0, adaptive=False,
+                             max_wave=8) as sched:
+        fa = sched.submit("a1", slot="a")
+        fb = sched.submit("b1", slot="b")
+        sched.drain_slot("a")
+        assert fa.result(timeout=5) == "a1"
+        assert not fb.done()                        # untouched by the drain
+        assert calls == [["a1"]]
+        sched.flush()
+        assert fb.result(timeout=5) == "b1"
+
+
+def test_scheduler_rejects_ambiguous_modes():
+    with pytest.raises(ValueError, match="exactly one"):
+        ContinuousScheduler()
+    with pytest.raises(ValueError, match="min_wave"):
+        ContinuousScheduler(fn=lambda xs: xs, min_wave=9, max_wave=4)
+
+
+# ------------------------------------------------------- engine-mode waves
+def test_queue_wait_is_attributed_per_turn(world, index):
+    """Satellite: latency is admission-to-resolution per turn.  A second
+    turn of the same session defers behind the first wave, so its queue
+    wait is visible — and a directly-invoked wave has none."""
+    eng = BatchedEngine(ShardedRouter(make_shards(index, 2), deadline_s=30),
+                        np.asarray(index.doc_emb), dim=index.dim,
+                        n_sessions=1, k=5, k_c=60)
+    qs = _streams(world, index, 1)[0]
+    with ContinuousScheduler(eng) as sched:
+        eng.start_session(0)
+        f1 = sched.submit(qs[0], slot=0)
+        f2 = sched.submit(qs[1], slot=0)            # defers behind wave 1
+        t1, t2 = f1.result(timeout=30), f2.result(timeout=30)
+    assert t2.queue_wait_s > 0.0
+    for t in (t1, t2):
+        assert t.latency_s >= t.queue_wait_s >= 0.0
+        assert t.spans is not None and t.spans.total_s == t.latency_s
+    direct = eng.answer_batch([0], [qs[2]])[0]
+    assert direct.queue_wait_s == 0.0
+    # telemetry recorded every resolved turn's spans
+    assert eng.telemetry.spans["total_s"].count >= 3
+
+
+def test_session_manager_close_drains_only_its_key(world, index):
+    """Satellite: close(key) no longer flushes the global batcher — another
+    session's held turn stays queued through the close."""
+    eng = BatchedEngine(ShardedRouter(make_shards(index, 2), deadline_s=30),
+                        np.asarray(index.doc_emb), dim=index.dim,
+                        n_sessions=3, k=5, k_c=60)
+    qs = _streams(world, index, 2)
+    with SessionManager(eng, window_s=60.0, max_batch=2) as mgr:
+        mgr.open("a")
+        mgr.open("b")
+        fa = mgr.submit("a", qs[0][0])
+        fb = mgr.submit("b", qs[1][0])
+        # wave fires (full at max_batch=2); drain both to an idle queue
+        assert isinstance(fa.result(timeout=30), EngineTurn)
+        assert isinstance(fb.result(timeout=30), EngineTurn)
+        fb2 = mgr.submit("b", qs[1][1])             # held by the 60s window
+        mgr.close("a")                              # a has nothing pending
+        assert not fb2.done()                       # b's turn NOT flushed
+        mgr.flush()
+        assert isinstance(fb2.result(timeout=30), EngineTurn)
+
+
+def test_close_runs_pending_turn_before_slot_recycle(world, index):
+    """A turn already submitted for a closing key executes during close
+    (against the right cache), never against the slot's next occupant."""
+    eng = BatchedEngine(ShardedRouter(make_shards(index, 2), deadline_s=30),
+                        np.asarray(index.doc_emb), dim=index.dim,
+                        n_sessions=1, k=5, k_c=60)
+    qs = _streams(world, index, 1)[0]
+    with SessionManager(eng, window_s=60.0, max_batch=4) as mgr:
+        mgr.open("a")
+        fut = mgr.submit("a", qs[0])                # held by the window
+        mgr.close("a")                              # per-slot drain runs it
+        assert isinstance(fut.result(timeout=1), EngineTurn)
+        slot = mgr.open("b")
+        assert slot == 0 and eng.cache.n_docs[0] == 0
+
+
+def test_outage_fails_only_empty_cache_sessions_and_loop_survives(
+        world, index):
+    """Satellite: a backend TimeoutError mid-wave fails only the sessions
+    whose cache is still empty; warm sessions answer from cache, and the
+    scheduler loop keeps serving afterwards (never wedges)."""
+    router = ShardedRouter(make_shards(index, 2), deadline_s=10)
+    eng = BatchedEngine(router, np.asarray(index.doc_emb), dim=index.dim,
+                        n_sessions=2, k=5, k_c=80)
+    streams = _streams(world, index, 2)
+    eng.start_session(0)
+    eng.start_session(1)
+    eng.answer_batch([0], [streams[0][0]])          # warm only session 0
+    router.shards = make_shards(index, 2, fail={0, 1})
+    with ContinuousScheduler(eng, window_s=60.0, adaptive=False) as sched:
+        # both queued -> one wave (fires full at max_wave = n_sessions = 2)
+        fa = sched.submit(streams[0][1], slot=0)
+        fc = sched.submit(streams[1][0], slot=1)
+        ta = fa.result(timeout=30)
+        assert isinstance(ta, EngineTurn) and (ta.degraded or ta.hit)
+        with pytest.raises(TimeoutError):
+            fc.result(timeout=30)
+        assert len(eng.turns[1]) == 0               # failed turn unrecorded
+        # an all-empty-cache wave raises for every waiter...
+        eng.start_session(0)
+        eng.start_session(1)
+        f1 = sched.submit(streams[0][0], slot=0)
+        f2 = sched.submit(streams[1][0], slot=1)
+        for f in (f1, f2):
+            with pytest.raises(TimeoutError):
+                f.result(timeout=30)
+        # ...and the loop is still alive once the backend recovers
+        router.shards = make_shards(index, 2)
+        f3 = sched.submit(streams[0][0], slot=0)
+        f4 = sched.submit(streams[1][0], slot=1)
+        t3, t4 = f3.result(timeout=30), f4.result(timeout=30)
+        assert isinstance(t3, EngineTurn) and not t3.degraded
+        assert isinstance(t4, EngineTurn) and not t4.degraded
+
+
+@pytest.mark.slow
+def test_scheduler_turns_match_sequential_engine(world, index):
+    """Acceptance: turns served through the continuous scheduler (probe
+    overlap on) are bit-identical per session to a sequential
+    ConversationalEngine loop over the same streams."""
+    S, T, k, k_c = 3, 3, 8, 80
+    doc = np.asarray(index.doc_emb)
+    seq_router = ShardedRouter(make_shards(index, 2), deadline_s=30)
+    seq = [ConversationalEngine(seq_router, doc, dim=index.dim, k=k,
+                                k_c=k_c) for _ in range(S)]
+    for e in seq:
+        e.start_session()
+    eng = BatchedEngine(ShardedRouter(make_shards(index, 2), deadline_s=30),
+                        doc, dim=index.dim, n_sessions=S, k=k, k_c=k_c)
+    streams = _streams(world, index, S)
+    with SessionManager(eng, overlap=True) as mgr:  # continuous: window 0
+        for s in range(S):
+            mgr.open(s)
+        for t in range(T):
+            futs = [mgr.submit(s, streams[s][t]) for s in range(S)]
+            for s, fut in enumerate(futs):
+                turn = fut.result(timeout=60)
+                ref = seq[s].answer(streams[s][t])
+                np.testing.assert_array_equal(ref.ids, turn.ids)
+                np.testing.assert_array_equal(ref.scores, turn.scores)
+                assert ref.hit == turn.hit
+
+
+@pytest.mark.slow
+def test_scheduler_wave_launch_guards_hold_through_outage(monkeypatch):
+    """Satellite: the per-wave kernel-launch contract survives the
+    scheduler refactor AND a mid-run outage — a compulsory-miss wave is
+    exactly 3 Pallas launches (probe -> miss-search -> insert+query), an
+    outage wave exactly 2 (probe -> cache-fallback query; nothing to
+    insert), counted through the scheduler's worker, not answer_batch."""
+    import jax.experimental.pallas as plmod
+
+    from repro.dist.retrieval import DeviceShard
+
+    rng = np.random.default_rng(46)
+    n, d, s = 500, 61, 4
+    docs = _unit(rng, (n, d))
+    dev = DeviceShard(jnp.asarray(docs), jnp.arange(n, dtype=jnp.int32),
+                      backend="interpret")
+    down = {"on": False}
+
+    def shard(queries, k):
+        if down["on"]:
+            raise RuntimeError("shard down")
+        return dev(queries, k)
+
+    router = ShardedRouter([shard], deadline_s=120.0)
+    eng = BatchedEngine(router, docs, backend="interpret", dim=d,
+                        n_sessions=s, k=7, k_c=41, capacity=120)
+
+    calls = {"n": 0}
+    orig = plmod.pallas_call
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(plmod, "pallas_call", counting)
+
+    base = _unit(rng, (s, d))
+    with ContinuousScheduler(eng, window_s=60.0, adaptive=False) as sched:
+        for i in range(s):
+            eng.start_session(i)
+        jax.clear_caches()
+        calls["n"] = 0
+        futs = [sched.submit(jnp.asarray(base[i]), slot=i) for i in range(s)]
+        turns = [f.result(timeout=600) for f in futs]
+        assert calls["n"] == 3, f"miss wave traced {calls['n']} launches"
+        assert all(not t.hit for t in turns)
+
+        down["on"] = True
+        q2 = base + 0.5 * _unit(rng, (s, d))
+        q2 /= np.linalg.norm(q2, axis=1, keepdims=True)
+        jax.clear_caches()
+        calls["n"] = 0
+        futs = [sched.submit(jnp.asarray(q2[i]), slot=i) for i in range(s)]
+        turns = [f.result(timeout=600) for f in futs]
+        assert calls["n"] == 2, f"outage wave traced {calls['n']} launches"
+        for t in turns:
+            assert isinstance(t, EngineTurn) and (t.degraded or t.hit)
+        down["on"] = False

@@ -138,6 +138,25 @@ def test_microbatcher_serializes_batch_execution():
     assert overlaps[0] == 1
 
 
+def test_microbatcher_shim_pins_deprecation_and_old_signature():
+    """One-release compat shim: the old positional ``MicroBatcher(fn,
+    max_batch=, window_s=)`` constructor (and its router import path) must
+    keep working, warn once, and delegate to ContinuousScheduler."""
+    from repro.serve.scheduler import ContinuousScheduler
+    from repro.serve.scheduler import MicroBatcher as FromScheduler
+
+    with pytest.warns(DeprecationWarning, match="MicroBatcher is deprecated"):
+        mb = MicroBatcher(lambda items: list(items), max_batch=5,
+                          window_s=0.01)
+    assert MicroBatcher is FromScheduler          # router path re-exports
+    assert isinstance(mb, ContinuousScheduler)
+    assert mb.max_batch == 5 and mb.window_s == 0.01
+    assert mb.submit(7).result(timeout=2) == 7    # old contract still serves
+    mb.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.submit(1)
+
+
 def test_microbatcher_for_router_splits_rows(world, index):
     router = ShardedRouter(make_shards(index, 3), deadline_s=10)
     mb = MicroBatcher.for_router(router, k=8, max_batch=4, window_s=0.02)
