@@ -32,6 +32,11 @@ hard while wall-clock gates are deliberately loose):
     OPEN_LOOP_P99_IMPROVEMENT_FLOOR, and the continuous p95/p99 columns
     must exist and stay within the loose wall-clock keep-fraction of the
     committed baseline.
+  * topical prefetch (the cluster-prefetch Pareto sweep): the rows must
+    include the width-0 tiered baseline plus wider settings with all
+    traffic columns live, and hit_gap_best (best width > 0 hit rate minus
+    width 0) must be STRICTLY positive — prefetch has to buy hit rate,
+    never just traffic.
 
 Usage (CI):
     python benchmarks/check_regression.py \
@@ -134,6 +139,52 @@ def check_serve(current: dict, baseline: dict, errors: list) -> None:
     _check_zipf(cur.get("zipf"), base.get("zipf") or {}, errors)
     _check_open_loop(cur.get("open_loop"), base.get("open_loop") or {},
                      errors)
+    _check_prefetch(cur.get("prefetch"), base.get("prefetch") or {}, errors)
+
+
+def _check_prefetch(pf, base_pf: dict, errors: list) -> None:
+    """Topical-locality prefetch gates over the Pareto sweep record."""
+    if not pf:
+        errors.append("serve: prefetch record missing from current smoke "
+                      "record — the topical-prefetch gate lost its input")
+        return
+    rows = pf.get("rows") or []
+    widths = [r.get("prefetch_width") for r in rows]
+    if 0 not in widths or len(widths) < 2:
+        errors.append("serve: prefetch sweep must include the width-0 tiered "
+                      f"baseline plus at least one width > 0 (got {widths})")
+        return
+    for row in rows:
+        for col in ("hit_rate", "backend_queries", "prefetch_issued",
+                    "prefetch_warm_hits", "insert_traffic_docs",
+                    "insert_traffic_bytes"):
+            if col not in row:
+                errors.append(f"serve: prefetch row width="
+                              f"{row.get('prefetch_width')} misses {col}")
+    # the acceptance headline: SOME width must strictly beat the width-0
+    # tiered baseline on hit rate (the deterministic topical workload makes
+    # this a hard gate, not a tolerance band)
+    gap = pf.get("hit_gap_best")
+    if gap is None:
+        errors.append("serve: prefetch hit_gap_best column missing")
+    elif gap <= 0.0:
+        errors.append(
+            f"serve: prefetch never beats the tiered baseline "
+            f"(hit_gap_best {gap:+.3f} at width {pf.get('best_width')})")
+    base_gap = base_pf.get("hit_gap_best")
+    if base_gap and gap is not None and gap < base_gap - HIT_RATE_TOL:
+        errors.append(
+            f"serve: prefetch hit_gap_best regressed {base_gap:.3f} -> "
+            f"{gap:.3f} (beyond the {HIT_RATE_TOL} tolerance)")
+    # the Pareto trade must be charted honestly: the best width's warm hits
+    # and traffic columns must be live (a zero here means attribution broke)
+    best = next((r for r in rows
+                 if r.get("prefetch_width") == pf.get("best_width")), None)
+    if best is not None:
+        if not best.get("prefetch_warm_hits"):
+            errors.append("serve: best prefetch row records no warm hits")
+        if not best.get("prefetch_issued"):
+            errors.append("serve: best prefetch row issued no prefetches")
 
 
 def _check_open_loop(ol, base_ol: dict, errors: list) -> None:

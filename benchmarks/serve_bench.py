@@ -12,6 +12,12 @@ Replays the same per-session turn streams two ways —
 — and reports wall-clock queries/sec for each at several concurrency
 levels.  Writes ``BENCH_serve.json``.
 
+The closed-loop run also sweeps the topical-locality prefetch path
+(``bench_prefetch``): the same conversations replayed at several
+``prefetch_width`` settings over a clustered corpus, emitting hit-rate
+vs cache-traffic Pareto rows with width 0 as the pre-prefetch tiered
+baseline (the gap is gated by ``check_regression.py``).
+
 ``--open-loop`` instead drives the asynchronous front door with an
 open-loop Poisson arrival process (arrivals do NOT wait for previous
 turns — the honest way to measure tail latency) plus session churn, twice:
@@ -173,6 +179,96 @@ def bench_zipf(index, world, *, n_sessions, n_generations=3, alpha=1.1,
         "tier_counts": counts,
         "n_reuse_sampled": len(overlaps),
         "reuse_overlap": float(np.mean(overlaps)) if overlaps else None,
+    }
+
+
+def bench_prefetch(*, widths=(0, 100, 200, 300, 400), n_clusters=8,
+                   cluster_iters=10, max_width=400, n_shards=2, k=5, k_c=20,
+                   capacity=4096, dtype=None, backend="ref", seed=11) -> dict:
+    """Topical-locality prefetch sweep: hit rate vs cache traffic Pareto.
+
+    Builds a dedicated topical world — few dense topics in a low-dim
+    subspace, small query noise, misses driven by subtopic jumps, and
+    ``norm_jitter=0`` so the Eq. 1 appended coordinate does not inflate
+    query-to-centroid distances — clusters it once
+    (``repro.core.cluster``), then replays the same conversations at
+    several ``prefetch_width`` settings.  Width 0 is the tiered baseline
+    (no cluster attached anywhere — exactly the pre-prefetch serving
+    stack); each width > 0 attaches the cluster to both the engine
+    (miss-time neighbor prefetch folded into the fused insert+query
+    launch, claim widened by the triangle inequality) and the shared
+    tier (cluster-aware admission).
+
+    Each row reports the combined hit rate alongside the traffic bought:
+    docs pushed through the L1 insert launch (and their fp32 wire bytes),
+    prefetch issues, and warm hits (cache-served docs that arrived via
+    prefetch).  The rows form the Pareto frontier check_regression gates:
+    ``hit_gap_best`` (best width > 0 hit rate minus the width-0 baseline)
+    must be strictly positive.
+    """
+    cfg = WorldConfig(n_topics=4, docs_per_topic=300, n_background=600,
+                      dim=48, subspace_dim=4, turns=6, n_conversations=6,
+                      doc_sigma=0.8, query_sigma=0.05, drift_sigma=0.08,
+                      subtopic_prob=0.4, subtopic_sigma=0.45,
+                      norm_jitter=0.0, seed=seed)
+    world = make_world(cfg)
+    index = MetricIndex(jnp.asarray(world.doc_emb, jnp.float32), dtype=dtype)
+    cluster = index.cluster(n_clusters, iters=cluster_iters, seed=0,
+                            max_width=max_width, backend=backend)
+    n_sessions = len(world.conversations)
+    streams = _streams(world, index, n_sessions)
+    turns = streams[0].shape[0]
+    emb_bytes = index.dim * 4            # fp32 wire width per inserted doc
+    sids = list(range(n_sessions))
+    rows = []
+    for width in widths:
+        router = ShardedRouter(make_shards(index, n_shards), deadline_s=30)
+        shared = SharedTier(dim=index.dim, n_shards=n_shards,
+                            capacity=max(8 * k_c, 1024), memo_sim=0.995,
+                            dtype=dtype, cluster=cluster if width else None)
+        engine = BatchedEngine(router, np.asarray(index.dequantized()),
+                               dim=index.dim, n_sessions=n_sessions, k=k,
+                               k_c=k_c, capacity=capacity, dtype=dtype,
+                               backend=backend, shared=shared,
+                               cluster=cluster if width else None,
+                               prefetch_width=width)
+        for s in sids:
+            engine.start_session(s)
+        counts = {"l1": 0, "l2": 0, "l2_reuse": 0, "backend": 0}
+        t0 = time.perf_counter()
+        for t in range(turns):
+            for turn in engine.answer_batch(sids,
+                                            [streams[s][t] for s in sids]):
+                counts[turn.tier] += 1
+        elapsed = time.perf_counter() - t0
+        total = sum(counts.values())
+        pf = engine.prefetch_stats()
+        rows.append({
+            "prefetch_width": width,
+            "hit_rate": 1.0 - counts["backend"] / max(total, 1),
+            "tier_counts": counts,
+            "backend_queries": counts["backend"],
+            "prefetch_issued": pf["issued"],
+            "prefetch_warm_hits": pf["warm_hits"],
+            "insert_traffic_docs": pf["insert_traffic_docs"],
+            "insert_traffic_bytes": pf["insert_traffic_docs"] * emb_bytes,
+            "queries": total,
+            "elapsed_s": elapsed,
+        })
+        print(f"prefetch w={width:4d}  hit {rows[-1]['hit_rate']:.3f}"
+              f"  warm {pf['warm_hits']:4d}  issued {pf['issued']:5d}"
+              f"  traffic {pf['insert_traffic_docs']:5d} docs")
+    base = rows[0]
+    best = max(rows[1:], key=lambda r: r["hit_rate"]) if len(rows) > 1 \
+        else base
+    return {
+        "n_docs": index.n_docs, "dim": index.dim,
+        "n_clusters": n_clusters, "max_width": max_width,
+        "sessions": n_sessions, "turns": turns, "k": k, "k_c": k_c,
+        "capacity": capacity, "rows": rows,
+        "baseline_hit_rate": base["hit_rate"],
+        "best_width": best["prefetch_width"],
+        "hit_gap_best": best["hit_rate"] - base["hit_rate"],
     }
 
 
@@ -364,8 +460,8 @@ def bench_open_loop(index, world, *, n_sessions, n_arrivals, load=0.5,
     (``load / svc`` — a fixed multiple of the wave rate, not a fixed Hz;
     small enough that neither mode saturates, so the A/B measures
     admission policy rather than queue buildup) and the fixed-window
-    baseline's window (``4 x svc``, floored at 4 ms — the old
-    MicroBatcher default regime).  Each mode runs ``repeats`` times and
+    baseline's window (``4 x svc``, floored at 4 ms — the historical
+    fixed-window default regime).  Each mode runs ``repeats`` times and
     keeps its lowest-p99 run (wall-clock on shared hosts is noisy; the
     minimum is each policy's least-contended estimate).  The gated
     headline is ``p99_improvement``: windowed p99 over continuous p99,
@@ -510,9 +606,19 @@ def run(session_counts=(64, 128, 256, 512), *, turns=4, n_shards=4,
           f"  (l1 {zipf['l1_hit_rate']:.3f} + l2 {zipf['l2_hit_rate']:.3f})"
           f"  backend saved {zipf['backend_queries_saved']}"
           f"  reuse overlap {zipf['reuse_overlap']}")
+    # Topical-locality prefetch sweep: its own world (norm_jitter=0, dense
+    # topics) so the triangle-inequality claim widening has a regime to
+    # win in; width 0 is the pre-prefetch tiered stack, the gated Pareto
+    # headline is hit_gap_best > 0 (strictly)
+    prefetch = bench_prefetch(dtype=dtype)
+    print(f"prefetch sweep: baseline hit {prefetch['baseline_hit_rate']:.3f}"
+          f"  best hit {prefetch['baseline_hit_rate'] + prefetch['hit_gap_best']:.3f}"
+          f" @ width {prefetch['best_width']}"
+          f"  gap {prefetch['hit_gap_best']:+.3f}")
     record = {"n_docs": index.n_docs, "dim": world.cfg.dim, "k": k,
               "k_c": k_c, "n_shards": n_shards, "dtype": index.dtype,
-              "rows": rows, "zipf": zipf, "timestamp": time.time()}
+              "rows": rows, "zipf": zipf, "prefetch": prefetch,
+              "timestamp": time.time()}
     # merge-write so full runs and smoke runs co-own one file: the smoke
     # record nests under "smoke" (the committed-baseline schema
     # benchmarks/check_regression.py reads) and neither overwrites the other

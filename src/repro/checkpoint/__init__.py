@@ -1,3 +1,6 @@
+"""Checkpointing: async-friendly save/restore of jax pytrees (caches,
+optimizer state, serving state) with a manifest-driven manager."""
+
 from repro.checkpoint.manager import CheckpointManager, restore_tree, save_tree
 
 __all__ = ["CheckpointManager", "restore_tree", "save_tree"]

@@ -1,5 +1,10 @@
+"""Core layer: metric cache (L1/L2 tiers + device ops), exact metric index,
+embedding transform (Eq. 1), quantized corpus storage, and the offline
+topical clustering subsystem behind cluster prefetch."""
+
 from repro.core.cache import (BatchedMetricCache, CacheConfig, CacheState,
                               MetricCache, init_cache)
+from repro.core.cluster import ClusterIndex, build_cluster_index
 from repro.core.shared import SharedTier
 from repro.core.conversation import ConversationalSearcher, TurnRecord
 from repro.core.embedding import (distance_from_scores, pairwise_distances,
@@ -10,7 +15,7 @@ from repro.core.quant import DTYPES, QuantizedCorpus, dequantize, quantize
 
 __all__ = [
     "BatchedMetricCache", "CacheConfig", "CacheState", "MetricCache",
-    "init_cache", "SharedTier",
+    "init_cache", "ClusterIndex", "build_cluster_index", "SharedTier",
     "ConversationalSearcher", "TurnRecord",
     "distance_from_scores", "pairwise_distances", "pairwise_scores",
     "transform_documents", "transform_queries",

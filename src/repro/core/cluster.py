@@ -1,0 +1,284 @@
+"""Offline k-means clustering over the quantized corpus — topical locality.
+
+The follow-up paper "Efficient Conversational Search via Topical Locality
+in Dense Retrieval" observes that conversational queries cluster topically:
+successive turns of one conversation stay inside a small neighborhood of
+embedding space.  The historical-embedding cache thrives exactly then, so a
+backend miss should warm the cache with the *cluster neighborhood* of the
+answer, not just the answer documents themselves.
+
+This module builds that neighborhood structure offline as a Pallas workload
+riding the existing ``scan_topk`` dispatch contract — no new kernel:
+
+* **assignment step** — batched nearest-centroid search.  The centroids are
+  the corpus operand of ``scan_topk`` (ids ``0..K-1``), the documents are
+  the queries (dequantized through the shared payload->f32 rule), ``k=1``.
+  Because every tier of ``scan_topk`` is rank-identical at a fixed dtype,
+  the assignment is tier-identical too (see tests/test_cluster.py).
+* **update step** — a ``jax.ops.segment_sum`` centroid refresh.  Embeddings
+  are unit-norm after the Eq. 1 transform, so this is *spherical* k-means:
+  the refreshed centroid is the renormalized mean; empty clusters keep
+  their previous centroid.
+* **neighborhood tables** — one more ride on ``scan_topk``, this time over
+  the *quantized* corpus payload (centroids as queries, in-kernel
+  dequantization), yields each cluster's ``max_width`` nearest documents
+  and their centroid distances, sorted ascending.
+
+The product is a :class:`ClusterIndex`: centroids, per-document cluster
+ids, per-cluster member lists (CSR, ordered by centrality), and the
+neighbor tables.  ``MetricIndex.cluster(...)`` constructs and persists one
+(``save``/``load`` round-trips through ``.npz``).
+
+Serving integrations (see docs/architecture.md):
+
+* ``BatchedEngine(cluster=..., prefetch_width=m)`` — on a backend miss the
+  fill wave appends the ``m`` nearest-to-centroid documents to the answer
+  before the single fused insert+query launch (:meth:`ClusterIndex.prefetch`),
+  and soundly *widens* the recorded claim radius: with every document
+  within ``d_m`` of centroid ``c`` cached, the triangle inequality
+  guarantees every document within ``d_m - ||psi - c||`` of the query is
+  cached too, so the claim records ``max(r_a, d_m - ||psi - c||)``.
+* ``SharedTier(cluster=...)`` — L2 admission counts distinct sessions per
+  *cluster* instead of per document, so topical reuse across sessions
+  promotes whole neighborhoods at once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import embedding as emb
+from repro.kernels import dispatch as kdispatch
+
+__all__ = ["ClusterIndex", "assign_clusters", "build_cluster_index"]
+
+
+def assign_clusters(docs: np.ndarray, centroids: np.ndarray, *,
+                    backend: str | None = None, query_chunk: int = 2048):
+    """Nearest-centroid assignment via the ``scan_topk`` kNN contract.
+
+    ``docs`` (n, dim) f32 — typically ``MetricIndex.dequantized()`` rows,
+    i.e. the shared-dequantization-rule view of the corpus; ``centroids``
+    (K, dim) f32.  The centroids are the scan's corpus operand and the
+    documents stream through as query batches of ``query_chunk`` rows, so
+    the assignment inherits the tiers' rank-identity guarantee.
+
+    Returns ``(assign (n,) int32, score (n,) f32)`` — the winning centroid
+    id per document and its inner-product score.
+    """
+    be = kdispatch.resolve(backend)
+    cents = jnp.asarray(centroids, jnp.float32)
+    cids = jnp.arange(cents.shape[0], dtype=jnp.int32)
+    from repro.core.metric_index import scan_topk
+    out_a, out_s = [], []
+    n = docs.shape[0]
+    for lo in range(0, n, query_chunk):
+        q = jnp.asarray(docs[lo:lo + query_chunk], jnp.float32)
+        s, i = scan_topk(cents, cids, q, 1, chunk=int(cents.shape[0]),
+                         backend=be)
+        out_a.append(np.asarray(i[:, 0]))
+        out_s.append(np.asarray(s[:, 0]))
+    return (np.concatenate(out_a).astype(np.int32),
+            np.concatenate(out_s).astype(np.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _refresh_centroids(docs, assign, old, k):
+    """Segment-sum spherical update: renormalized per-cluster mean; empty
+    clusters carry their previous centroid forward."""
+    sums = jax.ops.segment_sum(docs, assign, num_segments=k)
+    counts = jax.ops.segment_sum(jnp.ones((docs.shape[0],), jnp.float32),
+                                 assign, num_segments=k)
+    norms = jnp.linalg.norm(sums, axis=1, keepdims=True)
+    fresh = sums / jnp.maximum(norms, 1e-12)
+    keep = (counts[:, None] > 0.5) & (norms > 1e-12)
+    return jnp.where(keep, fresh, old)
+
+
+def _kmeanspp_init(docs: np.ndarray, k: int, seed: int) -> np.ndarray:
+    """Deterministic k-means++ seeding on the unit sphere (D^2 sampling).
+
+    O(k * n * dim) on host — fine at index-build time; subsample the
+    corpus first at very large scale."""
+    rng = np.random.default_rng(seed)
+    n = docs.shape[0]
+    first = int(rng.integers(n))
+    cents = [docs[first]]
+    # squared distance to nearest chosen centroid; unit vectors => 2 - 2s
+    d2 = np.maximum(2.0 - 2.0 * (docs @ cents[0]), 0.0)
+    for _ in range(1, k):
+        total = float(d2.sum())
+        if total <= 0.0:            # corpus exhausted (duplicates)
+            cents.append(docs[int(rng.integers(n))])
+            continue
+        nxt = int(rng.choice(n, p=d2 / total))
+        cents.append(docs[nxt])
+        d2 = np.minimum(d2, np.maximum(2.0 - 2.0 * (docs @ docs[nxt]), 0.0))
+    return np.stack(cents).astype(np.float32)
+
+
+class ClusterIndex:
+    """Topical-locality artifact of :func:`build_cluster_index`.
+
+    Attributes
+    ----------
+    centroids : (K, dim) f32, unit-norm cluster centers.
+    assign : (n_docs,) int32, per-document cluster id (corpus position
+        indexed — serving doc ids are corpus positions).
+    member_offsets / member_ids : CSR member lists; ``members(c)`` slices
+        cluster ``c``'s doc ids, most-central first.
+    near_ids / near_d : (K, max_width) neighbor tables — the corpus-wide
+        nearest documents to each centroid and their Euclidean centroid
+        distances, ascending.  ``near_d[c, m-1]`` is the radius of the
+        fully-enumerated ball around centroid ``c`` that a width-``m``
+        prefetch caches, which is what lets :meth:`prefetch` return a
+        sound claim-radius bound.
+    """
+
+    def __init__(self, centroids, assign, member_offsets, member_ids,
+                 near_ids, near_d, *, n_iters: int = 0):
+        self.centroids = np.asarray(centroids, np.float32)
+        self.assign = np.asarray(assign, np.int32)
+        self.member_offsets = np.asarray(member_offsets, np.int64)
+        self.member_ids = np.asarray(member_ids, np.int64)
+        self.near_ids = np.asarray(near_ids, np.int64)
+        self.near_d = np.asarray(near_d, np.float32)
+        self.n_iters = int(n_iters)
+
+    @property
+    def n_clusters(self) -> int:
+        """Number of clusters K."""
+        return int(self.centroids.shape[0])
+
+    @property
+    def n_docs(self) -> int:
+        """Number of clustered corpus documents."""
+        return int(self.assign.shape[0])
+
+    @property
+    def max_width(self) -> int:
+        """Widest prefetch the neighbor tables support."""
+        return int(self.near_ids.shape[1])
+
+    @property
+    def sizes(self) -> np.ndarray:
+        """(K,) member counts per cluster."""
+        return np.diff(self.member_offsets).astype(np.int64)
+
+    def members(self, c: int) -> np.ndarray:
+        """Doc ids of cluster ``c``, most-central first."""
+        return self.member_ids[self.member_offsets[c]:self.member_offsets[c + 1]]
+
+    def cluster_of(self, ids) -> np.ndarray:
+        """Per-document cluster ids; -1 for out-of-corpus / sentinel ids."""
+        ids = np.asarray(ids, np.int64)
+        out = np.full(ids.shape, -1, np.int32)
+        ok = (ids >= 0) & (ids < self.n_docs)
+        out[ok] = self.assign[ids[ok]]
+        return out
+
+    def nearest_centroid(self, psi: np.ndarray):
+        """(cluster id, Euclidean distance to its centroid) for a unit query."""
+        scores = self.centroids @ np.asarray(psi, np.float32)
+        c = int(np.argmax(scores))
+        delta = float(np.sqrt(max(2.0 - 2.0 * float(scores[c]), 0.0)))
+        return c, delta
+
+    def prefetch(self, psi: np.ndarray, answer_ids: np.ndarray, width: int):
+        """Expansion set for a backend miss at query ``psi``.
+
+        Returns ``(extra_ids, claim_bound)``: up to ``width`` documents
+        nearest the centroid of ``psi``'s cluster that are not already in
+        ``answer_ids``, plus the sound claim radius ``d_w - ||psi - c||``
+        (triangle inequality; 0.0 when the cluster is farther than its own
+        neighborhood radius).  Caching ``answer_ids + extra_ids`` makes
+        every document within ``claim_bound`` of ``psi`` cached, so the
+        engine may record ``max(r_a, claim_bound)`` for this insert.
+        """
+        width = min(int(width), self.max_width)
+        if width <= 0:
+            return np.empty(0, np.int64), 0.0
+        c, delta = self.nearest_centroid(psi)
+        ids = self.near_ids[c, :width]
+        d_w = float(self.near_d[c, width - 1])
+        extra = ids[(ids >= 0) & ~np.isin(ids, answer_ids)]
+        return extra.astype(np.int64), max(d_w - delta, 0.0)
+
+    def memory_bytes(self) -> int:
+        """Host bytes held by the index arrays."""
+        return sum(a.nbytes for a in (self.centroids, self.assign,
+                                      self.member_offsets, self.member_ids,
+                                      self.near_ids, self.near_d))
+
+    def save(self, path) -> None:
+        """Persist to ``path`` as an ``.npz`` archive."""
+        np.savez(path, centroids=self.centroids, assign=self.assign,
+                 member_offsets=self.member_offsets,
+                 member_ids=self.member_ids, near_ids=self.near_ids,
+                 near_d=self.near_d, n_iters=np.int64(self.n_iters))
+
+    @classmethod
+    def load(cls, path) -> "ClusterIndex":
+        """Load an index previously written by :meth:`save`."""
+        with np.load(path) as z:
+            return cls(z["centroids"], z["assign"], z["member_offsets"],
+                       z["member_ids"], z["near_ids"], z["near_d"],
+                       n_iters=int(z["n_iters"]))
+
+
+def build_cluster_index(index, n_clusters: int = 64, *, iters: int = 10,
+                        seed: int = 0, max_width: int = 256,
+                        backend: str | None = None,
+                        query_chunk: int = 2048) -> ClusterIndex:
+    """Spherical k-means over a ``MetricIndex`` corpus (module docstring).
+
+    ``iters`` bounds the Lloyd iterations (converges early when the
+    assignment fixes); ``max_width`` sizes the per-cluster neighbor tables
+    and therefore the widest serving-time ``prefetch_width``.  ``backend``
+    pins the scan tier for both the assignment and neighbor-table passes
+    (``None`` follows the index's own tier).
+    """
+    be = kdispatch.resolve(backend if backend is not None else index.backend)
+    docs = np.asarray(index.dequantized())[:index.n_docs].astype(np.float32)
+    n = docs.shape[0]
+    k = max(1, min(int(n_clusters), n))
+    max_width = max(1, min(int(max_width), n))
+
+    centroids = _kmeanspp_init(docs, k, seed)
+    docs_j = jnp.asarray(docs)
+    assign = np.full((n,), -1, np.int32)
+    n_iters = 0
+    for _ in range(max(1, int(iters))):
+        n_iters += 1
+        new_assign, _ = assign_clusters(docs, centroids, backend=be,
+                                        query_chunk=query_chunk)
+        if np.array_equal(new_assign, assign):
+            break
+        assign = new_assign
+        centroids = np.asarray(_refresh_centroids(
+            docs_j, jnp.asarray(assign), jnp.asarray(centroids), k))
+
+    # Member lists ordered by centrality (score to own centroid, descending).
+    assign, own_score = assign_clusters(docs, centroids, backend=be,
+                                        query_chunk=query_chunk)
+    order = np.lexsort((-own_score, assign))
+    member_ids = np.asarray(index.doc_ids[:n], np.int64)[order]
+    member_offsets = np.zeros(k + 1, np.int64)
+    np.cumsum(np.bincount(assign, minlength=k), out=member_offsets[1:])
+
+    # Neighbor tables: one more scan_topk ride, this time over the
+    # *quantized* payload with the in-kernel dequantization rule.
+    from repro.core.metric_index import scan_topk
+    s, i = scan_topk(index.doc_emb, index.doc_ids,
+                     jnp.asarray(centroids, jnp.float32), max_width,
+                     chunk=index.chunk, backend=be, scale=index.doc_scale,
+                     int8_dot=index.int8_dot)
+    near_ids = np.asarray(i, np.int64)
+    near_d = np.asarray(emb.distance_from_scores(s), np.float32)
+
+    return ClusterIndex(centroids, assign, member_offsets, member_ids,
+                        near_ids, near_d, n_iters=n_iters)

@@ -263,6 +263,34 @@ class MetricIndex:
                                      scale=self.doc_scale,
                                      int8_dot=self.int8_dot))
 
+    def cluster(self, n_clusters: int = 64, *, iters: int = 10, seed: int = 0,
+                max_width: int = 256, backend: str | None = None, path=None):
+        """Build (and memoize) a topical ``ClusterIndex`` over this corpus.
+
+        Parameters mirror ``repro.core.cluster.build_cluster_index``.
+        ``path`` persists the artifact: an existing ``.npz`` at ``path`` is
+        loaded instead of rebuilding, otherwise the fresh index is saved
+        there.  Builds are memoized per parameter tuple — the corpus is
+        immutable after construction, so a rebuild can never differ.
+        """
+        import os
+
+        from repro.core.cluster import ClusterIndex, build_cluster_index
+        key = (int(n_clusters), int(iters), int(seed), int(max_width), backend)
+        memo = getattr(self, "_clusters", None)
+        if memo is None:
+            memo = self._clusters = {}
+        if key not in memo:
+            if path is not None and os.path.exists(path):
+                memo[key] = ClusterIndex.load(path)
+            else:
+                memo[key] = build_cluster_index(
+                    self, n_clusters, iters=iters, seed=seed,
+                    max_width=max_width, backend=backend)
+                if path is not None:
+                    memo[key].save(path)
+        return memo[key]
+
     def dequantized(self) -> jax.Array:
         """f32 view of the (padded) transformed corpus — the exact values
         every scan tier scores against.  Host-side tooling (benchmark shard

@@ -35,6 +35,15 @@ Three mechanisms distinguish the tier from a big L1:
   off-topic queries never clear the bar, so they cannot pollute the
   shared tier (the admission-control direction in ROADMAP).
 
+  With a ``repro.core.cluster.ClusterIndex`` attached (``cluster=``), the
+  popularity unit coarsens from the document to its *topical cluster*:
+  distinct sessions are counted per cluster id, so two sessions
+  retrieving different documents of the same topic still clear the bar
+  together.  That matches how conversational reuse actually arrives —
+  sessions share topics, rarely exact result sets — and lets the tier
+  warm a topic after ``admission_sessions`` sessions touch it from any
+  angle, while one-session topics still never promote.
+
 * **Semantic result reuse.**  The tier memoizes recent
   ``(query embedding, top-k_c result)`` pairs from fresh back-end
   retrievals.  A near-duplicate query from ANOTHER session — cosine
@@ -88,6 +97,7 @@ class SharedTier:
                  admission_sessions: int = 2, admission_frac: float = 0.5,
                  admission_table_max: int = 1_000_000,
                  memo_size: int = 256, memo_sim: float = 0.995,
+                 cluster=None,
                  dtype: Optional[str] = None, backend: Optional[str] = None,
                  seed: int = 0):
         self.cfg = CacheConfig(capacity=capacity, dim=dim,
@@ -107,11 +117,14 @@ class SharedTier:
         qp = self.cfg.phys_max_queries
         self._claim_wave = np.full((n_shards, qp), _NEVER, np.int64)
         self._claim_alive = np.zeros((n_shards, qp), bool)
-        # admission: doc id -> distinct session tokens (capped — once the
-        # bar is met there is nothing more to learn about a document)
+        # admission: popularity unit -> distinct session tokens (capped —
+        # once the bar is met there is nothing more to learn).  The unit
+        # is the doc id, or its topical cluster id when a ClusterIndex is
+        # attached (cluster-aware admission; see module docstring).
         self.admission_sessions = admission_sessions
         self.admission_frac = admission_frac
         self.admission_table_max = admission_table_max
+        self.cluster = cluster
         self._seen: dict[int, set] = {}
         self._pending: list[tuple] = []
         # semantic result memo: ring of (psi, ids, scores, r_a, token, wave)
@@ -211,13 +224,29 @@ class SharedTier:
             # coarse pressure valve: restart the popularity counts rather
             # than let the host table grow without bound
             self._seen.clear()
-        promotable = 0
-        for d in ids[real].tolist():
-            s = self._seen.setdefault(d, set())
-            if len(s) < self.admission_sessions:
-                s.add(token)
-            if len(s) >= self.admission_sessions:
-                promotable += 1
+        if self.cluster is not None:
+            # cluster-aware: vote once per distinct topical cluster, then
+            # count a doc promotable iff its CLUSTER cleared the bar
+            # (out-of-corpus ids fall back to per-doc keys, negated so
+            # they can never collide with cluster ids)
+            cids = self.cluster.cluster_of(ids[real])
+            keys = [int(c) if c >= 0 else -(int(d) + 1)
+                    for c, d in zip(cids, ids[real])]
+            for ck in set(keys):
+                s = self._seen.setdefault(ck, set())
+                if len(s) < self.admission_sessions:
+                    s.add(token)
+            promotable = sum(
+                1 for ck in keys
+                if len(self._seen[ck]) >= self.admission_sessions)
+        else:
+            promotable = 0
+            for d in ids[real].tolist():
+                s = self._seen.setdefault(d, set())
+                if len(s) < self.admission_sessions:
+                    s.add(token)
+                if len(s) >= self.admission_sessions:
+                    promotable += 1
         if promotable < self.admission_frac * int(real.sum()):
             return False
         shard = int(self.route(np.asarray(psi, np.float32)[None])[0])

@@ -1,16 +1,20 @@
-# Pallas TPU kernel layer — the serving hot path on TPU.  Every op ships
-# in three dispatch tiers (ref / interpret / compiled) sharing one
-# contract; see repro.kernels.dispatch and the README "Pallas kernels"
-# section.  Kernels exist ONLY for compute hot-spots the paper itself
-# optimizes (the corpus scan, the per-utterance probe, the embedding bag).
-#
-# Op re-exports are lazy (PEP 562): importing the package (as the core
-# serving modules do for the dispatch helpers) must not pull the Pallas
-# machinery onto a ref-tier-only process.  The probe ops are NOT
-# re-exported at package level — `cache_probe` would collide with the
-# subpackage of the same name (once the subpackage is imported anywhere,
-# the import system binds it as a package attribute and shadows any
-# function export); import them from `repro.kernels.cache_probe.ops`.
+"""Pallas TPU kernel layer — the serving hot path on TPU.
+
+Every op ships in three dispatch tiers (ref / interpret / compiled)
+sharing one contract; see ``repro.kernels.dispatch`` and the kernels
+section of docs/architecture.md.  Kernels exist ONLY for compute
+hot-spots the paper itself optimizes (the corpus scan, the
+per-utterance probe, the embedding bag).
+
+Op re-exports are lazy (PEP 562): importing the package (as the core
+serving modules do for the dispatch helpers) must not pull the Pallas
+machinery onto a ref-tier-only process.  The probe ops are NOT
+re-exported at package level — ``cache_probe`` would collide with the
+subpackage of the same name (once the subpackage is imported anywhere,
+the import system binds it as a package attribute and shadows any
+function export); import them from ``repro.kernels.cache_probe.ops``.
+"""
+
 from repro.kernels import dispatch  # noqa: F401
 
 __all__ = ["dispatch", "knn_search"]

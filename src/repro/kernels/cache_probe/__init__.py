@@ -1,1 +1,3 @@
+"""Session-batched LowQuality cache-probe kernel (see ``.ops``)."""
+
 from repro.kernels.cache_probe.ops import cache_probe  # noqa: F401

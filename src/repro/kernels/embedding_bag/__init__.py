@@ -1,1 +1,3 @@
+"""Fused embedding-bag gather/pool kernel (see ``.ops``)."""
+
 from repro.kernels.embedding_bag.ops import embedding_bag  # noqa: F401

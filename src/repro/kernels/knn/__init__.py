@@ -1,1 +1,3 @@
+"""Pipelined fused kNN corpus-scan kernel (see ``.ops``)."""
+
 from repro.kernels.knn.ops import knn_search  # noqa: F401

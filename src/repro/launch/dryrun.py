@@ -1,18 +1,19 @@
-import os
-
-from repro.launch.hostdevices import ensure_host_devices
-ensure_host_devices(512, override=True)   # production meshes need 512
-
 """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
 production meshes and record memory/cost/collective evidence.
 
-MUST be the process entry point (jax locks the device count on first init);
-the XLA_FLAGS line above precedes every other import for that reason.
+MUST be the process entry point (jax locks the device count on first
+init); the ``ensure_host_devices`` call below precedes every other
+import for that reason.
 
 Usage:
   python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
   python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
 """
+
+import os
+
+from repro.launch.hostdevices import ensure_host_devices
+ensure_host_devices(512, override=True)   # production meshes need 512
 
 import argparse          # noqa: E402
 import json              # noqa: E402

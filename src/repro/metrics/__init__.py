@@ -1,3 +1,6 @@
+"""IR quality metrics (MRR, nDCG@k, AP, coverage) shared by the paper
+tables and the benchmark gates."""
+
 from repro.metrics.ir import (average_precision, coverage, mean_metric, mrr,
                               ndcg_at_k, precision_at_k)
 

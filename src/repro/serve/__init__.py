@@ -4,10 +4,10 @@ scheduler + telemetry front door."""
 
 from repro.serve.engine import ConversationalEngine, EngineTurn
 from repro.serve.router import ShardAnswer, ShardedRouter
-from repro.serve.scheduler import ContinuousScheduler, MicroBatcher
+from repro.serve.scheduler import ContinuousScheduler
 from repro.serve.session import BatchedEngine, SessionManager
 from repro.serve.telemetry import ServeTelemetry, TurnSpans
 
-__all__ = ["ConversationalEngine", "EngineTurn", "MicroBatcher",
+__all__ = ["ConversationalEngine", "EngineTurn",
            "ShardAnswer", "ShardedRouter", "BatchedEngine", "SessionManager",
            "ContinuousScheduler", "ServeTelemetry", "TurnSpans"]

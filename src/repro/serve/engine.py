@@ -62,6 +62,11 @@ class EngineTurn:
     # came through the batched pipeline.
     queue_wait_s: float = 0.0
     spans: Optional[object] = None
+    # how many of this turn's returned docs were brought into the session
+    # cache by cluster prefetch (repro.core.cluster) rather than by a
+    # back-end answer — the per-turn warm-hit signal the prefetch Pareto
+    # sweep aggregates.  Always 0 without a cluster index attached.
+    prefetch_hits: int = 0
 
 
 def radius_and_docs(scores: np.ndarray, ids: np.ndarray,

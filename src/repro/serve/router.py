@@ -6,8 +6,7 @@ posture for thousands of nodes:
   * **Batched scatter-gather**: concurrent session queries arrive as one
     stacked ``search`` (the paper batches 216 queries into FAISS for the
     same reason); admission batching itself lives in
-    ``repro.serve.scheduler`` (the old fixed-window ``MicroBatcher`` is a
-    deprecation shim there, still importable from this module).
+    ``repro.serve.scheduler``.
   * **Hedging / straggler mitigation**: each shard call runs with a
     deadline; shards that miss it are retried once (hedge), and if the
     retry also misses, the router returns a *degraded* answer assembled
@@ -153,8 +152,3 @@ class ShardedRouter:
         order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
         return ShardAnswer(np.take_along_axis(scores, order, axis=1),
                            np.take_along_axis(ids, order, axis=1))
-
-
-# Back-compat import path: the fixed-window batcher moved to the scheduler
-# module as a one-release deprecation shim over ContinuousScheduler.
-from repro.serve.scheduler import MicroBatcher  # noqa: E402,F401

@@ -1,16 +1,17 @@
 """Continuous batching: the slot-scheduled serving front door.
 
-``ContinuousScheduler`` replaces the fixed-window ``MicroBatcher`` wave.
-The old front door held every arrival until a batch filled or a wall-clock
-window expired, then ran the whole batch synchronously — so a turn's
-latency was dominated by a queueing delay nobody measured, and the engine
-sat idle while the window timer ran.  The scheduler instead:
+``ContinuousScheduler`` replaces the fixed-window ``MicroBatcher`` front
+door (removed after its one-release deprecation; see the migration note
+in docs/architecture.md).  The old front door held every arrival until a
+batch filled or a wall-clock window expired, then ran the whole batch
+synchronously — so a turn's latency was dominated by a queueing delay
+nobody measured, and the engine sat idle while the window timer ran.  The
+scheduler instead:
 
   * **admits continuously** — a dedicated worker forms the next wave from
     whatever is queued the moment the engine can take it (no window timer;
-    an optional ``window_s`` hold survives only as the deprecated
-    ``MicroBatcher`` compatibility mode and as serve_bench's fixed-window
-    baseline);
+    an optional ``window_s`` hold survives only as serve_bench's
+    fixed-window baseline);
   * **pipelines waves** — with an engine exposing the split wave contract
     (``probe_wave`` / ``backend_wave`` / ``fill_wave``,
     ``repro.serve.session.BatchedEngine``), the L1/L2 cache probe of wave
@@ -31,8 +32,10 @@ sat idle while the window timer ran.  The scheduler instead:
     queued turns to their own schedule instead of force-flushing the
     world.
 
-``MicroBatcher`` remains importable for one release as a deprecation shim
-delegating to the scheduler's generic-``fn`` mode with the window hold.
+Migration from ``MicroBatcher``: ``MicroBatcher(fn, max_batch, window_s)``
+is ``ContinuousScheduler(fn=fn, max_wave=max_batch, window_s=window_s,
+adaptive=False, overlap=False)``; serving code should go through
+``SessionManager`` instead.
 """
 
 from __future__ import annotations
@@ -40,12 +43,11 @@ from __future__ import annotations
 import concurrent.futures as cf
 import threading
 import time
-import warnings
 from typing import Callable, Optional
 
 from repro.serve.telemetry import ServeTelemetry
 
-__all__ = ["ContinuousScheduler", "MicroBatcher"]
+__all__ = ["ContinuousScheduler"]
 
 
 class _Item:
@@ -58,9 +60,9 @@ class _Item:
         self.slot = slot
         self.future: cf.Future = cf.Future()
         self.admitted_at = time.perf_counter()
-        # released: the item was queued when a wave fired (the old
-        # MicroBatcher would have flushed it); it no longer waits on any
-        # window hold even if it could not join that wave (same-slot defer)
+        # released: the item was queued when a wave fired (window mode
+        # would have flushed it); it no longer waits on any window hold
+        # even if it could not join that wave (same-slot defer)
         self.released = False
 
 
@@ -87,13 +89,13 @@ class ContinuousScheduler:
       split wave contract, overlapping wave *t+1*'s probe with wave *t*'s
       back-end search when ``overlap=True``.
     * **fn mode** (``fn=``): items are opaque; each wave is one
-      ``fn(items) -> results`` call, one result per item in order — the
-      old ``MicroBatcher`` contract (a result that is an exception
-      instance fails only its own waiter; ``fn`` raising fails the wave).
+      ``fn(items) -> results`` call, one result per item in order (a
+      result that is an exception instance fails only its own waiter;
+      ``fn`` raising fails the wave).
 
-    ``window_s > 0`` enables the deprecated hold-for-window admission the
-    ``MicroBatcher`` shim and serve_bench's fixed-window baseline use;
-    the continuous default is ``window_s = 0``.
+    ``window_s > 0`` enables the deprecated hold-for-window admission
+    serve_bench's fixed-window baseline uses; the continuous default is
+    ``window_s = 0``.
     """
 
     def __init__(self, engine=None, *, fn: Optional[Callable] = None,
@@ -283,7 +285,7 @@ class ContinuousScheduler:
         self._queue = [it for it in self._queue if id(it) not in taken]
         if not drain_only:
             for it in self._queue:
-                # the old MicroBatcher's flush took the whole queue: anything
+                # a window-mode flush takes the whole queue: anything
                 # already admitted when this wave fired owes no further hold
                 it.released = True
         for it in batch:
@@ -392,46 +394,3 @@ class ContinuousScheduler:
             self._adapt_locked()
             self._cond.notify_all()
 
-
-class MicroBatcher(ContinuousScheduler):
-    """DEPRECATED one-release shim: the fixed-window front door, expressed
-    as a ``ContinuousScheduler`` in fn mode with the window hold.
-
-    Keeps the old constructor signature and semantics — ``submit(item)``
-    futures, flush on batch-full or ``window_s`` after the first queued
-    item, serial ``fn`` execution, per-item exception routing — while new
-    code targets ``ContinuousScheduler`` / ``SessionManager`` directly.
-    """
-
-    def __init__(self, fn: Callable, max_batch: int = 64,
-                 window_s: float = 0.002):
-        warnings.warn(
-            "MicroBatcher is deprecated: use ContinuousScheduler (or "
-            "SessionManager's continuous admission) instead; this shim "
-            "keeps one release of back-compat", DeprecationWarning,
-            stacklevel=2)
-        super().__init__(fn=fn, max_wave=max_batch, window_s=window_s,
-                         adaptive=False, overlap=False)
-
-    @property
-    def fn(self) -> Callable:
-        return self._fn
-
-    @property
-    def max_batch(self) -> int:
-        return self.max_wave
-
-    @classmethod
-    def for_router(cls, router, k: int, **kwargs) -> "MicroBatcher":
-        """Batcher whose items are single query vectors: one stacked
-        ``router.search`` per batch, per-row ``(ShardAnswer, degraded)``
-        routed back to each submitter."""
-        import numpy as np
-
-        from repro.serve.router import ShardAnswer
-
-        def run(items: list) -> list:
-            ans, degraded = router.search(np.stack(items), k)
-            return [(ShardAnswer(ans.scores[i:i + 1], ans.ids[i:i + 1]),
-                     degraded) for i in range(len(items))]
-        return cls(run, **kwargs)

@@ -121,8 +121,8 @@ class WaveState:
     tier: np.ndarray                 # (bucket,) serving tier per row
     reuse: np.ndarray                # (bucket,) L2 memo reuse rows
     l2hit: np.ndarray                # (bucket,) L2 shard-probe hit rows
-    new_ids: np.ndarray              # (bucket, k_c) docs to insert
-    new_emb: np.ndarray              # (bucket, k_c, dim)
+    new_ids: np.ndarray              # (bucket, k_c + prefetch_width) inserts
+    new_emb: np.ndarray              # (bucket, k_c + prefetch_width, dim)
     rad: np.ndarray                  # (bucket,) claim radii
     rec_np: np.ndarray               # (bucket,) record the (psi, r_a) claim
     backend_ok: np.ndarray           # (bucket,) rows the backend answered
@@ -145,12 +145,30 @@ class BatchedEngine:
                  dtype: Optional[str] = None,
                  backend: Optional[str] = None,
                  shared: Optional[SharedTier] = None,
+                 cluster=None, prefetch_width: int = 0,
                  telemetry: Optional[ServeTelemetry] = None):
         self.router = router
         self.doc_embeddings = doc_embeddings
         self.n_sessions = n_sessions
         self.k, self.k_c, self.epsilon = k, k_c, epsilon
         self.encoder = encoder
+        # cluster + prefetch_width: the topical-locality prefetch path
+        # (repro.core.cluster).  On a backend miss the fill phase appends
+        # up to prefetch_width nearest-to-centroid docs to the answer
+        # inside the SAME fused insert+query launch, and widens the
+        # recorded claim by the triangle inequality (see fill_wave).
+        self.cluster = cluster
+        self.prefetch_width = int(prefetch_width) if cluster is not None else 0
+        if self.cluster is not None \
+                and self.prefetch_width > self.cluster.max_width:
+            raise ValueError(
+                f"prefetch_width {self.prefetch_width} exceeds the cluster "
+                f"index's neighbor tables (max_width {self.cluster.max_width})")
+        # per-slot ids brought in by prefetch (for warm-hit attribution)
+        self._prefetched: list[set] = [set() for _ in range(n_sessions)]
+        self.prefetch_issued = 0       # docs inserted via prefetch
+        self.prefetch_warm_hits = 0    # prefetched docs in cache-served results
+        self.insert_traffic_docs = 0   # docs offered to the L1 insert launch
         # backend: the kernels.dispatch tier the wave's cache ops run on
         # (None follows the process default — compiled Pallas on TPU, jnp
         # ref elsewhere).  Resolved once so every wave of this engine rides
@@ -185,6 +203,7 @@ class BatchedEngine:
     def start_session(self, session: int):
         self.cache.reset([session])
         self.turns[session] = []
+        self._prefetched[session].clear()
         self._gen[session] += 1
 
     def _token(self, slot) -> tuple:
@@ -252,8 +271,11 @@ class BatchedEngine:
         # launch and every answer is re-scored against THIS query's psi
         reuse = np.zeros((bucket,), bool)
         l2hit = np.zeros((bucket,), bool)
-        new_ids = np.full((bucket, self.k_c), -1, np.int64)
-        new_emb = np.zeros((bucket, self.k_c, self.doc_embeddings.shape[1]),
+        # insert buffers carry prefetch_width extra columns so the fill
+        # phase can fold cluster neighbors into the same fused launch
+        width = self.k_c + self.prefetch_width
+        new_ids = np.full((bucket, width), -1, np.int64)
+        new_emb = np.zeros((bucket, width, self.doc_embeddings.shape[1]),
                            self.doc_embeddings.dtype)
         rad = np.zeros((bucket,), np.float32)
         rec_np = np.zeros((bucket,), bool)
@@ -358,8 +380,8 @@ class BatchedEngine:
                     radii = np.asarray(distance_from_scores(jnp.asarray(
                         np.take_along_axis(ans.scores, n_valid[:, None] - 1,
                                            axis=1)[:, 0])))
-                    ws.new_ids[miss] = ans.ids
-                    ws.new_emb[miss] = self.doc_embeddings[
+                    ws.new_ids[miss, :self.k_c] = ans.ids
+                    ws.new_emb[miss, :self.k_c] = self.doc_embeddings[
                         np.maximum(ans.ids, 0)]
                     ws.rad[miss] = radii
                     # a degraded merge is missing shards: keep the docs,
@@ -402,9 +424,32 @@ class BatchedEngine:
         still empty.
         """
         t0 = time.perf_counter()
+        if self.prefetch_width and self.cluster is not None:
+            # Topical prefetch: expand each fresh back-end answer with its
+            # cluster's nearest-to-centroid docs (the prefetch_width extra
+            # buffer columns), riding the same fused launch below.  With
+            # the whole ball(centroid, d_w) cached, the triangle
+            # inequality makes ball(psi, d_w - ||psi - c||) cached too, so
+            # the recorded claim widens to max(r_a, d_w - ||psi - c||).
+            # (Like the r_a claim itself, this assumes capacity headroom —
+            # dropped inserts void claims; size L1 >= k_c + width.)
+            for i in np.nonzero(ws.backend_ok)[0]:
+                extra, bound = self.cluster.prefetch(
+                    ws.psi_np[i], ws.new_ids[i, :self.k_c],
+                    self.prefetch_width)
+                if extra.size:
+                    ws.new_ids[i, self.k_c:self.k_c + extra.size] = extra
+                    ws.new_emb[i, self.k_c:self.k_c + extra.size] = \
+                        self.doc_embeddings[extra]
+                    self.prefetch_issued += int(extra.size)
+                    self._prefetched[int(ws.pad_sids[i])].update(
+                        extra.tolist())
+                if ws.rec_np[i] and bound > ws.rad[i]:
+                    ws.rad[i] = bound
         fill = np.logical_or(np.logical_or(ws.reuse, ws.l2hit),
                              ws.backend_ok)
         if fill.any():
+            self.insert_traffic_docs += int((ws.new_ids[fill] >= 0).sum())
             # insert + answer query FUSED: one kernel launch closes the
             # wave (L1-only: launch 3 of 3, probe -> miss-search ->
             # insert+query; tiered: launch 4 of 4, after the L2 probe)
@@ -445,6 +490,11 @@ class BatchedEngine:
             row_scores = np.asarray(scores[i])
             real = row_ids >= 0
             row_tier = str(ws.tier[i])
+            pre = self._prefetched[int(s)]
+            n_pre = (sum(1 for d in row_ids[real].tolist() if d in pre)
+                     if pre else 0)
+            if n_pre and row_tier != "backend":
+                self.prefetch_warm_hits += n_pre
             spans = TurnSpans(
                 queue_wait_s=max(ws.t_start - float(ws.admitted_at[i]), 0.0),
                 probe_s=ws.probe_s, backend_s=ws.backend_s,
@@ -455,7 +505,8 @@ class BatchedEngine:
                               degraded=bool(ws.degraded
                                             and row_tier == "backend"),
                               latency_s=spans.total_s, tier=row_tier,
-                              queue_wait_s=spans.queue_wait_s, spans=spans)
+                              queue_wait_s=spans.queue_wait_s, spans=spans,
+                              prefetch_hits=n_pre)
             self.telemetry.record_turn(spans)
             self.turns[int(s)].append(turn)
             out.append(turn)
@@ -498,6 +549,17 @@ class BatchedEngine:
             for t in (turns[1:] if skip_first else turns):
                 counts[t.tier] += 1
         return counts
+
+    def prefetch_stats(self) -> dict:
+        """Cluster-prefetch accounting: ``issued`` docs inserted via
+        prefetch, ``warm_hits`` prefetched docs that later appeared in a
+        cache-served result, ``insert_traffic_docs`` total docs offered to
+        the L1 insert launch (the cache-traffic axis of the Pareto sweep),
+        and the configured ``width``."""
+        return {"issued": self.prefetch_issued,
+                "warm_hits": self.prefetch_warm_hits,
+                "insert_traffic_docs": self.insert_traffic_docs,
+                "width": self.prefetch_width}
 
 
 class SessionManager:

@@ -1,0 +1,392 @@
+"""Topical-locality clustering subsystem tests (repro.core.cluster):
+tier-identical k-means assignment across storage dtypes, ClusterIndex
+invariants + persistence, prefetch claim soundness, the prefetch wave's
+launch-count / zero-copy contracts, cluster-aware L2 admission, and the
+end-to-end hit-rate win the serve_bench Pareto sweep gates."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache_ops import insert_query_batched, probe_batched
+from repro.core.cluster import (ClusterIndex, assign_clusters,
+                                build_cluster_index)
+from repro.core.metric_index import MetricIndex
+from repro.core.shared import SharedTier
+from repro.data.conversations import WorldConfig, make_world
+from repro.kernels import jaxpr_util
+from repro.serve.router import ShardAnswer, ShardedRouter
+from repro.serve.session import BatchedEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.kernels  # clustering rides the kNN scan contract
+
+
+def _unit(rng, shape):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def _topical_world(**overrides):
+    """The prefetch win regime: few dense topics in a tiny subspace, small
+    query noise, misses driven by subtopic jumps — and ``norm_jitter=0`` so
+    the Eq. 1 appended coordinate doesn't inflate query-centroid distances
+    (the triangle-inequality widening needs d_w > r_a + delta)."""
+    cfg = dict(n_topics=4, docs_per_topic=300, n_background=600, dim=48,
+               subspace_dim=4, turns=6, n_conversations=6, doc_sigma=0.8,
+               query_sigma=0.05, drift_sigma=0.08, subtopic_prob=0.4,
+               subtopic_sigma=0.45, norm_jitter=0.0, seed=11)
+    cfg.update(overrides)
+    return make_world(WorldConfig(**cfg))
+
+
+# -------------------------------------------------- assignment equivalence
+@pytest.mark.parametrize("dtype", ["fp32", "bf16", "int8"])
+def test_assignment_ref_interpret_identical(dtype):
+    """The k-means assignment step is the scan_topk contract at k=1: ref
+    and interpret tiers pick the SAME centroid for every document of the
+    dequantized corpus, at every storage dtype."""
+    rng = np.random.default_rng(3)
+    docs = _unit(rng, (257, 32))          # odd count: exercises chunk tails
+    index = MetricIndex(jnp.asarray(docs), dtype=dtype)
+    # the clustering space is the Eq. 1 TRANSFORMED corpus view (dim + 1);
+    # seed centroids from corpus rows so dimensions line up by construction
+    corpus = np.asarray(index.dequantized())[:index.n_docs]
+    cents = corpus[rng.choice(index.n_docs, size=7, replace=False)]
+    a_ref, s_ref = assign_clusters(corpus, cents, backend="ref",
+                                   query_chunk=64)
+    a_int, s_int = assign_clusters(corpus, cents, backend="interpret",
+                                   query_chunk=64)
+    np.testing.assert_array_equal(a_ref, a_int)
+    np.testing.assert_allclose(s_ref, s_int, atol=1e-5)
+    assert a_ref.dtype == np.int32 and a_ref.shape == (257,)
+    # winning score really is the max inner product against the centroids
+    np.testing.assert_allclose(s_ref, (corpus @ cents.T).max(axis=1),
+                               atol=1e-5)
+
+
+def test_build_recovers_planted_topics():
+    """On a world of well-separated planted topics, over-clustering at
+    K = 2 x n_topics yields topic-PURE clusters (splitting a topic is
+    fine, merging two is not) and the ClusterIndex invariants hold:
+    members partition the corpus, neighbor distances ascend, centrality
+    ordering puts closer members first."""
+    world = _topical_world(n_background=0, docs_per_topic=200)
+    index = MetricIndex(jnp.asarray(world.doc_emb, jnp.float32))
+    ci = build_cluster_index(index, 8, iters=10, seed=0, max_width=64,
+                             backend="ref")
+    assert ci.n_clusters == 8 and ci.n_docs == index.n_docs
+    # topic purity: doc i belongs to topic i // docs_per_topic
+    topic = np.arange(ci.n_docs) // 200
+    for c in range(8):
+        mem = ci.members(c)
+        if len(mem):
+            assert np.unique(topic[mem]).size == 1
+    # members partition the corpus exactly once
+    assert ci.sizes.sum() == ci.n_docs
+    np.testing.assert_array_equal(np.sort(ci.member_ids),
+                                  np.arange(ci.n_docs))
+    # member lists are ordered most-central first
+    docs = np.asarray(index.dequantized())[:index.n_docs]
+    for c in range(8):
+        scores = docs[ci.members(c)] @ ci.centroids[c]
+        assert (np.diff(scores) <= 1e-5).all()
+    # neighbor tables ascend in distance
+    assert (np.diff(ci.near_d, axis=1) >= -1e-5).all()
+    # cluster_of maps corpus ids to assignments, sentinels to -1
+    np.testing.assert_array_equal(ci.cluster_of(np.arange(ci.n_docs)),
+                                  ci.assign)
+    np.testing.assert_array_equal(
+        ci.cluster_of(np.array([-1, ci.n_docs, ci.n_docs + 7])),
+        np.array([-1, -1, -1]))
+
+
+def test_prefetch_claim_bound_is_sound():
+    """The triangle-inequality widening: after prefetching width-w
+    neighbors of the query's centroid, EVERY corpus document within the
+    returned claim bound of the query is in (answer + extras)."""
+    world = _topical_world()
+    index = MetricIndex(jnp.asarray(world.doc_emb, jnp.float32))
+    ci = build_cluster_index(index, 8, iters=10, seed=0, max_width=400,
+                             backend="ref")
+    docs = np.asarray(index.dequantized())[:index.n_docs]
+    rng = np.random.default_rng(5)
+    checked = 0
+    for conv in world.conversations:
+        psi = np.asarray(index.transform_queries(
+            jnp.asarray(conv.queries[:1], jnp.float32)))[0]
+        answer = rng.choice(index.n_docs, size=20, replace=False)
+        extra, bound = ci.prefetch(psi, answer, 300)
+        assert extra.size <= 300
+        assert not np.isin(extra, answer).any()
+        if bound <= 0.0:
+            continue
+        cached = set(answer.tolist()) | set(extra.tolist())
+        dist = np.sqrt(np.maximum(2.0 - 2.0 * (docs @ psi), 0.0))
+        inside = np.nonzero(dist <= bound)[0]
+        assert all(int(d) in cached for d in inside)
+        checked += 1
+    assert checked > 0                 # the regime actually widened claims
+    # width 0 and a too-large width degrade gracefully
+    empty, b0 = ci.prefetch(psi, answer, 0)
+    assert empty.size == 0 and b0 == 0.0
+    wide, _ = ci.prefetch(psi, answer, 10 ** 6)
+    assert wide.size <= ci.max_width
+
+
+def test_save_load_and_metric_index_memoization(tmp_path):
+    """ClusterIndex round-trips through .npz; MetricIndex.cluster memoizes
+    per parameters and reloads from ``path`` instead of rebuilding."""
+    rng = np.random.default_rng(9)
+    index = MetricIndex(jnp.asarray(_unit(rng, (120, 16))))
+    ci = index.cluster(5, iters=4, seed=1, max_width=12, backend="ref")
+    assert index.cluster(5, iters=4, seed=1, max_width=12,
+                         backend="ref") is ci      # memoized
+    path = tmp_path / "clusters.npz"
+    ci.save(path)
+    back = ClusterIndex.load(path)
+    np.testing.assert_array_equal(back.assign, ci.assign)
+    np.testing.assert_allclose(back.centroids, ci.centroids)
+    np.testing.assert_array_equal(back.near_ids, ci.near_ids)
+    assert back.n_iters == ci.n_iters
+    assert back.memory_bytes() == ci.memory_bytes()
+    # a fresh MetricIndex loads the artifact rather than re-clustering
+    other = MetricIndex(jnp.asarray(_unit(rng, (120, 16))))
+    loaded = other.cluster(5, iters=4, seed=1, max_width=12, backend="ref",
+                           path=path)
+    np.testing.assert_array_equal(loaded.assign, ci.assign)
+
+
+# ------------------------------------------------ cluster-aware admission
+def _toy_cluster(assign):
+    """Hand-built ClusterIndex over ``assign`` (neighbor tables unused by
+    admission)."""
+    assign = np.asarray(assign, np.int32)
+    k = int(assign.max()) + 1
+    order = np.argsort(assign, kind="stable")
+    offsets = np.zeros(k + 1, np.int64)
+    np.cumsum(np.bincount(assign, minlength=k), out=offsets[1:])
+    dim = 8
+    cents = np.eye(k, dim, dtype=np.float32)
+    return ClusterIndex(cents, assign, offsets, order.astype(np.int64),
+                        np.full((k, 2), -1, np.int64),
+                        np.zeros((k, 2), np.float32))
+
+
+def test_cluster_admission_promotes_topical_siblings():
+    """Two sessions retrieving DIFFERENT documents of the same cluster
+    promote (the cluster is popular); per-doc admission on the same offers
+    does not (no single document saw two sessions)."""
+    ci = _toy_cluster([0, 0, 0, 0, 1, 1, 1, 1])
+    rng = np.random.default_rng(21)
+    emb = _unit(rng, (8, 16))
+
+    def offers(tier):
+        tier.tick()
+        a = tier.offer(("a", 1), _unit(rng, (16,)), 0.5,
+                       emb[[0, 1]], np.array([0, 1]))
+        b = tier.offer(("b", 1), _unit(rng, (16,)), 0.5,
+                       emb[[2, 3]], np.array([2, 3]))
+        return a, b
+
+    clustered = SharedTier(dim=16, n_shards=2, capacity=64, max_queries=5,
+                           backend="interpret", cluster=ci)
+    a, b = offers(clustered)
+    assert not a and b                  # second distinct session on cluster 0
+    assert clustered.flush_admissions() == 1
+    assert clustered.contains(np.array([2, 3])).all()
+
+    per_doc = SharedTier(dim=16, n_shards=2, capacity=64, max_queries=5,
+                         backend="interpret")
+    assert offers(per_doc) == (False, False)     # docs disjoint: no promotion
+    assert per_doc.flush_admissions() == 0
+
+
+def test_cluster_admission_same_session_never_promotes():
+    """Repeat offers from ONE session leave the cluster unpromoted, and
+    out-of-corpus ids fall back to per-doc keys without colliding."""
+    ci = _toy_cluster([0, 0, 0, 0])
+    rng = np.random.default_rng(22)
+    emb = _unit(rng, (2, 16))
+    tier = SharedTier(dim=16, n_shards=2, capacity=64, max_queries=5,
+                      backend="interpret", cluster=ci)
+    tier.tick()
+    for ids in ([0, 1], [2, 3], [0, 3]):
+        assert not tier.offer(("a", 1), _unit(rng, (16,)), 0.5,
+                              emb, np.array(ids))
+    assert tier.flush_admissions() == 0
+    # ids beyond the clustered corpus key per-doc (negative fallback keys)
+    assert not tier.offer(("a", 1), _unit(rng, (16,)), 0.5,
+                          emb, np.array([100, 101]))
+    assert tier.offer(("b", 1), _unit(rng, (16,)), 0.5,
+                      emb, np.array([100, 101]))
+
+
+# ------------------------------------------- serving integration + launches
+def _mini_engine(rng, *, width, shared=False, backend="interpret"):
+    """Tiny corpus + cluster + engine for the wave-contract tests; serving
+    runs in the Eq. 1 TRANSFORMED space (dim + 1), matching the cluster."""
+    n, d = 300, 48
+    index = MetricIndex(jnp.asarray(_unit(rng, (n, d))))
+    docs = np.asarray(index.dequantized())[:n]
+    dim = docs.shape[1]
+    ci = build_cluster_index(index, 6, iters=4, seed=0, max_width=64,
+                             backend="ref")
+    # a device shard on the SAME dispatch tier, so the wave's miss-search
+    # launch is counted alongside the cache launches
+    from repro.dist.retrieval import DeviceShard
+    shard = DeviceShard(jnp.asarray(docs), jnp.arange(n, dtype=jnp.int32),
+                        backend=backend)
+    router = ShardedRouter([shard], deadline_s=120.0)
+    # admission_sessions above the wave size: cluster-aware admission
+    # would otherwise promote on the FIRST wave (three sessions can share
+    # one topical cluster), adding the flush launch to the counted wave
+    tier = SharedTier(dim=dim, n_shards=2, capacity=128, max_queries=8,
+                      admission_sessions=4, backend=backend,
+                      cluster=ci) if shared else None
+    eng = BatchedEngine(router, docs, dim=dim, n_sessions=4, k=5, k_c=17,
+                        capacity=256, backend=backend, shared=tier,
+                        cluster=ci, prefetch_width=width)
+    return eng, index
+
+
+def test_prefetch_width_validated_against_tables():
+    rng = np.random.default_rng(30)
+    with pytest.raises(ValueError, match="max_width"):
+        _mini_engine(rng, width=65)
+
+
+@pytest.mark.slow
+def test_prefetch_miss_wave_is_three_launches(monkeypatch):
+    """Prefetch folding preserves the L1-only wave contract: a miss wave
+    with cluster neighbors appended is STILL exactly three Pallas launches
+    (probe -> miss-search -> fused insert+query) — the expansion rides the
+    same fused insert, never a launch of its own."""
+    import jax.experimental.pallas as plmod
+
+    rng = np.random.default_rng(31)
+
+    calls = {"n": 0}
+    orig = plmod.pallas_call
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(plmod, "pallas_call", counting)
+    eng, index = _mini_engine(rng, width=32, shared=False)
+    qs = np.asarray(index.transform_queries(
+        jnp.asarray(_unit(rng, (3, 48)))))
+    jax.clear_caches()
+    calls["n"] = 0
+    turns = eng.answer_batch([0, 1, 2], [jnp.asarray(q) for q in qs])
+    assert all(t.tier == "backend" for t in turns)
+    assert eng.prefetch_issued > 0
+    assert calls["n"] == 3, f"prefetch miss wave traced {calls['n']} launches"
+
+
+@pytest.mark.slow
+def test_prefetch_tiered_miss_wave_is_four_launches(monkeypatch):
+    """With the shared tier attached the prefetch-expanded full-miss wave
+    keeps the tiered contract: four launches (L1 probe -> L2 probe ->
+    miss-search -> fused insert+query)."""
+    import jax.experimental.pallas as plmod
+
+    rng = np.random.default_rng(32)
+
+    calls = {"n": 0}
+    orig = plmod.pallas_call
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(plmod, "pallas_call", counting)
+    eng, index = _mini_engine(rng, width=32, shared=True)
+    qs = np.asarray(index.transform_queries(
+        jnp.asarray(_unit(rng, (3, 48)))))
+    jax.clear_caches()
+    calls["n"] = 0
+    turns = eng.answer_batch([0, 1, 2], [jnp.asarray(q) for q in qs])
+    assert all(t.tier == "backend" for t in turns)
+    assert calls["n"] == 4, f"tiered prefetch wave traced {calls['n']} launches"
+
+
+def test_widened_insert_trace_is_zero_copy():
+    """The (k_c + prefetch_width)-column insert traces with ZERO pad /
+    slice / copy equations at the stacked payload size and one Pallas
+    launch — widening the answer does not reintroduce payload copies."""
+    from repro.core.cache import CacheConfig, init_batched_cache
+
+    k_c, width, dim, s = 17, 32, 48, 3
+    cfg = CacheConfig(capacity=256, dim=dim)
+    state = init_batched_cache(cfg, s)
+    psi = jnp.zeros((s, dim), jnp.float32)
+    ids = jnp.zeros((s, k_c + width), jnp.int32)
+    emb = jnp.zeros((s, k_c + width, dim), jnp.float32)
+    radius = jnp.zeros((s,), jnp.float32)
+    payload = s * cfg.phys_capacity * cfg.phys_dim
+    jx = jax.make_jaxpr(
+        lambda st, p, r, e, i: insert_query_batched(
+            st, cfg, p, r, e, i, k=5, backend="interpret"))(
+        state, psi, radius, emb, ids)
+    assert jaxpr_util.payload_copy_eqns(jx, payload) == []
+    assert jaxpr_util.pallas_call_count(jx) == 1
+    # the widened probe shape stays single-launch zero-copy too
+    jx = jax.make_jaxpr(
+        lambda st, p: probe_batched(st, p, cfg.epsilon, backend="interpret",
+                                    max_queries=cfg.max_queries))(state, psi)
+    assert jaxpr_util.payload_copy_eqns(jx, payload) == []
+    assert jaxpr_util.pallas_call_count(jx) == 1
+
+
+@pytest.mark.slow
+def test_prefetch_lifts_hit_rate_in_topical_regime():
+    """End-to-end acceptance: replaying the topical world with prefetch
+    beats the same engine without it — strictly higher combined hit rate,
+    nonzero warm hits attributed on turns, more insert traffic (the Pareto
+    trade the bench sweep charts)."""
+    world = _topical_world()
+    index = MetricIndex(jnp.asarray(world.doc_emb, jnp.float32))
+    ci = index.cluster(8, iters=10, seed=0, max_width=400, backend="ref")
+    n_sessions = len(world.conversations)
+    streams = [np.asarray(index.transform_queries(
+        jnp.asarray(c.queries, jnp.float32))) for c in world.conversations]
+    docs = np.asarray(index.dequantized())
+    ids = np.arange(index.n_docs)
+
+    def run(width):
+        def shard(queries, k):
+            scores = queries @ docs[:index.n_docs].T
+            top = np.argsort(-scores, axis=1)[:, :k]
+            return ShardAnswer(np.take_along_axis(scores, top, axis=1),
+                               ids[top])
+        router = ShardedRouter([shard], deadline_s=30.0)
+        eng = BatchedEngine(router, docs, dim=index.dim,
+                            n_sessions=n_sessions, k=5, k_c=20,
+                            capacity=4096, backend="ref",
+                            cluster=ci if width else None,
+                            prefetch_width=width)
+        sids = list(range(n_sessions))
+        for s in sids:
+            eng.start_session(s)
+        pref_turns = 0
+        for t in range(streams[0].shape[0]):
+            for turn in eng.answer_batch(sids,
+                                         [streams[s][t] for s in sids]):
+                pref_turns += turn.prefetch_hits > 0
+        return eng, pref_turns
+
+    base, _ = run(0)
+    pref, pref_turns = run(400)
+    assert base.prefetch_issued == 0 and base.prefetch_warm_hits == 0
+    assert pref.prefetch_issued > 0 and pref.prefetch_warm_hits > 0
+    assert pref_turns > 0                       # per-turn attribution flows
+    assert pref.hit_rate() > base.hit_rate()    # the gated headline
+    # the price: prefetch pushes more docs through the insert launches
+    assert pref.insert_traffic_docs > base.insert_traffic_docs
+    stats = pref.prefetch_stats()
+    assert stats["width"] == 400
+    assert stats["warm_hits"] == pref.prefetch_warm_hits

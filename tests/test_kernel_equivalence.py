@@ -702,6 +702,13 @@ def test_batched_engine_wave_is_three_launches_and_turn_identical(
 
     monkeypatch.setattr(plmod, "pallas_call", counting)
 
+    # drop any compiled executables earlier tests left behind: the probe's
+    # cache key is the PHYSICAL state shape (logical extents ride in as
+    # mask arrays), so another test's engine with coincident phys extents
+    # would otherwise satisfy the probe without tracing (= without being
+    # counted), like the other launch guards do
+    jax.clear_caches()
+
     base = _unit(rng, (s, d))
     for turn in range(3):
         queries = base + 0.02 * turn * _unit(rng, (s, d))
@@ -710,8 +717,9 @@ def test_batched_engine_wave_is_three_launches_and_turn_identical(
         calls["n"] = 0
         turns_k = eng_k.answer_batch(list(range(s)), qs)
         if turn == 0:
-            # compulsory-miss wave, fresh shapes: every kernel-tier cache
-            # op traces exactly one pallas_call — 3 launches total
+            # compulsory-miss wave, freshly cleared caches: every
+            # kernel-tier cache op traces exactly one pallas_call —
+            # 3 launches total
             assert calls["n"] == 3, f"wave traced {calls['n']} launches"
         turns_r = eng_r.answer_batch(list(range(s)), qs)
         for tk, tr in zip(turns_k, turns_r):

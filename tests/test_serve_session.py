@@ -1,4 +1,4 @@
-"""Batched serving tests: MicroBatcher plumbing, short-merge padding,
+"""Batched serving tests: fn-mode scheduler waves, short-merge padding,
 BatchedEngine equivalence to the sequential engine, SessionManager waves."""
 
 import time
@@ -11,7 +11,8 @@ import pytest
 from repro.core.metric_index import MetricIndex
 from repro.data.conversations import WorldConfig, make_world
 from repro.serve.engine import ConversationalEngine
-from repro.serve.router import MicroBatcher, ShardAnswer, ShardedRouter
+from repro.serve.router import ShardAnswer, ShardedRouter
+from repro.serve.scheduler import ContinuousScheduler
 from repro.serve.session import BatchedEngine, SessionManager
 
 jax.config.update("jax_platform_name", "cpu")
@@ -58,65 +59,71 @@ def _streams(world, index, n_sessions):
         for s in range(n_sessions)]
 
 
-# ------------------------------------------------------------ MicroBatcher
-def test_microbatcher_full_batch_flushes_inline():
+# -------------------------------------------------- fn-mode scheduler waves
+def _fn_sched(fn, max_wave, window_s):
+    """Fixed-window fn-mode scheduler — the contract the removed
+    MicroBatcher shim delegated to."""
+    return ContinuousScheduler(fn=fn, max_wave=max_wave, window_s=window_s,
+                               adaptive=False, overlap=False)
+
+
+def test_fn_mode_full_wave_flushes_inline():
     calls = []
 
     def fn(items):
         calls.append(list(items))
         return [x * 10 for x in items]
 
-    mb = MicroBatcher(fn, max_batch=3, window_s=60.0)   # window can't fire
-    futs = [mb.submit(i) for i in range(3)]
+    sched = _fn_sched(fn, max_wave=3, window_s=60.0)   # window can't fire
+    futs = [sched.submit(i) for i in range(3)]
     assert [f.result(timeout=1) for f in futs] == [0, 10, 20]
     assert calls == [[0, 1, 2]]
 
 
-def test_microbatcher_window_flushes_stragglers():
-    """A lone request below max_batch must still complete within ~window_s —
-    the old MicroBatcher never honored window_s and stranded it forever."""
-    mb = MicroBatcher(lambda items: [x + 1 for x in items],
-                      max_batch=64, window_s=0.05)
+def test_fn_mode_window_flushes_stragglers():
+    """A lone request below max_wave must still complete within ~window_s."""
+    sched = _fn_sched(lambda items: [x + 1 for x in items],
+                      max_wave=64, window_s=0.05)
     t0 = time.monotonic()
-    fut = mb.submit(41)
+    fut = sched.submit(41)
     assert fut.result(timeout=2) == 42
     assert time.monotonic() - t0 < 1.0
 
 
-def test_microbatcher_routes_results_to_submitters():
-    mb = MicroBatcher(lambda items: [x * x for x in items],
-                      max_batch=4, window_s=0.02)
-    futs = {x: mb.submit(x) for x in (3, 5, 7)}          # below max_batch
+def test_fn_mode_routes_results_to_submitters():
+    sched = _fn_sched(lambda items: [x * x for x in items],
+                      max_wave=4, window_s=0.02)
+    futs = {x: sched.submit(x) for x in (3, 5, 7)}       # below max_wave
     for x, fut in futs.items():
         assert fut.result(timeout=2) == x * x
 
 
-def test_microbatcher_exception_fails_all_waiters():
+def test_fn_mode_exception_fails_all_waiters():
     def boom(items):
         raise RuntimeError("backend exploded")
 
-    mb = MicroBatcher(boom, max_batch=2, window_s=60.0)
-    f1, f2 = mb.submit(1), mb.submit(2)
+    sched = _fn_sched(boom, max_wave=2, window_s=60.0)
+    f1, f2 = sched.submit(1), sched.submit(2)
     for f in (f1, f2):
         with pytest.raises(RuntimeError, match="exploded"):
             f.result(timeout=1)
 
 
-def test_microbatcher_exception_result_fails_only_its_waiter():
+def test_fn_mode_exception_result_fails_only_its_waiter():
     """A per-item exception *result* routes to its own submitter; the rest
-    of the batch still succeeds (per-session back-end failures)."""
+    of the wave still succeeds (per-session back-end failures)."""
     def fn(items):
         return [ValueError(f"bad {x}") if x < 0 else x * 2 for x in items]
 
-    mb = MicroBatcher(fn, max_batch=3, window_s=60.0)
-    f1, f2, f3 = mb.submit(1), mb.submit(-5), mb.submit(3)
+    sched = _fn_sched(fn, max_wave=3, window_s=60.0)
+    f1, f2, f3 = sched.submit(1), sched.submit(-5), sched.submit(3)
     assert f1.result(timeout=1) == 2 and f3.result(timeout=1) == 6
     with pytest.raises(ValueError, match="bad -5"):
         f2.result(timeout=1)
 
 
-def test_microbatcher_serializes_batch_execution():
-    """Overlapping flushes (timer vs batch-full) must not run fn
+def test_fn_mode_serializes_wave_execution():
+    """Overlapping flushes (timer vs wave-full) must not run fn
     concurrently — a stateful fn (a BatchedEngine wave) is not re-entrant."""
     import threading
     active, overlaps = [0], [0]
@@ -131,45 +138,22 @@ def test_microbatcher_serializes_batch_execution():
             active[0] -= 1
         return items
 
-    mb = MicroBatcher(fn, max_batch=2, window_s=0.01)
-    futs = [mb.submit(i) for i in range(7)]      # mixes full + timer flushes
+    sched = _fn_sched(fn, max_wave=2, window_s=0.01)
+    futs = [sched.submit(i) for i in range(7)]   # mixes full + timer flushes
     for f in futs:
         f.result(timeout=5)
     assert overlaps[0] == 1
 
 
-def test_microbatcher_shim_pins_deprecation_and_old_signature():
-    """One-release compat shim: the old positional ``MicroBatcher(fn,
-    max_batch=, window_s=)`` constructor (and its router import path) must
-    keep working, warn once, and delegate to ContinuousScheduler."""
-    from repro.serve.scheduler import ContinuousScheduler
-    from repro.serve.scheduler import MicroBatcher as FromScheduler
-
-    with pytest.warns(DeprecationWarning, match="MicroBatcher is deprecated"):
-        mb = MicroBatcher(lambda items: list(items), max_batch=5,
-                          window_s=0.01)
-    assert MicroBatcher is FromScheduler          # router path re-exports
-    assert isinstance(mb, ContinuousScheduler)
-    assert mb.max_batch == 5 and mb.window_s == 0.01
-    assert mb.submit(7).result(timeout=2) == 7    # old contract still serves
-    mb.close()
-    with pytest.raises(RuntimeError, match="closed"):
-        mb.submit(1)
-
-
-def test_microbatcher_for_router_splits_rows(world, index):
-    router = ShardedRouter(make_shards(index, 3), deadline_s=10)
-    mb = MicroBatcher.for_router(router, k=8, max_batch=4, window_s=0.02)
-    rng = np.random.default_rng(0)
-    q = np.asarray(index.transform_queries(
-        jnp.asarray(rng.standard_normal((4, WORLD.dim)), jnp.float32)))
-    futs = [mb.submit(q[i]) for i in range(4)]           # full batch
-    exact = index.search(jnp.asarray(q), 8)
-    assert router.stats.calls == 1                        # one batched call
-    for i, fut in enumerate(futs):
-        ans, degraded = fut.result(timeout=2)
-        assert not degraded
-        np.testing.assert_array_equal(ans.ids[0], np.asarray(exact.ids[i]))
+def test_microbatcher_shim_is_gone():
+    """The one-release deprecation shim is removed: neither the scheduler
+    module nor the old router import path exports MicroBatcher anymore
+    (migration note in docs/architecture.md)."""
+    import repro.serve as serve_pkg
+    import repro.serve.router as router_mod
+    import repro.serve.scheduler as sched_mod
+    for mod in (sched_mod, router_mod, serve_pkg):
+        assert not hasattr(mod, "MicroBatcher")
 
 
 # ------------------------------------------------------- short-merge guard
@@ -357,7 +341,7 @@ def test_session_manager_splits_same_session_turns(world, index):
 
 def test_session_manager_shutdown_and_context_manager(world, index):
     """Satellite (ISSUE 7): leaving the with-block (or calling shutdown())
-    stops the MicroBatcher's window-timer thread — later submits raise
+    stops the scheduler's worker thread — later submits raise
     instead of stranding a Future — and shutdown is idempotent."""
     eng = BatchedEngine(ShardedRouter(make_shards(index, 2), deadline_s=30),
                         np.asarray(index.doc_emb), dim=index.dim,
