@@ -73,6 +73,17 @@ BACKEND_SAVED_KEEP_FRAC = 0.7
 # wall-clock keep-fraction the other latency columns use
 OPEN_LOOP_P99_IMPROVEMENT_FLOOR = 1.1
 OPEN_LOOP_LATENCY_KEEP_FRAC = 0.15
+# chaos gates (the committed fault schedule of repro.serve.faults.
+# chaos_plan replayed by serve_bench --chaos): the serving tier must stay
+# answerable through flapping / latency-spiking / corrupting shards, no
+# corrupt answer may ever reach a merged result, the flapping shard's
+# breaker must both open and re-close within the run, the validator must
+# actually reject the injected poison, and degraded answers must stay
+# mostly rank-faithful to a clean fleet (a 4-shard merge missing one
+# shard retains ~0.65 of the clean top-k; the floor tolerates one more
+# skipped shard, not a garbage merge)
+CHAOS_AVAILABILITY_FLOOR = 0.99
+CHAOS_OVERLAP_FLOOR = 0.45
 
 
 def _load(path: str) -> dict:
@@ -140,6 +151,58 @@ def check_serve(current: dict, baseline: dict, errors: list) -> None:
     _check_open_loop(cur.get("open_loop"), base.get("open_loop") or {},
                      errors)
     _check_prefetch(cur.get("prefetch"), base.get("prefetch") or {}, errors)
+    _check_chaos(cur.get("chaos"), base.get("chaos") or {}, errors)
+
+
+def _check_chaos(chaos, base_chaos: dict, errors: list) -> None:
+    """Fault-resilience gates over the committed chaos-schedule record."""
+    if not chaos:
+        errors.append("serve: chaos record missing from current smoke "
+                      "record — the fault-resilience gate lost its input")
+        return
+    for key in ("availability", "warm_availability", "corrupt_served",
+                "breaker_opens", "breaker_closes", "rejected_answers",
+                "degraded_turns", "degraded_overlap", "latency"):
+        if key not in chaos:
+            errors.append(f"serve: chaos column {key} missing")
+    avail = chaos.get("warm_availability", 0.0)
+    if avail < CHAOS_AVAILABILITY_FLOOR:
+        errors.append(
+            f"serve: warm-session availability under faults {avail:.4f} "
+            f"below the {CHAOS_AVAILABILITY_FLOOR} floor")
+    # the validator's whole job: poison NEVER reaches a merged answer
+    if chaos.get("corrupt_served", 1):
+        errors.append(
+            f"serve: {chaos['corrupt_served']} corrupt answers were merged "
+            "and served — answer validation failed open")
+    # ... and it must have actually been exercised (the schedule injects
+    # corrupt answers, so zero rejections means the injection or the
+    # validation went dead, not that all was well)
+    if not chaos.get("rejected_answers"):
+        errors.append("serve: chaos run rejected no answers — the corrupt "
+                      "shard or the validator is not firing")
+    if not chaos.get("breaker_opens"):
+        errors.append("serve: no circuit breaker opened under the flapping "
+                      "shard — the breaker is not firing")
+    if not chaos.get("breaker_closes"):
+        errors.append("serve: no circuit breaker re-closed — half-open "
+                      "recovery is not firing")
+    # degraded answers must stay mostly right, not confidently wrong
+    if not chaos.get("degraded_turns"):
+        errors.append("serve: chaos run produced no degraded turns — the "
+                      "degradation ladder is not being exercised")
+    ovl = chaos.get("degraded_overlap")
+    if ovl is not None:
+        floor = max(CHAOS_OVERLAP_FLOOR,
+                    (base_chaos.get("degraded_overlap") or 0.0)
+                    - HIT_RATE_TOL)
+        if ovl < floor:
+            errors.append(
+                f"serve: degraded-answer rank overlap {ovl:.3f} below "
+                f"floor {floor:.3f}")
+    if (chaos.get("latency") or {}).get("p99_ms") is None:
+        errors.append("serve: chaos latency.p99_ms missing — no tail "
+                      "measurement under faults")
 
 
 def _check_prefetch(pf, base_pf: dict, errors: list) -> None:
@@ -312,12 +375,23 @@ def main() -> int:
     ap.add_argument("--kernels-current",
                     default="/tmp/BENCH_kernels_smoke.json")
     ap.add_argument("--kernels-baseline", default="BENCH_retrieval.json")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="gate only the chaos (fault-resilience) record of "
+                         "the serve smoke — the fast CI chaos job")
     args = ap.parse_args()
 
     errors: list[str] = []
-    check_serve(_load(args.serve_current), _load(args.serve_baseline), errors)
-    check_kernels(_load(args.kernels_current), _load(args.kernels_baseline),
-                  errors)
+    if args.chaos_only:
+        current = _load(args.serve_current)
+        baseline = _load(args.serve_baseline)
+        cur = current.get("smoke", current)
+        base = baseline.get("smoke", baseline)
+        _check_chaos(cur.get("chaos"), base.get("chaos") or {}, errors)
+    else:
+        check_serve(_load(args.serve_current), _load(args.serve_baseline),
+                    errors)
+        check_kernels(_load(args.kernels_current),
+                      _load(args.kernels_baseline), errors)
     if errors:
         for e in errors:
             print(f"REGRESSION: {e}", file=sys.stderr)

@@ -28,6 +28,14 @@ wait, per serving tier) and the continuous-vs-windowed p99 improvement
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--open-loop]
 
+``--chaos`` replays the COMMITTED fault schedule (``repro.serve.faults.
+chaos_plan``: one flapping shard, one latency-spiking shard, one shard
+returning corrupt answers) against the full resilient serving stack and
+emits the ``chaos`` record ``check_regression.py`` gates: warm-session
+availability, zero corrupt answers merged, breaker open/re-close counts,
+degraded-answer rank overlap vs a clean fleet, and tail latency under
+faults.
+
 ``--smoke`` runs a seconds-scale configuration (CI exercises the batched
 path on every push); the default sweep covers 64-512 concurrent sessions.
 """
@@ -50,8 +58,10 @@ from repro.core.shared import SharedTier
 from repro.kernels import jaxpr_util
 from repro.data.conversations import WorldConfig, make_world
 from repro.serve.engine import ConversationalEngine
+from repro.serve.faults import chaos_plan
 from repro.serve.router import ShardAnswer, ShardedRouter
 from repro.serve.session import BatchedEngine, SessionManager
+from repro.serve.telemetry import ServeTelemetry
 
 
 def make_shards(index: MetricIndex, n_shards: int):
@@ -82,21 +92,23 @@ def _streams(world, index, n_sessions: int):
 
 def bench_sequential(index, streams, *, n_shards, k, k_c, capacity,
                      dtype=None):
-    router = ShardedRouter(make_shards(index, n_shards), deadline_s=30)
-    doc = np.asarray(index.dequantized())
-    engines = [ConversationalEngine(router, doc, dim=index.dim, k=k, k_c=k_c,
-                                    capacity=capacity, dtype=dtype)
-               for _ in streams]
-    for e in engines:
-        e.start_session()
-    turns = streams[0].shape[0]
-    t0 = time.perf_counter()
-    for t in range(turns):
-        for s, e in enumerate(engines):
-            e.answer(streams[s][t])
-    elapsed = time.perf_counter() - t0
-    hits = float(np.mean([e.hit_rate() for e in engines]))
-    return elapsed, len(streams) * turns, hits
+    with ShardedRouter(make_shards(index, n_shards),
+                       deadline_s=30) as router:
+        doc = np.asarray(index.dequantized())
+        engines = [ConversationalEngine(router, doc, dim=index.dim, k=k,
+                                        k_c=k_c, capacity=capacity,
+                                        dtype=dtype)
+                   for _ in streams]
+        for e in engines:
+            e.start_session()
+        turns = streams[0].shape[0]
+        t0 = time.perf_counter()
+        for t in range(turns):
+            for s, e in enumerate(engines):
+                e.answer(streams[s][t])
+        elapsed = time.perf_counter() - t0
+        hits = float(np.mean([e.hit_rate() for e in engines]))
+        return elapsed, len(streams) * turns, hits
 
 
 def _rank_overlap(ids_a, ids_b, k: int) -> float:
@@ -126,6 +138,20 @@ def bench_zipf(index, world, *, n_sessions, n_generations=3, alpha=1.1,
     retrieval (the quality gate for the memo's similarity floor).
     """
     router = ShardedRouter(make_shards(index, n_shards), deadline_s=30)
+    try:
+        return _bench_zipf_body(router, index, world,
+                                n_sessions=n_sessions,
+                                n_generations=n_generations, alpha=alpha,
+                                jitter=jitter, n_shards=n_shards, k=k,
+                                k_c=k_c, capacity=capacity, dtype=dtype,
+                                with_shared=with_shared, seed=seed)
+    finally:
+        router.close()
+
+
+def _bench_zipf_body(router, index, world, *, n_sessions, n_generations,
+                     alpha, jitter, n_shards, k, k_c, capacity, dtype,
+                     with_shared, seed):
     shared = SharedTier(dim=index.dim, n_shards=n_shards,
                         capacity=max(8 * k_c, 1024), memo_sim=0.995,
                         dtype=dtype) if with_shared else None
@@ -222,25 +248,28 @@ def bench_prefetch(*, widths=(0, 100, 200, 300, 400), n_clusters=8,
     sids = list(range(n_sessions))
     rows = []
     for width in widths:
-        router = ShardedRouter(make_shards(index, n_shards), deadline_s=30)
-        shared = SharedTier(dim=index.dim, n_shards=n_shards,
-                            capacity=max(8 * k_c, 1024), memo_sim=0.995,
-                            dtype=dtype, cluster=cluster if width else None)
-        engine = BatchedEngine(router, np.asarray(index.dequantized()),
-                               dim=index.dim, n_sessions=n_sessions, k=k,
-                               k_c=k_c, capacity=capacity, dtype=dtype,
-                               backend=backend, shared=shared,
-                               cluster=cluster if width else None,
-                               prefetch_width=width)
-        for s in sids:
-            engine.start_session(s)
-        counts = {"l1": 0, "l2": 0, "l2_reuse": 0, "backend": 0}
-        t0 = time.perf_counter()
-        for t in range(turns):
-            for turn in engine.answer_batch(sids,
-                                            [streams[s][t] for s in sids]):
-                counts[turn.tier] += 1
-        elapsed = time.perf_counter() - t0
+        with ShardedRouter(make_shards(index, n_shards),
+                           deadline_s=30) as router:
+            shared = SharedTier(
+                dim=index.dim, n_shards=n_shards,
+                capacity=max(8 * k_c, 1024), memo_sim=0.995,
+                dtype=dtype, cluster=cluster if width else None)
+            engine = BatchedEngine(router, np.asarray(index.dequantized()),
+                                   dim=index.dim, n_sessions=n_sessions,
+                                   k=k, k_c=k_c, capacity=capacity,
+                                   dtype=dtype, backend=backend,
+                                   shared=shared,
+                                   cluster=cluster if width else None,
+                                   prefetch_width=width)
+            for s in sids:
+                engine.start_session(s)
+            counts = {"l1": 0, "l2": 0, "l2_reuse": 0, "backend": 0}
+            t0 = time.perf_counter()
+            for t in range(turns):
+                for turn in engine.answer_batch(
+                        sids, [streams[s][t] for s in sids]):
+                    counts[turn.tier] += 1
+            elapsed = time.perf_counter() - t0
         total = sum(counts.values())
         pf = engine.prefetch_stats()
         rows.append({
@@ -273,29 +302,30 @@ def bench_prefetch(*, widths=(0, 100, 200, 300, 400), n_clusters=8,
 
 
 def bench_batched(index, streams, *, n_shards, k, k_c, capacity, dtype=None):
-    router = ShardedRouter(make_shards(index, n_shards), deadline_s=30)
-    engine = BatchedEngine(router, np.asarray(index.dequantized()),
-                           dim=index.dim,
-                           n_sessions=len(streams), k=k, k_c=k_c,
-                           capacity=capacity, dtype=dtype)
-    sids = list(range(len(streams)))
-    for s in sids:
-        engine.start_session(s)
-    turns = streams[0].shape[0]
-    # warm the jit caches outside the timed region (compile happens once per
-    # session-count; a server would reuse the compiled wave for its lifetime)
-    engine.answer_batch(sids, [streams[s][0] for s in sids])
-    for s in sids:
-        engine.start_session(s)
-    t0 = time.perf_counter()
-    wave_best = float("inf")
-    for t in range(turns):
-        t1 = time.perf_counter()
-        engine.answer_batch(sids, [streams[s][t] for s in sids])
-        wave_best = min(wave_best, time.perf_counter() - t1)
-    elapsed = time.perf_counter() - t0
-    hits = engine.hit_rate()   # aggregate across sessions (NaN-safe for
-    return elapsed, len(streams) * turns, hits, wave_best  # 1-turn sessions)
+    with ShardedRouter(make_shards(index, n_shards),
+                       deadline_s=30) as router:
+        engine = BatchedEngine(router, np.asarray(index.dequantized()),
+                               dim=index.dim,
+                               n_sessions=len(streams), k=k, k_c=k_c,
+                               capacity=capacity, dtype=dtype)
+        sids = list(range(len(streams)))
+        for s in sids:
+            engine.start_session(s)
+        turns = streams[0].shape[0]
+        # warm the jit caches outside the timed region (compile happens once
+        # per session-count; a server reuses the compiled wave for its life)
+        engine.answer_batch(sids, [streams[s][0] for s in sids])
+        for s in sids:
+            engine.start_session(s)
+        t0 = time.perf_counter()
+        wave_best = float("inf")
+        for t in range(turns):
+            t1 = time.perf_counter()
+            engine.answer_batch(sids, [streams[s][t] for s in sids])
+            wave_best = min(wave_best, time.perf_counter() - t1)
+        elapsed = time.perf_counter() - t0
+        hits = engine.hit_rate()   # aggregate across sessions (NaN-safe
+        return elapsed, len(streams) * turns, hits, wave_best  # 1-turn)
 
 
 def wave_traffic(*, n_sessions, dim, capacity, k_c, k, dtype=None):
@@ -403,31 +433,34 @@ def _open_loop_once(index, world, *, mode, n_sessions, n_arrivals,
     ptr = {key: 0 for key in range(n_sessions)}
     churns = 0
     futures = []
-    with SessionManager(engine, max_batch=n_sessions,
-                        **mgr_kwargs) as mgr:
-        for key in range(n_sessions):
-            mgr.open(key)
-        gaps = rng.exponential(1.0 / arrival_hz, size=n_arrivals)
-        sched = np.cumsum(gaps) + time.perf_counter()
-        for i in range(n_arrivals):
-            now = time.perf_counter()
-            if sched[i] > now:
-                time.sleep(sched[i] - now)
-            key = int(rng.integers(n_sessions))
-            if ptr[key] >= conv_len:
-                # churn: this conversation is over — drain + recycle the
-                # slot, open the key on a fresh conversation
-                mgr.close(key)
+    try:
+        with SessionManager(engine, max_batch=n_sessions,
+                            **mgr_kwargs) as mgr:
+            for key in range(n_sessions):
                 mgr.open(key)
-                streams[key] = stream_for(next_conv)
-                ptr[key] = 0
-                next_conv += 1
-                churns += 1
-            futures.append(mgr.submit(key, streams[key][ptr[key]]))
-            ptr[key] += 1
-        mgr.flush()
-        turns = [f.result(timeout=60) for f in futures]
-        summary = mgr.telemetry.summary()
+            gaps = rng.exponential(1.0 / arrival_hz, size=n_arrivals)
+            sched = np.cumsum(gaps) + time.perf_counter()
+            for i in range(n_arrivals):
+                now = time.perf_counter()
+                if sched[i] > now:
+                    time.sleep(sched[i] - now)
+                key = int(rng.integers(n_sessions))
+                if ptr[key] >= conv_len:
+                    # churn: this conversation is over — drain + recycle
+                    # the slot, open the key on a fresh conversation
+                    mgr.close(key)
+                    mgr.open(key)
+                    streams[key] = stream_for(next_conv)
+                    ptr[key] = 0
+                    next_conv += 1
+                    churns += 1
+                futures.append(mgr.submit(key, streams[key][ptr[key]]))
+                ptr[key] += 1
+            mgr.flush()
+            turns = [f.result(timeout=60) for f in futures]
+            summary = mgr.telemetry.summary()
+    finally:
+        engine.router.close()
     totals = [t.latency_s for t in turns]
     waits = [t.queue_wait_s for t in turns]
     rec = {
@@ -533,6 +566,183 @@ def run_open_loop(*, smoke=False, dtype=None,
     merge_json(out_path,
                {"smoke": {"open_loop": rec}} if smoke
                else {"open_loop": rec})
+    return rec
+
+
+def _jittered_streams(world, index, n_sessions, rng, jitter):
+    """Per-session streams with fresh per-call query jitter, so replaying
+    the same conversations across chaos rounds yields near-duplicate (not
+    identical) queries — semantic reuse stays possible, trivial
+    memoization does not hide the back end from the fault schedule."""
+    convs = world.conversations
+    out = []
+    for s in range(n_sessions):
+        raw = np.asarray(convs[s % len(convs)].queries)
+        raw = raw + jitter * rng.standard_normal(raw.shape)
+        out.append(np.asarray(index.transform_queries(
+            jnp.asarray(raw, jnp.float32))))
+    return out
+
+
+def bench_chaos(index, world, *, n_sessions=8, rounds=10, n_shards=4,
+                k=10, k_c=50, capacity=None, dtype=None, deadline_s=2.0,
+                spike_s=0.02, jitter=0.1, seed=23) -> dict:
+    """Replay the committed chaos schedule against the resilient stack.
+
+    ``rounds`` cohorts of ``n_sessions`` sessions each replay their
+    conversations (with per-round query jitter) through a ``BatchedEngine``
+    whose router fleet is wrapped by ``repro.serve.faults.chaos_plan``:
+    shard 0 flaps through two outage windows, shard 1 spikes latency past
+    the hedge trigger, shard 2 returns corrupt answers rotating through
+    every corruption mode, shards 3+ stay healthy.  Breaker knobs are
+    sized so the flapping shard's breaker opens, half-open probes, and
+    re-closes *within the run* — the transition counts land in the gated
+    record.
+
+    The emitted record is the chaos gate's input: ``warm_availability``
+    (answered fraction of turns whose session already had a turn this
+    round; >= 0.99), ``corrupt_served`` (answers merged with
+    out-of-corpus ids or non-finite scores; must be 0 — the validator's
+    whole job), breaker open/close counts (>= 1 each), the rank overlap
+    of degraded answers vs a clean fleet's fresh retrieval, and tail
+    latency under faults.
+    """
+    capacity = capacity or 4 * k_c
+    rng = np.random.default_rng(seed)
+    sids = list(range(n_sessions))
+    plan = chaos_plan(n_shards, seed=seed, spike_s=spike_s)
+    telemetry = ServeTelemetry()
+    total = answered = warm_total = warm_answered = 0
+    corrupt = degraded_turns = 0
+    turn_times: list = []
+    degraded_samples: list = []
+    with ShardedRouter(plan.wrap(make_shards(index, n_shards)),
+                       deadline_s=deadline_s, hedge_after_s=spike_s / 2,
+                       n_docs=index.n_docs, max_retries=1,
+                       backoff_base_s=0.002, breaker_window=8,
+                       breaker_fail_rate=0.5, breaker_min_calls=2,
+                       breaker_cooldown_s=0.25,
+                       telemetry=telemetry) as router:
+        shared = SharedTier(dim=index.dim, n_shards=n_shards,
+                            capacity=max(8 * k_c, 1024), memo_sim=0.995,
+                            ttl_waves=3, dtype=dtype)
+        engine = BatchedEngine(router, np.asarray(index.dequantized()),
+                               dim=index.dim, n_sessions=n_sessions, k=k,
+                               k_c=k_c, capacity=capacity, dtype=dtype,
+                               shared=shared, telemetry=telemetry,
+                               validate_every=4)
+        t_run = time.perf_counter()
+        for _r in range(rounds):
+            streams = _jittered_streams(world, index, n_sessions, rng,
+                                        jitter)
+            for s in sids:
+                engine.start_session(s)
+            for t in range(streams[0].shape[0]):
+                qs = [streams[s][t] for s in sids]
+                t0 = time.perf_counter()
+                try:
+                    out = engine.answer_batch(sids, qs)
+                except TimeoutError:      # whole wave fenced, caches empty
+                    out = [None] * len(sids)
+                dt = time.perf_counter() - t0
+                if _r > 0:     # round 0 pays the XLA wave compiles; the
+                    # tail under FAULTS is the record, not compile noise
+                    turn_times.extend([dt] * len(sids))
+                for s, turn in zip(sids, out):
+                    total += 1
+                    if t > 0:
+                        warm_total += 1
+                    if turn is None or isinstance(turn, Exception):
+                        continue
+                    answered += 1
+                    if t > 0:
+                        warm_answered += 1
+                    row_ids = np.asarray(turn.ids)
+                    row_scores = np.asarray(turn.scores)
+                    if row_ids.size and (
+                            (row_ids < 0).any()
+                            or (row_ids >= index.n_docs).any()
+                            or not np.isfinite(row_scores).all()):
+                        corrupt += 1
+                    if turn.degraded:
+                        degraded_turns += 1
+                        if len(degraded_samples) < 64 and row_ids.size:
+                            degraded_samples.append((qs[s], row_ids))
+        elapsed = time.perf_counter() - t_run
+        stats = router.stats
+        health = router.shard_health()
+    # quality of degraded answers: top-k overlap vs a CLEAN fleet's fresh
+    # retrieval of the same query (missing-shard merges and stale serves
+    # should stay mostly right, not confidently wrong)
+    overlaps = []
+    with ShardedRouter(make_shards(index, n_shards),
+                       deadline_s=30) as clean:
+        for psi_q, served in degraded_samples:
+            ans, _ = clean.search(np.asarray(psi_q)[None], k_c)
+            fresh = ans.ids[0][ans.ids[0] >= 0]
+            overlaps.append(_rank_overlap(
+                served, fresh, min(k, int(served.size))))
+    rec = {
+        "sessions": n_sessions, "rounds": rounds, "n_shards": n_shards,
+        "turns_per_round": int(
+            world.conversations[0].queries.shape[0]),
+        "k": k, "k_c": k_c, "seed": seed, "elapsed_s": elapsed,
+        "total_turns": total, "answered_turns": answered,
+        "availability": answered / max(total, 1),
+        "warm_availability": warm_answered / max(warm_total, 1),
+        "corrupt_served": corrupt,
+        "degraded_turns": degraded_turns,
+        "n_degraded_sampled": len(overlaps),
+        "degraded_overlap": float(np.mean(overlaps)) if overlaps else None,
+        "latency": _percentiles_ms(turn_times),
+        "breaker_opens": stats.breaker_opens,
+        "breaker_closes": stats.breaker_closes,
+        "breaker_skips": stats.breaker_skips,
+        "rejected_answers": stats.rejected,
+        "retries": stats.retries, "hedges": stats.hedges,
+        "failures": stats.failures, "timeouts": stats.timeouts,
+        "searches": stats.calls, "shed": stats.shed,
+        "stale_served": shared.n_stale_served,
+        "quarantined": engine.quarantined,
+        "faults": telemetry.summary()["faults"],
+        "injected_calls": plan.calls(),
+        "injected_faults": [w.faults for w in plan.wrapped],
+        "shard_health": health,
+    }
+    print(f"chaos({n_sessions} sessions x {rounds} rounds): "
+          f"avail {rec['availability']:.4f} "
+          f"(warm {rec['warm_availability']:.4f}) | corrupt served "
+          f"{corrupt} | rejected {stats.rejected} | breaker "
+          f"open/close {stats.breaker_opens}/{stats.breaker_closes} | "
+          f"degraded {degraded_turns} overlap {rec['degraded_overlap']} | "
+          f"p99 {rec['latency']['p99_ms']:.1f}ms")
+    return rec
+
+
+def run_chaos(*, smoke=False, dtype=None,
+              out_path="BENCH_serve.json") -> dict:
+    """Entry point for ``--chaos``: builds the world, replays the committed
+    chaos schedule, and merge-writes the record under ``chaos`` (nested in
+    ``smoke`` for smoke runs — the schema check_regression gates)."""
+    if smoke:
+        cfg = WorldConfig(n_topics=4, docs_per_topic=200, n_background=1000,
+                          dim=64, subspace_dim=8, turns=3, n_conversations=8,
+                          doc_sigma=0.6, query_sigma=0.12, drift_sigma=0.16,
+                          subtopic_prob=0.35, subtopic_sigma=0.75, seed=7)
+        kwargs = dict(n_sessions=8, rounds=10, k_c=50)
+    else:
+        cfg = WorldConfig(n_topics=8, docs_per_topic=800, n_background=4000,
+                          dim=128, subspace_dim=8, turns=4,
+                          n_conversations=16, doc_sigma=0.6,
+                          query_sigma=0.12, drift_sigma=0.16,
+                          subtopic_prob=0.35, subtopic_sigma=0.75, seed=7)
+        kwargs = dict(n_sessions=16, rounds=16, k_c=100)
+    world = make_world(cfg)
+    index = MetricIndex(jnp.asarray(world.doc_emb, jnp.float32), dtype=dtype)
+    rec = bench_chaos(index, world, dtype=dtype, **kwargs)
+    rec["timestamp"] = time.time()
+    merge_json(out_path,
+               {"smoke": {"chaos": rec}} if smoke else {"chaos": rec})
     return rec
 
 
@@ -665,12 +875,19 @@ def main():
                     help="open-loop Poisson tail-latency A/B (continuous "
                          "scheduler vs fixed-window admission) instead of "
                          "the closed-loop throughput sweep")
+    ap.add_argument("--chaos", action="store_true",
+                    help="replay the committed fault schedule "
+                         "(repro.serve.faults.chaos_plan) and emit the "
+                         "availability / corruption / breaker record the "
+                         "chaos gate checks")
     ap.add_argument("--dtype", default=None,
                     help="corpus + cache storage format (fp32/bf16/int8; "
                          "default follows REPRO_CORPUS_DTYPE)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
-    if args.open_loop:
+    if args.chaos:
+        run_chaos(smoke=args.smoke, dtype=args.dtype, out_path=args.out)
+    elif args.open_loop:
         run_open_loop(smoke=args.smoke, dtype=args.dtype, out_path=args.out)
     elif args.smoke:
         cfg = WorldConfig(n_topics=4, docs_per_topic=200, n_background=1000,

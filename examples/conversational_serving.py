@@ -2,8 +2,11 @@
 CACHE, with injected stragglers/failures to demonstrate the resilience path —
 then the same sessions served *concurrently* through the session-batched
 engine (one batched probe / router round-trip / cache query per turn wave),
-and finally a topical-locality prefetch demo (offline k-means cluster index
-feeding same-cluster neighbors into each miss's fused insert launch).
+a topical-locality prefetch demo (offline k-means cluster index feeding
+same-cluster neighbors into each miss's fused insert launch), and finally a
+chaos replay: the committed deterministic fault schedule (flapping outage +
+latency spikes + corrupt answers) served through the circuit-breaker /
+validation / load-shed ladder.
 
     PYTHONPATH=src python examples/conversational_serving.py
 """
@@ -17,8 +20,10 @@ from repro.core.metric_index import MetricIndex
 from repro.core.shared import SharedTier
 from repro.data.conversations import WorldConfig, make_world
 from repro.serve.engine import ConversationalEngine
+from repro.serve.faults import chaos_plan
 from repro.serve.router import ShardAnswer, ShardedRouter
 from repro.serve.session import BatchedEngine, SessionManager
+from repro.serve.telemetry import ServeTelemetry
 
 
 def make_shards(index, n_shards, straggler=None):
@@ -49,28 +54,30 @@ def main():
         drift_sigma=0.16, subtopic_prob=0.35, subtopic_sigma=0.75, seed=1))
     index = MetricIndex(jnp.asarray(world.doc_emb, jnp.float32))
 
-    router = ShardedRouter(make_shards(index, 8, straggler=3),
-                           deadline_s=0.5, hedge_after_s=0.1)
-    engine = ConversationalEngine(router, np.asarray(index.dequantized()),
-                                  dim=index.dim, k=10, k_c=200)
+    with ShardedRouter(make_shards(index, 8, straggler=3),
+                       deadline_s=0.5, hedge_after_s=0.1) as router:
+        engine = ConversationalEngine(router, np.asarray(index.dequantized()),
+                                      dim=index.dim, k=10, k_c=200)
 
-    for ci, conv in enumerate(world.conversations):
-        engine.start_session()
-        qt = index.transform_queries(jnp.asarray(conv.queries, jnp.float32))
-        print(f"\n=== session {ci} (topic {conv.topic}) ===")
-        for t in range(conv.queries.shape[0]):
-            turn = engine.answer(np.asarray(qt[t]))
-            print(f"turn {t}: hit={turn.hit} degraded={turn.degraded} "
-                  f"latency={1e3 * turn.latency_s:7.1f} ms "
-                  f"top1={turn.ids[0]}")
-        print(f"session hit rate: {100 * engine.hit_rate():.0f}%  "
-              f"router: hedges={router.stats.hedges} "
-              f"degraded={router.stats.degraded}")
+        for ci, conv in enumerate(world.conversations):
+            engine.start_session()
+            qt = index.transform_queries(
+                jnp.asarray(conv.queries, jnp.float32))
+            print(f"\n=== session {ci} (topic {conv.topic}) ===")
+            for t in range(conv.queries.shape[0]):
+                turn = engine.answer(np.asarray(qt[t]))
+                print(f"turn {t}: hit={turn.hit} degraded={turn.degraded} "
+                      f"latency={1e3 * turn.latency_s:7.1f} ms "
+                      f"top1={turn.ids[0]}")
+            print(f"session hit rate: {100 * engine.hit_rate():.0f}%  "
+                  f"router: hedges={router.stats.hedges} "
+                  f"degraded={router.stats.degraded}")
 
     # ---- the same workload, batched across concurrent sessions ----------
     n_sessions = len(world.conversations)
+    batched_router = ShardedRouter(make_shards(index, 8), deadline_s=5.0)
     batched = BatchedEngine(
-        ShardedRouter(make_shards(index, 8), deadline_s=5.0),
+        batched_router,
         np.asarray(index.dequantized()), dim=index.dim,
         n_sessions=n_sessions, k=10, k_c=200)
     mgr = SessionManager(batched)        # continuous slot-scheduled admission
@@ -95,6 +102,7 @@ def main():
           f"(queue wait p99={1e3 * qw['p99']:.1f} ms) over "
           f"{tel['waves']} waves, mean wave={tel['wave_size']['mean']:.1f}")
     mgr.shutdown()
+    batched_router.close()
 
     # ---- topical-locality prefetch: k-means cluster index + warm fills --
     # A dedicated topical world (few dense topics in a low-dim subspace,
@@ -121,26 +129,31 @@ def main():
         shared = SharedTier(dim=tindex.dim, n_shards=2, capacity=1024,
                             memo_sim=0.995,
                             cluster=cluster if width else None)
-        eng = BatchedEngine(ShardedRouter(make_shards(tindex, 2),
-                                          deadline_s=30),
-                            np.asarray(tindex.dequantized()), dim=tindex.dim,
-                            n_sessions=n_sess, k=5, k_c=20, capacity=4096,
-                            backend="ref", shared=shared,
-                            cluster=cluster if width else None,
-                            prefetch_width=width)
-        for s in sids:
-            eng.start_session(s)
-        print(f"\n--- prefetch_width={width} ---")
-        for t in range(tstreams[0].shape[0]):
-            turns = eng.answer_batch(sids, [tstreams[s][t] for s in sids])
-            tiers = " ".join(f"{x.tier:>7s}" for x in turns)
-            warm = sum(x.prefetch_hits for x in turns)
-            print(f"turn {t}: [{tiers}]  prefetch warm hits this wave={warm}")
-        pf = eng.prefetch_stats()
-        print(f"hit rate {100 * eng.hit_rate():.0f}%  tiers={eng.tier_counts()}"
-              f"  prefetch: issued={pf['issued']} warm_hits={pf['warm_hits']}"
-              f" insert_traffic={pf['insert_traffic_docs']} docs")
-        return eng.hit_rate()
+        with ShardedRouter(make_shards(tindex, 2), deadline_s=30) as rt:
+            eng = BatchedEngine(rt,
+                                np.asarray(tindex.dequantized()),
+                                dim=tindex.dim,
+                                n_sessions=n_sess, k=5, k_c=20, capacity=4096,
+                                backend="ref", shared=shared,
+                                cluster=cluster if width else None,
+                                prefetch_width=width)
+            for s in sids:
+                eng.start_session(s)
+            print(f"\n--- prefetch_width={width} ---")
+            for t in range(tstreams[0].shape[0]):
+                turns = eng.answer_batch(sids,
+                                         [tstreams[s][t] for s in sids])
+                tiers = " ".join(f"{x.tier:>7s}" for x in turns)
+                warm = sum(x.prefetch_hits for x in turns)
+                print(f"turn {t}: [{tiers}]  "
+                      f"prefetch warm hits this wave={warm}")
+            pf = eng.prefetch_stats()
+            print(f"hit rate {100 * eng.hit_rate():.0f}%  "
+                  f"tiers={eng.tier_counts()}"
+                  f"  prefetch: issued={pf['issued']}"
+                  f" warm_hits={pf['warm_hits']}"
+                  f" insert_traffic={pf['insert_traffic_docs']} docs")
+            return eng.hit_rate()
 
     print(f"\n=== topical prefetch: {n_sess} sessions, "
           f"{cluster.n_clusters} clusters over {tindex.n_docs} docs ===")
@@ -148,6 +161,47 @@ def main():
     warm = replay(400)
     print(f"\nprefetch lifts combined hit rate "
           f"{100 * base:.0f}% -> {100 * warm:.0f}%")
+
+    # ---- chaos replay: the committed fault schedule vs the ladder -------
+    # chaos_plan is the exact schedule the CI chaos gate replays: shard 0
+    # flaps through two full outage windows, shard 1 injects latency
+    # spikes, shard 2 corrupts every other answer (NaN / inf / bad ids /
+    # transposed), shard 3 stays healthy.  The router's breakers fence the
+    # flapping shard, validation rejects every corrupt answer before the
+    # merge, and warm sessions ride their caches through the outage.
+    plan = chaos_plan(4, seed=23, spike_s=0.02)
+    tel = ServeTelemetry()
+    with ShardedRouter(plan.wrap(make_shards(tindex, 4)),
+                       deadline_s=2.0, hedge_after_s=0.01, max_retries=1,
+                       backoff_base_s=0.002, n_docs=tindex.n_docs,
+                       breaker_window=8, breaker_min_calls=2,
+                       breaker_cooldown_s=0.25, telemetry=tel) as rt:
+        eng = BatchedEngine(rt, np.asarray(tindex.dequantized()),
+                            dim=tindex.dim, n_sessions=n_sess, k=5, k_c=20,
+                            capacity=4096, backend="ref", telemetry=tel)
+        for s in sids:
+            eng.start_session(s)
+        print(f"\n=== chaos replay: {n_sess} sessions vs the committed "
+              f"fault schedule ===")
+        answered = total = 0
+        for t in range(tstreams[0].shape[0]):
+            try:
+                turns = eng.answer_batch(sids,
+                                         [tstreams[s][t] for s in sids])
+            except TimeoutError:
+                turns = [None] * n_sess
+            ok = sum(x is not None for x in turns)
+            answered, total = answered + ok, total + n_sess
+            states = "".join(h["state"][0] for h in rt.shard_health())
+            print(f"turn {t}: answered={ok}/{n_sess} breakers=[{states}] "
+                  f"degraded={sum(bool(x and x.degraded) for x in turns)}")
+        st = rt.stats
+        print(f"availability {100 * answered / total:.0f}%  "
+              f"rejected corrupt answers={st.rejected}  "
+              f"breaker opens={st.breaker_opens} closes={st.breaker_closes} "
+              f"skips={st.breaker_skips}  retries={st.retries} "
+              f"hedges={st.hedges}  "
+              f"injected faults={sum(w.faults for w in plan.wrapped)}")
 
 
 if __name__ == "__main__":

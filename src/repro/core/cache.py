@@ -43,6 +43,7 @@ from repro.core.cache_ops import (  # noqa: F401  (re-exported contract)
     query_batched,
     reset_sessions,
     store_rows,
+    validate_state,
 )
 from repro.core.cache_ops import (  # noqa: F401  (internal helpers kernels use)
     _apply_query_touch,
@@ -63,7 +64,8 @@ _insert_positions = insert_positions
 __all__ = ["CacheState", "CacheConfig", "ProbeResult", "init_cache",
            "probe", "query", "insert", "MetricCache", "init_batched_cache",
            "reset_sessions", "probe_batched", "query_batched",
-           "insert_batched", "insert_query_batched", "BatchedMetricCache"]
+           "insert_batched", "insert_query_batched", "BatchedMetricCache",
+           "validate_state"]
 
 
 class MetricCache:

@@ -70,6 +70,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import embedding as emb
 from repro.core import layout
@@ -80,7 +81,8 @@ __all__ = ["CacheState", "CacheConfig", "ProbeResult", "init_cache",
            "init_batched_cache", "reset_sessions", "probe", "query",
            "insert", "probe_batched", "query_batched", "insert_batched",
            "insert_query_batched", "pad_features", "store_rows",
-           "dedup_mask", "evicting_positions", "insert_positions"]
+           "dedup_mask", "evicting_positions", "insert_positions",
+           "validate_state"]
 
 
 class CacheState(NamedTuple):
@@ -581,3 +583,94 @@ def insert_query_batched(state: CacheState, cfg: CacheConfig, psi: jax.Array,
     new_state = _apply_query_touch(new_state, ids, slots)
     return ((vals, emb.distance_from_scores(vals), ids, slots),
             new_state, dropped)
+
+
+def validate_state(state: CacheState, cfg: CacheConfig, *,
+                   n_corpus: int | None = None):
+    """Integrity check of a (batched) ``CacheState`` against its layout
+    invariants — the fault-domain guard a corrupted session slot is
+    quarantined by (``BatchedEngine.quarantine_invalid``) instead of
+    poisoning its next wave.
+
+    Checked per row:
+
+    * **counters** — ``0 <= n_docs <= capacity``, ``n_queries >= 0``,
+      ``step >= 0``;
+    * **occupied prefix** — doc slots ``[0, n_docs)`` hold real ids
+      (``>= 0``, and ``< n_corpus`` when given); slots ``[n_docs,
+      capacity)`` hold the ``-1`` sentinel;
+    * **pad region** — padded doc columns keep their init sentinels
+      (id ``-1``, stamp ``0``, scale ``1``) and padded ring slots their
+      ``-inf`` radius (the zero-copy launch contract relies on these);
+    * **finite payloads** — no NaN/inf in stored embeddings (float
+      formats), scales finite and positive, claim radii never NaN or
+      ``+inf`` (``-inf`` is the empty/expired-claim sentinel).
+
+    Host-side (numpy) and read-only — call it off the wave hot path.
+    Returns ``(ok, problems)``: ``ok`` a bool array over rows (scalar
+    for an unbatched state), ``problems`` a list of human-readable
+    violation strings.
+    """
+    batched = np.ndim(np.asarray(state.n_docs)) > 0
+    leaves = {f: np.asarray(getattr(state, f)) for f in state._fields}
+    if not batched:
+        leaves = {f: v[None] for f, v in leaves.items()}
+    rows = leaves["n_docs"].shape[0]
+    cap, qmax = cfg.capacity, cfg.max_queries
+    ok = np.ones((rows,), bool)
+    problems: list[str] = []
+
+    def flag(mask, what):
+        bad = np.asarray(mask, bool)
+        if bad.any():
+            ok[bad] = False
+            problems.extend(f"row {int(r)}: {what}"
+                            for r in np.nonzero(bad)[0])
+
+    n_docs, n_queries, step = (leaves["n_docs"], leaves["n_queries"],
+                               leaves["step"])
+    flag((n_docs < 0) | (n_docs > cap), "n_docs outside [0, capacity]")
+    flag(n_queries < 0, "negative n_queries")
+    flag(step < 0, "negative step")
+    nd = np.clip(n_docs, 0, cap)[:, None]
+
+    ids = leaves["doc_ids"]
+    col = np.arange(ids.shape[1])[None, :]
+    occupied, vacant = col < nd, (col >= nd) & (col < cap)
+    flag((occupied & (ids < 0)).any(axis=1),
+         "sentinel id inside the occupied prefix")
+    if n_corpus is not None:
+        flag((occupied & (ids >= n_corpus)).any(axis=1),
+             "doc id beyond the corpus")
+    flag((vacant & (ids != -1)).any(axis=1),
+         "non-sentinel id in a vacant slot")
+    flag((ids[:, cap:] != -1).any(axis=1), "pad doc slot lost its -1 id")
+    flag((leaves["doc_stamp"][:, cap:] != 0).any(axis=1),
+         "pad doc slot carries an LRU stamp")
+    flag((leaves["doc_scale"][:, cap:] != 1.0).any(axis=1),
+         "pad doc slot scale != 1")
+
+    scale = leaves["doc_scale"][:, :cap].astype(np.float32)
+    flag((~np.isfinite(scale) | (scale <= 0)).any(axis=1),
+         "non-finite or non-positive doc scale")
+    qscale = leaves["q_scale"].astype(np.float32)
+    flag((~np.isfinite(qscale) | (qscale <= 0)).any(axis=1),
+         "non-finite or non-positive query scale")
+
+    rad = leaves["q_radius"].astype(np.float32)
+    flag((np.isnan(rad) | (rad == np.inf)).any(axis=1),
+         "NaN or +inf claim radius")
+    flag((rad[:, qmax:] != -np.inf).any(axis=1),
+         "pad ring slot lost its -inf radius sentinel")
+
+    if np.issubdtype(leaves["doc_emb"].dtype, np.integer):
+        pass            # int8 payloads cannot encode NaN/inf
+    else:
+        emb = leaves["doc_emb"][:, :cap].astype(np.float32)
+        flag(~np.isfinite(emb).all(axis=(1, 2)),
+             "non-finite cached document embedding")
+        qemb = leaves["q_emb"].astype(np.float32)
+        flag(~np.isfinite(qemb).all(axis=(1, 2)),
+             "non-finite claim query embedding")
+
+    return (ok if batched else ok[0]), problems

@@ -141,6 +141,7 @@ class SharedTier:
         self.n_promoted = 0          # answers admitted into the shard caches
         self.n_offered = 0
         self.n_memo_served = 0
+        self.n_stale_served = 0      # memo serves under allow_stale outage
         self.total_dropped = 0
 
     # ---------------------------------------------------------------- waves
@@ -312,7 +313,7 @@ class SharedTier:
         self._memo_wave[slot] = self.wave
         self._memo_n += 1
 
-    def memo_lookup(self, token, psi):
+    def memo_lookup(self, token, psi, *, allow_stale: bool = False):
         """Serve a near-duplicate query from another session's memoized
         result set, or None.
 
@@ -323,14 +324,22 @@ class SharedTier:
         Returns ``(ids, scores, claim_radius)`` where ``claim_radius`` is
         the triangle-corrected ``r_a - delta(psi_a, psi)`` (Eq. 3) the
         caller may soundly record as its own coverage claim.
+
+        ``allow_stale`` is the stale-while-error mode the engine uses
+        when the back end is fenced off: the TTL and other-session gates
+        are waived (any written entry qualifies — stale results beat no
+        results during an outage), but the similarity floor is NOT —
+        staleness is about time, never about serving the wrong topic.
+        Callers must treat a stale serve as degraded and never record
+        its claim.
         """
         if self._memo_psi is None:
             return None
         psi = np.asarray(psi, np.float32)
         fresh = (self._memo_wave != _NEVER
-                 if self.ttl_waves is None
+                 if (allow_stale or self.ttl_waves is None)
                  else self.wave - self._memo_wave <= self.ttl_waves)
-        other = np.array([t is not None and t != token
+        other = np.array([t is not None and (allow_stale or t != token)
                           for t in self._memo_token])
         valid = np.logical_and(fresh, other)
         if not valid.any():
@@ -341,6 +350,8 @@ class SharedTier:
         if sims[best] < self.memo_sim:
             return None
         self.n_memo_served += 1
+        if allow_stale:
+            self.n_stale_served += 1
         delta = float(np.sqrt(max(2.0 - 2.0 * float(sims[best]), 0.0)))
         claim = float(self._memo_radius[best]) - delta
         return (self._memo_ids[best].copy(),

@@ -1,13 +1,22 @@
-"""Serving tier: hedging shard router, single-session engine, the
-session-batched multi-session engine, and the continuous-batching
-scheduler + telemetry front door."""
+"""Serving tier: hedging + circuit-breaking shard router, single-session
+engine, the session-batched multi-session engine, the continuous-batching
+scheduler + telemetry front door, and the deterministic fault injector
+behind the chaos gate."""
 
 from repro.serve.engine import ConversationalEngine, EngineTurn
-from repro.serve.router import ShardAnswer, ShardedRouter
+from repro.serve.faults import (FaultError, FaultPlan, FaultSpec,
+                                FaultyShard, chaos_plan)
+from repro.serve.router import (AnswerValidationError, CircuitBreaker,
+                                RouterStats, ShardAnswer, ShardedRouter,
+                                validate_answer)
 from repro.serve.scheduler import ContinuousScheduler
 from repro.serve.session import BatchedEngine, SessionManager
 from repro.serve.telemetry import ServeTelemetry, TurnSpans
 
 __all__ = ["ConversationalEngine", "EngineTurn",
-           "ShardAnswer", "ShardedRouter", "BatchedEngine", "SessionManager",
+           "ShardAnswer", "ShardedRouter", "RouterStats", "CircuitBreaker",
+           "AnswerValidationError", "validate_answer",
+           "FaultError", "FaultPlan", "FaultSpec", "FaultyShard",
+           "chaos_plan",
+           "BatchedEngine", "SessionManager",
            "ContinuousScheduler", "ServeTelemetry", "TurnSpans"]

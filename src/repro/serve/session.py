@@ -88,7 +88,7 @@ import numpy as np
 from repro.core import quant
 from repro.core.cache import (BatchedMetricCache, CacheConfig,
                               insert_query_batched, probe_batched,
-                              query_batched)
+                              query_batched, validate_state)
 from repro.core.embedding import distance_from_scores
 from repro.core.shared import SharedTier
 from repro.kernels import dispatch as kdispatch
@@ -127,9 +127,11 @@ class WaveState:
     rec_np: np.ndarray               # (bucket,) record the (psi, r_a) claim
     backend_ok: np.ndarray           # (bucket,) rows the backend answered
     failed: np.ndarray               # (bucket,) empty-cache outage rows
+    stale: np.ndarray                # (bucket,) stale-while-error memo rows
     admitted_at: np.ndarray          # (wave,) perf_counter admission stamps
     t_start: float                   # wave (probe-phase) start stamp
     degraded: bool = False
+    shed: bool = False               # back end fenced: load-shed wave
     outage: Optional[BaseException] = None
     probe_s: float = 0.0
     backend_s: float = 0.0
@@ -146,7 +148,8 @@ class BatchedEngine:
                  backend: Optional[str] = None,
                  shared: Optional[SharedTier] = None,
                  cluster=None, prefetch_width: int = 0,
-                 telemetry: Optional[ServeTelemetry] = None):
+                 telemetry: Optional[ServeTelemetry] = None,
+                 validate_every: int = 0):
         self.router = router
         self.doc_embeddings = doc_embeddings
         self.n_sessions = n_sessions
@@ -194,6 +197,13 @@ class BatchedEngine:
         self._shared_lock = threading.Lock()
         self.telemetry = telemetry if telemetry is not None \
             else ServeTelemetry()
+        # validate_every: run the cache_ops.validate_state integrity check
+        # over the stacked caches every N waves (0 disables) and
+        # quarantine-reset any slot whose invariants are broken, instead
+        # of letting a corrupted slot poison (or crash) its next wave
+        self.validate_every = int(validate_every)
+        self.quarantined = 0
+        self._waves = 0
         self.turns: list[list[EngineTurn]] = [[] for _ in range(n_sessions)]
         # admission identity: (slot, generation) — bumped on start_session
         # so a recycled slot never inherits its predecessor's popularity
@@ -205,6 +215,25 @@ class BatchedEngine:
         self.turns[session] = []
         self._prefetched[session].clear()
         self._gen[session] += 1
+
+    def quarantine_invalid(self) -> np.ndarray:
+        """Integrity sweep: run ``cache_ops.validate_state`` over the
+        stacked session caches and QUARANTINE any slot whose invariants
+        are broken — the slot is reset to an empty cache (its next turn
+        is a compulsory miss) instead of the corruption poisoning or
+        crashing the wave.  Returns the reset slot indices.  Runs
+        automatically every ``validate_every`` waves when that knob is
+        set; callable directly after any suspected corruption."""
+        ok, _problems = validate_state(self.cache.state, self.cache.cfg,
+                                       n_corpus=len(self.doc_embeddings))
+        bad = np.nonzero(~np.asarray(ok))[0]
+        if bad.size:
+            self.cache.reset(bad.tolist())
+            for s in bad:
+                self._prefetched[int(s)].clear()
+            self.quarantined += int(bad.size)
+            self.telemetry.record_fault("quarantined_slots", int(bad.size))
+        return bad
 
     def _token(self, slot) -> tuple:
         """The slot's current admission identity for the shared tier."""
@@ -239,6 +268,9 @@ class BatchedEngine:
         wait for directly-invoked waves.
         """
         t_start = time.perf_counter()
+        self._waves += 1
+        if self.validate_every and self._waves % self.validate_every == 0:
+            self.quarantine_invalid()
         sids = np.asarray(sessions, np.int32)
         if np.unique(sids).size != sids.size:
             raise ValueError("one turn per session per wave")
@@ -297,6 +329,7 @@ class BatchedEngine:
             rad=rad, rec_np=rec_np,
             backend_ok=np.zeros((bucket,), bool),
             failed=np.zeros((bucket,), bool),
+            stale=np.zeros((bucket,), bool),
             admitted_at=admitted, t_start=t_start)
         ws.probe_s = time.perf_counter() - t_start
         return ws
@@ -360,11 +393,31 @@ class BatchedEngine:
         empty-cache miss rows failed; raises only when *every* real row in
         the wave is in that state (the same per-session failure a
         sequential engine loop raises).
+
+        **Degradation ladder.**  When the router reports ``backend_open``
+        (every shard's circuit breaker open) the wave is LOAD-SHED: the
+        search — and its whole deadline wait — is skipped, and miss rows
+        walk the same fallback ladder a failed search does: (1) a warm
+        cache answers from cached embeddings, (2) an empty-cache row is
+        served stale-while-error from the L2 memo (claims never
+        recorded), (3) only a row with neither fails.  A shed wave with
+        no tier-served rows runs probe -> query, the 2-launch contract
+        (jaxpr-guarded in tests).
         """
         t0 = time.perf_counter()
         need, bucket, wave = ws.need, ws.bucket, ws.wave
         try:
             if need.any():
+                if getattr(self.router, "backend_open", False):
+                    ws.shed = True
+                    self.telemetry.record_fault("shed_waves")
+                    self.telemetry.record_fault(
+                        "shed_turns", int(need[:wave].sum()))
+                    self._outage_fallback(ws, TimeoutError(
+                        "back end fenced: load-shed wave"))
+                    if ws.failed[:wave].all():
+                        raise ws.outage
+                    return ws
                 miss = np.nonzero(need)[0]
                 try:
                     ans, degraded = self.router.search(
@@ -403,17 +456,45 @@ class BatchedEngine:
                                     ws.new_emb[i], ws.new_ids[i])
                 except TimeoutError as e:
                     # total back-end failure: miss sessions fall back to
-                    # their caches; one with an empty cache fails alone,
-                    # like its sequential counterpart — not the whole wave
-                    ws.degraded = True
-                    ws.failed = np.logical_and(
-                        need, np.asarray(ws.sub.n_docs) == 0)
+                    # their caches (or the stale memo); one with neither
+                    # fails alone, like its sequential counterpart — not
+                    # the whole wave
+                    self._outage_fallback(ws, e)
                     if ws.failed[:wave].all():
                         raise
-                    ws.outage = e
             return ws
         finally:
             ws.backend_s = time.perf_counter() - t0
+
+    def _outage_fallback(self, ws: WaveState, e: BaseException) -> None:
+        """Walk the degradation ladder for a wave whose back-end search
+        was shed or failed entirely: warm-cache rows answer from their
+        caches (fill_wave's query path), empty-cache rows try the L2
+        memo *stale-while-error* (TTL and same-session gates waived;
+        served docs warm L1 but the claim is never recorded, so nothing
+        learns from stale data), and only rows with neither fail."""
+        ws.degraded = True
+        ws.outage = e
+        failed = np.logical_and(ws.need, np.asarray(ws.sub.n_docs) == 0)
+        if self.shared is not None and failed.any():
+            with self._shared_lock:
+                for i in np.nonzero(failed)[0]:
+                    m = self.shared.memo_lookup(
+                        self._token(ws.pad_sids[i]), ws.psi_np[i],
+                        allow_stale=True)
+                    if m is None:
+                        continue
+                    m_ids, _m_scores, _claim = m
+                    ws.reuse[i] = True
+                    ws.stale[i] = True
+                    ws.tier[i] = "l2_reuse"
+                    n = min(self.k_c, m_ids.shape[0])
+                    ws.new_ids[i, :n] = m_ids[:n]
+                    ws.new_emb[i, :n] = self.doc_embeddings[
+                        np.maximum(m_ids[:n], 0)]
+                    failed[i] = False        # rec_np stays False: no claim
+                    self.telemetry.record_fault("stale_served")
+        ws.failed = failed
 
     # -------------------------------------------------------- fill phase
     def fill_wave(self, ws: WaveState) -> list:
@@ -480,6 +561,7 @@ class BatchedEngine:
         out: list = []
         for i, s in enumerate(ws.sids):
             if ws.failed[i]:
+                self.telemetry.record_fault("failed_turns")
                 out.append(TimeoutError(
                     f"session {int(s)}: back-end down and cache empty"
                     f" ({ws.outage})"))
@@ -500,13 +582,18 @@ class BatchedEngine:
                 probe_s=ws.probe_s, backend_s=ws.backend_s,
                 insert_s=insert_s,
                 total_s=resolved - float(ws.admitted_at[i]), tier=row_tier)
+            # a degraded wave degrades its backend-tier rows AND any row
+            # served stale-while-error (fresh tier hits stay first-class)
             turn = EngineTurn(ids=row_ids[real], scores=row_scores[real],
                               hit=row_tier != "backend",
                               degraded=bool(ws.degraded
-                                            and row_tier == "backend"),
+                                            and (row_tier == "backend"
+                                                 or ws.stale[i])),
                               latency_s=spans.total_s, tier=row_tier,
                               queue_wait_s=spans.queue_wait_s, spans=spans,
                               prefetch_hits=n_pre)
+            if turn.degraded:
+                self.telemetry.record_fault("degraded_turns")
             self.telemetry.record_turn(spans)
             self.turns[int(s)].append(turn)
             out.append(turn)

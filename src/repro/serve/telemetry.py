@@ -195,10 +195,33 @@ class ServeTelemetry:
         self.wave_service = RingPercentiles(capacity)
         self.turns = 0
         self.waves = 0
+        # fault-domain counters (breaker transitions, shed / degraded /
+        # rejected-answer / stale-served / quarantined events) — written
+        # by the router and engine, read by serve_bench --chaos
+        self.faults: dict = {}
+        self.breaker_log: list = []      # (shard, old_state, new_state)
+        self.breaker_transitions = 0     # monotone (the log is bounded)
+        self._fault_lock = threading.Lock()
 
     # ------------------------------------------------------------ writers
     def record_arrival(self, t: Optional[float] = None) -> None:
         self.arrivals.observe(t)
+
+    def record_fault(self, kind: str, n: int = 1) -> None:
+        """Count one fault-domain event (``shed_waves``, ``shed_turns``,
+        ``degraded_turns``, ``rejected_answers``, ``stale_served``,
+        ``quarantined_slots``, ``failed_turns``, ...)."""
+        with self._fault_lock:
+            self.faults[kind] = self.faults.get(kind, 0) + n
+
+    def record_breaker(self, shard: int, old: str, new: str) -> None:
+        """Log one circuit-breaker transition (bounded log + counters)."""
+        with self._fault_lock:
+            self.breaker_transitions += 1
+            self.faults[f"breaker_{new}"] = \
+                self.faults.get(f"breaker_{new}", 0) + 1
+            if len(self.breaker_log) < 1024:
+                self.breaker_log.append((shard, old, new))
 
     def record_turn(self, spans: TurnSpans) -> None:
         self.turns += 1
@@ -218,6 +241,9 @@ class ServeTelemetry:
         """Nested summary: per-span and per-tier p50/p95/p99 (+ wave
         shape).  Latency values stay in seconds; presentation layers
         (serve_bench) convert to ms."""
+        with self._fault_lock:
+            faults = dict(self.faults)
+            transitions = self.breaker_transitions
         return {
             "turns": self.turns,
             "waves": self.waves,
@@ -227,4 +253,6 @@ class ServeTelemetry:
                       if len(r)},
             "wave_size": self.wave_sizes.summary(),
             "wave_service_s": self.wave_service.summary(),
+            "faults": faults,
+            "breaker_transitions": transitions,
         }

@@ -41,7 +41,8 @@ def test_knob_reference_covers_every_constructor(knobs_text):
     from repro.core.cluster import build_cluster_index
     from repro.core.metric_index import MetricIndex
     from repro.core.shared import SharedTier
-    from repro.serve.router import ShardedRouter
+    from repro.serve.faults import FaultPlan, FaultSpec, chaos_plan
+    from repro.serve.router import CircuitBreaker, ShardedRouter
     from repro.serve.scheduler import ContinuousScheduler
     from repro.serve.session import BatchedEngine, SessionManager
 
@@ -55,6 +56,10 @@ def test_knob_reference_covers_every_constructor(knobs_text):
         "SessionManager": _ctor_knobs(SessionManager),
         "ContinuousScheduler": _ctor_knobs(ContinuousScheduler),
         "ShardedRouter": _ctor_knobs(ShardedRouter),
+        "CircuitBreaker": _ctor_knobs(CircuitBreaker),
+        "FaultSpec": list(FaultSpec.__dataclass_fields__),
+        "FaultPlan": _ctor_knobs(FaultPlan),
+        "chaos_plan": _ctor_knobs(chaos_plan),
     }
     missing = [f"{owner}.{knob}"
                for owner, knobs in surfaces.items()

@@ -81,8 +81,8 @@ def test_router_merge_matches_exact(world, index):
     rng = np.random.default_rng(0)
     q = np.asarray(index.transform_queries(
         jnp.asarray(rng.standard_normal((3, world.cfg.dim)), jnp.float32)))
-    router = ShardedRouter(_make_shards(index, 4), deadline_s=10)
-    ans, degraded = router.search(q, 20)
+    with ShardedRouter(_make_shards(index, 4), deadline_s=10) as router:
+        ans, degraded = router.search(q, 20)
     assert not degraded
     exact = index.search(jnp.asarray(q), 20)
     np.testing.assert_array_equal(ans.ids, np.asarray(exact.ids))
@@ -94,12 +94,12 @@ def test_router_hedges_stragglers_and_degrades(world, index):
     q = np.asarray(index.transform_queries(
         jnp.asarray(rng.standard_normal((2, world.cfg.dim)), jnp.float32)))
     # shard 1 is a permanent straggler; shard 2 hard-fails
-    router = ShardedRouter(_make_shards(index, 4, delays={1: 5.0}, fail={2}),
-                           deadline_s=0.5, hedge_after_s=0.1)
-    ans, degraded = router.search(q, 10)
-    assert degraded
-    assert router.stats.hedges >= 1 and router.stats.failures >= 1
-    assert ans.ids.shape == (2, 10)      # merged from surviving shards
+    with ShardedRouter(_make_shards(index, 4, delays={1: 5.0}, fail={2}),
+                       deadline_s=0.5, hedge_after_s=0.1) as router:
+        ans, degraded = router.search(q, 10)
+        assert degraded
+        assert router.stats.hedges >= 1 and router.stats.failures >= 1
+        assert ans.ids.shape == (2, 10)  # merged from surviving shards
 
 
 def test_router_hedge_winner_merged_once(world, index):
@@ -123,26 +123,27 @@ def test_router_hedge_winner_merged_once(world, index):
         return shard
 
     shards = [counting(0), slow_first, counting(2)]
-    router = ShardedRouter(shards, deadline_s=5.0, hedge_after_s=0.05)
-    rng = np.random.default_rng(4)
-    q = np.asarray(index.transform_queries(
-        jnp.asarray(rng.standard_normal((2, world.cfg.dim)), jnp.float32)))
-    t0 = time.monotonic()
-    ans, degraded = router.search(q, 12)
-    elapsed = time.monotonic() - t0
-    assert not degraded and router.stats.hedges == 1
-    # the loser (still sleeping 2s) must not hold the search open
-    assert elapsed < 1.0, elapsed
-    # merged exactly once per shard: ids match the exact search, no repeats
-    exact = index.search(jnp.asarray(q), 12)
-    np.testing.assert_array_equal(ans.ids, np.asarray(exact.ids))
-    for row in ans.ids:
-        assert len(set(row.tolist())) == len(row)
-    # the in-flight duplicate was detected + drained; router stays usable
-    assert calls[1] == 2 and router.stats.duplicates >= 1
-    ans2, degraded2 = router.search(q, 12)
-    assert not degraded2
-    np.testing.assert_array_equal(ans2.ids, np.asarray(exact.ids))
+    with ShardedRouter(shards, deadline_s=5.0, hedge_after_s=0.05) as router:
+        rng = np.random.default_rng(4)
+        q = np.asarray(index.transform_queries(
+            jnp.asarray(rng.standard_normal((2, world.cfg.dim)),
+                        jnp.float32)))
+        t0 = time.monotonic()
+        ans, degraded = router.search(q, 12)
+        elapsed = time.monotonic() - t0
+        assert not degraded and router.stats.hedges == 1
+        # the loser (still sleeping 2s) must not hold the search open
+        assert elapsed < 1.0, elapsed
+        # merged once per shard: ids match the exact search, no repeats
+        exact = index.search(jnp.asarray(q), 12)
+        np.testing.assert_array_equal(ans.ids, np.asarray(exact.ids))
+        for row in ans.ids:
+            assert len(set(row.tolist())) == len(row)
+        # in-flight duplicate was detected + drained; router stays usable
+        assert calls[1] == 2 and router.stats.duplicates >= 1
+        ans2, degraded2 = router.search(q, 12)
+        assert not degraded2
+        np.testing.assert_array_equal(ans2.ids, np.asarray(exact.ids))
 
 
 def test_degraded_turn_does_not_poison_cache(world, index):
@@ -221,17 +222,17 @@ def test_engine_cache_survives_backend_outage(world, index):
     from repro.serve.engine import ConversationalEngine
     from repro.serve.router import ShardedRouter
     shards = _make_shards(index, 2)
-    router = ShardedRouter(shards, deadline_s=5)
-    eng = ConversationalEngine(router, np.asarray(index.doc_emb),
-                               dim=index.dim, k=5, k_c=100)
-    eng.start_session()
-    conv = world.conversations[0]
-    qt = index.transform_queries(jnp.asarray(conv.queries, jnp.float32))
-    eng.answer(np.asarray(qt[0]))                    # warm the cache
-    # back-end goes down entirely: the cache must still answer
-    router.shards = _make_shards(index, 2, fail={0, 1})
-    turn = eng.answer(np.asarray(qt[1]))
-    assert turn.ids.shape == (5,) and (turn.ids >= 0).all()
+    with ShardedRouter(shards, deadline_s=5) as router:
+        eng = ConversationalEngine(router, np.asarray(index.doc_emb),
+                                   dim=index.dim, k=5, k_c=100)
+        eng.start_session()
+        conv = world.conversations[0]
+        qt = index.transform_queries(jnp.asarray(conv.queries, jnp.float32))
+        eng.answer(np.asarray(qt[0]))                # warm the cache
+        # back-end goes down entirely: the cache must still answer
+        router.shards = _make_shards(index, 2, fail={0, 1})
+        turn = eng.answer(np.asarray(qt[1]))
+        assert turn.ids.shape == (5,) and (turn.ids >= 0).all()
 
 
 # --------------------------------------------------------- checkpointing
@@ -350,13 +351,13 @@ def test_engine_trims_sentinel_rows_when_cache_short():
     from repro.serve.router import ShardedRouter
     rng = np.random.default_rng(0)
     tiny = MetricIndex(jnp.asarray(rng.standard_normal((3, 16)), jnp.float32))
-    router = ShardedRouter(_make_shards(tiny, 1), deadline_s=10)
-    eng = ConversationalEngine(router, np.asarray(tiny.doc_emb),
-                               dim=tiny.dim, k=10, k_c=3)
-    eng.start_session()
-    q = tiny.transform_queries(
-        jnp.asarray(rng.standard_normal(16), jnp.float32))
-    turn = eng.answer(q)
+    with ShardedRouter(_make_shards(tiny, 1), deadline_s=10) as router:
+        eng = ConversationalEngine(router, np.asarray(tiny.doc_emb),
+                                   dim=tiny.dim, k=10, k_c=3)
+        eng.start_session()
+        q = tiny.transform_queries(
+            jnp.asarray(rng.standard_normal(16), jnp.float32))
+        turn = eng.answer(q)
     assert turn.ids.shape == (3,) and turn.scores.shape == (3,)
     assert (turn.ids >= 0).all()
     assert np.isfinite(turn.scores).all()
